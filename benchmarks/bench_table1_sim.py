@@ -1,0 +1,95 @@
+"""Paper Table I: empirical hit probabilities of the shared-object cache.
+
+Simulates the J=3 system (Zipf 0.75/0.5/1.0, unit objects, B=1000,
+b in {8,64}^3) under the IRM and reports the hit probability of objects
+at ranks 1/10/100/1000 per proxy, next to the paper's values.
+
+Estimator: exact residence-time occupancy (PASTA) instead of realized-hit
+counting — variance-free given the trajectory, which is what lets the
+default (1.5M-request) run resolve the 1e-3 tail entries the paper needed
+"sufficiently long" simulations for.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import GetResult, SharedLRUCache, rate_matrix, sample_trace
+from repro.core.metrics import OccupancyRecorder
+
+from .common import (
+    ALPHAS,
+    B_GRID,
+    B_PHYSICAL,
+    N_OBJECTS,
+    RANKS,
+    TABLE1,
+    Timer,
+    csv_row,
+    mean_rel_err,
+    save_artifact,
+    table1_requests,
+)
+
+
+def simulate_combo(b, n_requests: int, seed: int = 7):
+    lam = rate_matrix(N_OBJECTS, list(ALPHAS))
+    trace = sample_trace(lam, n_requests, seed=seed)
+    cache = SharedLRUCache(list(b), physical_capacity=B_PHYSICAL)
+    rec = OccupancyRecorder(len(b), N_OBJECTS).attach_to(cache)
+    warmup = max(n_requests // 15, 10 * sum(b))
+    P, O = trace.proxies.tolist(), trace.objects.tolist()
+    for idx in range(n_requests):
+        rec.now = idx
+        if idx == warmup:
+            rec.reset_window()
+        i, k = P[idx], O[idx]
+        if cache.get(i, k).result is GetResult.MISS:
+            cache.set(i, k, 1)
+    rec.now = n_requests
+    rec.finalize()
+    cache.check_invariants()
+    return rec.occupancy()
+
+
+def main() -> dict:
+    n_requests = table1_requests()
+    rows, all_pred, all_ref = {}, [], []
+    total_us = 0.0
+    for b in B_GRID:
+        with Timer() as tm:
+            h = simulate_combo(b, n_requests)
+        total_us += tm.seconds * 1e6
+        rows[str(b)] = {}
+        for i in range(3):
+            pred = [float(h[i, k - 1]) for k in RANKS]
+            ref = TABLE1[b][i]
+            rows[str(b)][i] = {"sim": pred, "paper": ref}
+            all_pred += pred
+            all_ref += ref
+    err = mean_rel_err(all_pred, all_ref)
+    payload = {
+        "n_requests_per_combo": n_requests,
+        "rows": rows,
+        "mean_rel_err_vs_paper": err,
+    }
+    save_artifact("table1_sim", payload)
+
+    print(f"# Table I reproduction (simulated, {n_requests} req/combo)")
+    print(f"# i  b0  b1  b2   h_1      h_10     h_100    h_1000   (paper in parens)")
+    for b in B_GRID:
+        for i in range(3):
+            pred = rows[str(b)][i]["sim"]
+            ref = rows[str(b)][i]["paper"]
+            cells = "  ".join(f"{p:.4f}({r:.4f})" for p, r in zip(pred, ref))
+            print(f"  {i}  {b[0]:3d} {b[1]:3d} {b[2]:3d}  {cells}")
+    csv_row(
+        "table1_sim",
+        total_us / (len(B_GRID) * n_requests),
+        f"mean_rel_err={err:.4f}",
+    )
+    return payload
+
+
+if __name__ == "__main__":
+    main()

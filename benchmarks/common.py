@@ -1,0 +1,141 @@
+"""Shared configuration + helpers for the paper-reproduction benchmarks.
+
+Every benchmark has two fidelity modes:
+
+* default: reduced sizes so ``python -m benchmarks.run`` finishes in a few
+  minutes on one CPU core;
+* ``REPRO_FULL=1``: the paper's full experiment scale.
+
+All benchmarks write machine-readable artifacts to
+``benchmarks/artifacts/*.json`` (consumed by EXPERIMENTS.md tooling) and
+print ``name,us_per_call,derived`` CSV rows per the harness contract.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from pathlib import Path
+from typing import Dict, Iterable, List, Sequence, Tuple
+
+import numpy as np
+
+ARTIFACTS = Path(__file__).resolve().parent / "artifacts"
+ARTIFACTS.mkdir(exist_ok=True)
+
+FULL = os.environ.get("REPRO_FULL", "0") not in ("0", "", "false")
+
+# ---------------------------------------------------------------------------
+# The paper's Section V setup (Tables I-III): J=3 LRU-lists over a B=1000
+# physical cache, unit-length objects, Zipf alphas (0.75, 0.5, 1.0),
+# allocations b_i in {8, 64}. Catalogue size N is not stated in the paper;
+# N=1000 was calibrated against Table II (see DESIGN.md §7).
+# ---------------------------------------------------------------------------
+N_OBJECTS = 1000
+B_PHYSICAL = 1000
+ALPHAS = (0.75, 0.5, 1.0)
+B_GRID: List[Tuple[int, int, int]] = [
+    (8, 8, 8), (8, 8, 64), (8, 64, 8), (8, 64, 64),
+    (64, 8, 8), (64, 8, 64), (64, 64, 8), (64, 64, 64),
+]
+RANKS = (1, 10, 100, 1000)
+
+# Paper Table I (empirical, shared): {b_combo: {proxy: [h at RANKS]}}
+TABLE1 = {
+    (8, 8, 8):    {0: [.368, .0758, .0142, .00226], 1: [.126, .0412, .0130, .00423], 2: [.708, .1142, .0121, .00116]},
+    (8, 8, 64):   {0: [.407, .0877, .0158, .00273], 1: [.136, .0448, .0138, .00438], 2: [1.000, .7560, .1292, .01411]},
+    (8, 64, 8):   {0: [.389, .0823, .0149, .00271], 1: [.676, .2991, .1069, .03422], 2: [.745, .1281, .0130, .00146]},
+    (8, 64, 64):  {0: [.422, .0924, .0167, .0028],  1: [.699, .3205, .1131, .03574], 2: [1.000, .7882, .1419, .01628]},
+    (64, 8, 8):   {0: [.983, .5138, .1170, .02303], 1: [.136, .0438, .0136, .00425], 2: [.771, .1383, .0146, .00168]},
+    (64, 8, 64):  {0: [.989, .5568, .1325, .02660], 1: [.143, .0476, .0146, .00458], 2: [1.000, .7968, .1419, .01435]},
+    (64, 64, 8):  {0: [.986, .5387, .1262, .02366], 1: [.699, .3159, .1129, .03639], 2: [.793, .1502, .0147, .00153]},
+    (64, 64, 64): {0: [.992, .5763, .1445, .02724], 1: [.726, .3318, .1205, .03916], 2: [1.000, .8196, .1597, .01416]},
+}
+
+# Paper Table II (working-set approximation with L1/eq.(5), same system).
+TABLE2 = {
+    (8, 8, 8):    {0: [.365, .0776, .0143, .00255], 1: [.126, .0416, .0133, .00424], 2: [.694, .1116, .0118, .00118]},
+    (8, 8, 64):   {0: [.401, .0872, .0161, .00288], 1: [.134, .0446, .0143, .00455], 2: [1.000, .7556, .1314, .01399]},
+    (8, 64, 8):   {0: [.386, .0832, .0153, .00274], 1: [.678, .3011, .1071, .03519], 2: [.734, .1242, .0132, .00133]},
+    (8, 64, 64):  {0: [.421, .0926, .0171, .00307], 1: [.704, .3197, .1147, .03779], 2: [1.000, .7861, .1429, .01530]},
+    (64, 8, 8):   {0: [.984, .5213, .1228, .02302], 1: [.133, .0442, .0142, .00451], 2: [.756, .1314, .0140, .00141]},
+    (64, 8, 64):  {0: [.990, .5622, .1366, .02579], 1: [.142, .0472, .0152, .00482], 2: [1.000, .7995, .1484, .01594]},
+    (64, 64, 8):  {0: [.988, .5455, .1308, .02463], 1: [.701, .3171, .1136, .03742], 2: [.787, .1434, .0154, .00155]},
+    (64, 64, 64): {0: [.993, .5846, .1446, .02740], 1: [.725, .3353, .1212, .04002], 2: [1.000, .8249, .1599, .01727]},
+}
+
+# Paper Table III (not-shared baseline at b=(64,64,8)).
+TABLE3 = {
+    (64, 64, 8): {0: [.9800, .5084, .11760, .02259], 1: [.6683, .2944, .10437, .03503], 2: [.7005, .1123, .01176, .00113]},
+}
+
+# Section VI-C workload (Fig. 2 / Table V): J=9 proxies, Zipf
+# 0.5+0.5(i-1), N=1e6 items of 100 kB, B=3 GB, b = 3x100MB, 3x200MB,
+# 3x700MB. We work in 100 kB units -> item length 1, allocations below.
+FIG2_ALPHAS = tuple(0.5 + 0.5 * i for i in range(9))
+FIG2_B_UNITS = (1000, 1000, 1000, 2000, 2000, 2000, 7000, 7000, 7000)
+FIG2_N = 1_000_000
+FIG2_REQUESTS = 3_000_000
+
+
+def fig2_scale() -> Tuple[Tuple[int, ...], int, int, int]:
+    """(allocations, N, B, n_requests) for the Section VI-C workload,
+    reduced 10x by default (same shape, same b/N ratio regime)."""
+    if FULL:
+        b = FIG2_B_UNITS
+        return b, FIG2_N, sum(b), FIG2_REQUESTS
+    b = tuple(x // 10 for x in FIG2_B_UNITS)
+    return b, FIG2_N // 10, sum(b), FIG2_REQUESTS // 10
+
+
+def table1_requests() -> int:
+    return 10_000_000 if FULL else 1_500_000
+
+
+def save_artifact(name: str, payload: dict) -> Path:
+    path = ARTIFACTS / f"{name}.json"
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, default=_json_default)
+    return path
+
+
+def load_artifact(name: str) -> dict:
+    with open(ARTIFACTS / f"{name}.json") as f:
+        return json.load(f)
+
+
+def _json_default(obj):
+    if isinstance(obj, (np.integer,)):
+        return int(obj)
+    if isinstance(obj, (np.floating,)):
+        return float(obj)
+    if isinstance(obj, (np.bool_,)):
+        return bool(obj)
+    if isinstance(obj, np.ndarray):
+        return obj.tolist()
+    raise TypeError(f"not JSON serializable: {type(obj)}")
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> None:
+    """The harness contract: ``name,us_per_call,derived``."""
+    print(f"{name},{us_per_call:.3f},{derived}")
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        self.seconds = time.perf_counter() - self.t0
+        return False
+
+
+def rel_err(pred: float, ref: float, floor: float = 1e-9) -> float:
+    return abs(pred - ref) / max(abs(ref), floor)
+
+
+def mean_rel_err(pred: Iterable[float], ref: Iterable[float]) -> float:
+    errs = [rel_err(p, r) for p, r in zip(pred, ref)]
+    return float(np.mean(errs)) if errs else float("nan")

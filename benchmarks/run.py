@@ -1,0 +1,54 @@
+"""Benchmark harness: one module per paper table/figure + the roofline
+report. Prints ``name,us_per_call,derived`` CSV rows (one per experiment)
+and writes JSON artifacts under ``benchmarks/artifacts/``.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.run            # reduced sizes
+    REPRO_FULL=1 PYTHONPATH=src python -m benchmarks.run   # paper scale
+    PYTHONPATH=src python -m benchmarks.run table2_ws rre  # subset
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+BENCHES = [
+    ("table2_ws", "benchmarks.bench_table2_ws"),          # deterministic, fast
+    ("table1_sim", "benchmarks.bench_table1_sim"),
+    ("table3_noshare", "benchmarks.bench_table3_noshare"),
+    ("j2_bounds", "benchmarks.bench_j2_bounds"),
+    ("fig2_ripple", "benchmarks.bench_fig2_ripple"),      # also covers Table V
+    ("rre", "benchmarks.bench_rre"),
+    ("slru", "benchmarks.bench_slru"),
+    ("admission", "benchmarks.bench_admission"),
+    ("serving", "benchmarks.bench_serving"),
+    ("roofline", "benchmarks.bench_roofline"),
+]
+
+
+def main() -> None:
+    import importlib
+
+    selected = set(sys.argv[1:])
+    failures = []
+    for name, module in BENCHES:
+        if selected and name not in selected:
+            continue
+        print(f"\n===== {name} =====")
+        try:
+            mod = importlib.import_module(module)
+            mod.main()
+        except Exception as e:  # keep the harness going; report at the end
+            failures.append((name, e))
+            traceback.print_exc()
+            print(f"{name},nan,FAILED:{type(e).__name__}")
+    if failures:
+        print(f"\n{len(failures)} benchmark(s) failed: "
+              + ", ".join(n for n, _ in failures))
+        sys.exit(1)
+    print("\nall benchmarks passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""Multi-tenant serving with object sharing, end to end.
+
+    PYTHONPATH=src python examples/serve_multitenant.py
+
+Three tenants share a paged KV pool. Tenants A and B serve overlapping
+workloads (common system prompts / RAG chunks); tenant C is disjoint.
+The engine admits tenants with the working-set controller, shares prefix
+blocks per the paper's LRU-list apportionment, and decodes with a real
+(reduced) model. Finally, the shared-prefix Pallas kernel is
+demonstrated on a grouped batch against its jnp oracle.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.kernels import ops, ref
+from repro.models import make_model
+from repro.serving import EngineConfig, Request, ServingEngine, TenantSpec
+
+rng = np.random.default_rng(0)
+
+print("== build engine (qwen3-1.7b reduced, live decode) ==")
+cfg = get_config("qwen3-1.7b").reduced()
+model = make_model(cfg, compute_dtype=jnp.float32)
+params = model.init(jax.random.PRNGKey(0))
+
+ecfg = EngineConfig(block_tokens=8, pool_blocks=512)
+from repro.cacheblocks import layout_for
+
+layout = layout_for(cfg, block_tokens=8)
+pool_bytes = ecfg.pool_blocks * layout.bytes_per_block
+engine = ServingEngine(
+    cfg,
+    tenants=[  # SLAs sum to 90% of B; sharing frees real headroom beyond
+        TenantSpec("tenantA", b_star_bytes=0.35 * pool_bytes),
+        TenantSpec("tenantB", b_star_bytes=0.35 * pool_bytes),
+        TenantSpec("tenantC", b_star_bytes=0.20 * pool_bytes),
+    ],
+    engine_cfg=ecfg,
+    model=model,
+    params=params,
+)
+
+# shared system prompts: A and B reuse the same 48-token prefixes
+SYSTEM_PROMPTS = [rng.integers(0, cfg.vocab_size, 48) for _ in range(4)]
+print("\n== request stream ==")
+for step in range(40):
+    tenant = rng.choice(["tenantA", "tenantB", "tenantC"], p=[0.4, 0.4, 0.2])
+    if tenant in ("tenantA", "tenantB"):
+        prefix = SYSTEM_PROMPTS[rng.integers(0, len(SYSTEM_PROMPTS))]
+    else:
+        prefix = rng.integers(0, cfg.vocab_size, 48)  # disjoint workload
+    user = rng.integers(0, cfg.vocab_size, 16)
+    tokens = np.concatenate([prefix, user])
+    res = engine.submit(tenant, tokens, max_new_tokens=4)
+    if step % 8 == 0:
+        print(f"  step {step:3d} {tenant}: cached {res.cached_tokens}/"
+              f"{len(tokens)} tokens, ripple evictions {res.ripple_evictions}, "
+              f"output {res.output[0][:4] if res.output is not None else None}")
+
+s = engine.stats()
+print("\n== engine stats ==")
+for k, v in s.items():
+    print(f"  {k}: {v:.4g}" if isinstance(v, float) else f"  {k}: {v}")
+
+print("\n== shared-prefix kernel (object sharing on the MXU) ==")
+P_, M, H, D, S = 2, 4, cfg.n_heads, cfg.head_dim, 64
+kq = jax.random.split(jax.random.PRNGKey(1), 4)
+q = jax.random.normal(kq[0], (P_, M, H, D))
+pk = jax.random.normal(kq[1], (P_, S, cfg.n_kv_heads, D))
+pv = jax.random.normal(kq[2], (P_, S, cfg.n_kv_heads, D))
+plens = jnp.array([S, S // 2], jnp.int32)
+out, lse = ops.shared_prefix_attention(q, pk, pv, plens, interpret=True)
+want, want_lse = ref.reference_shared_prefix_attention(q, pk, pv, plens)
+err = float(jnp.max(jnp.abs(out.astype(jnp.float32) - want)))
+print(f"  grouped prefix attention: {P_} shared objects x {M} requests, "
+      f"kernel-vs-oracle err {err:.2e}")
+print("  -> the physical prefix KV is read ONCE per group: the compute "
+      "analogue of the paper's l_n/|P(n)| cost sharing")

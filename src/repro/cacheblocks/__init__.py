@@ -1,0 +1,6 @@
+"""Device-side physical cache: paged KV pool + tenant-facing prefix
+cache backed by the paper's object-sharing LRU manager."""
+
+from .kv_layout import KVLayout, layout_for  # noqa: F401
+from .block_pool import BlockPool  # noqa: F401
+from .prefix_cache import SharedPrefixCache, PrefixLookup  # noqa: F401

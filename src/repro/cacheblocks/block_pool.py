@@ -1,0 +1,88 @@
+"""Physical KV block pool — the device side of the paper's "physical
+cache".
+
+The pool owns ``n_blocks`` fixed-size pages per layer in HBM (the single
+"slabclass" of the paper's evaluation setup); the host keeps the free
+list and the block tables. The object-sharing LRU manager
+(``prefix_cache.SharedPrefixCache``) decides residency; the Pallas
+``paged_attention`` kernel reads pages through block tables at decode.
+
+On this CPU container the pool is exercised at reduced scale by the
+serving tests/examples; the layout (pages-major, kv-head-major) matches
+what the paged kernel consumes.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class BlockPool:
+    def __init__(
+        self,
+        n_blocks: int,
+        block_tokens: int,
+        n_kv_heads: int,
+        head_dim: int,
+        n_layers: int,
+        dtype=jnp.bfloat16,
+    ) -> None:
+        self.n_blocks = n_blocks
+        self.block_tokens = block_tokens
+        self.n_kv_heads = n_kv_heads
+        self.head_dim = head_dim
+        self.n_layers = n_layers
+        # (L, KV, n_blocks, block_tokens, head_dim): per layer, the paged
+        # kernel's (KV, P, page, D) pool layout.
+        self.k_pages = jnp.zeros(
+            (n_layers, n_kv_heads, n_blocks, block_tokens, head_dim), dtype
+        )
+        self.v_pages = jnp.zeros_like(self.k_pages)
+        self._free: List[int] = list(range(n_blocks))
+        self.n_alloc_calls = 0
+        self.n_free_calls = 0
+        self.high_water = 0
+
+    # -- host-side accounting -------------------------------------------
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_blocks(self) -> int:
+        return self.n_blocks - len(self._free)
+
+    def alloc(self, n: int) -> List[int]:
+        if n > len(self._free):
+            raise MemoryError(
+                f"pool exhausted: want {n}, free {len(self._free)}"
+            )
+        self.n_alloc_calls += 1
+        out = [self._free.pop() for _ in range(n)]
+        self.high_water = max(self.high_water, self.used_blocks)
+        return out
+
+    def free(self, ids: Sequence[int]) -> None:
+        self.n_free_calls += 1
+        self._free.extend(int(i) for i in ids)
+        assert len(self._free) <= self.n_blocks
+
+    # -- device-side writes (jit'd scatter per layer) ---------------------
+    def write_block(
+        self, layer: int, block_id: int, k: jnp.ndarray, v: jnp.ndarray
+    ) -> None:
+        """k, v: (block_tokens, KV, head_dim)."""
+        self.k_pages = self.k_pages.at[layer, :, block_id].set(
+            jnp.moveaxis(k, 1, 0)
+        )
+        self.v_pages = self.v_pages.at[layer, :, block_id].set(
+            jnp.moveaxis(v, 1, 0)
+        )
+
+    def layer_pool(self, layer: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """(KV, P, page, D) views consumed by ops.paged_attention."""
+        return self.k_pages[layer], self.v_pages[layer]

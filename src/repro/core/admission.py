@@ -1,0 +1,175 @@
+"""Admission control and overbooking with shared objects (paper §IV-C).
+
+The operator sells each tenant an SLA allocation ``b_i*`` = the memory it
+would need *without* sharing to reach its hit probabilities. Under object
+sharing the same hit probabilities are reached with a smaller *virtual*
+allocation ``b_i <= b_i*`` (eq. (10)), so the operator can overbook:
+``sum b_i <= B`` (eq. (11)) while ``sum b_i* > B`` (eq. (12)).
+
+Key identity used throughout: with ``h = 1 - e^{-lambda t}`` the map
+``t_i -> h_{i,.}`` is increasing, so "hit probabilities under sharing
+match those of a dedicated b_i* cache" is exactly ``t_i = t_i*`` where
+``t_i*`` solves the *unshared* working-set equation at ``b_i*``. The
+minimal virtual allocation is then
+
+    b_i = sum_k h*_{i,k} * L_{i,k}(h*)        (evaluate eq. (4) at t*)
+
+A new tenant J+1 is conservatively admitted iff
+``b*_{J+1} <= B - sum_i b_i`` (eq. (13)); after admission its popularity
+estimates are folded in and virtual allocations are recomputed.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .irm import PopularityEstimator
+from .workingset import (
+    WorkingSetSolution,
+    attribution_matrix,
+    hit_probabilities,
+    solve_workingset,
+    solve_workingset_unshared,
+)
+import jax.numpy as jnp
+
+
+def virtual_allocations(
+    lam: np.ndarray,
+    lengths: np.ndarray,
+    b_star: np.ndarray,
+    *,
+    attribution: str = "L1",
+    n_quad: Optional[int] = None,
+) -> Tuple[np.ndarray, WorkingSetSolution]:
+    """Minimal virtual allocations ``b`` matching the SLA targets ``b*``.
+
+    Solves the unshared system at ``b*`` for ``t*``, then evaluates the
+    shared attribution at ``h* = h(t*)`` (eq. (10)'s minimal ``b``).
+    Returns ``(b, unshared_solution)``.
+    """
+    lam = np.asarray(lam, dtype=np.float64)
+    lengths = np.asarray(lengths, dtype=np.float64)
+    b_star = np.asarray(b_star, dtype=np.float64)
+    sol_star = solve_workingset_unshared(lam, lengths, b_star)
+    J = lam.shape[0]
+    if n_quad is None:
+        n_quad = max(8, (J + 1) // 2 + 1)
+    h_star = jnp.asarray(sol_star.h)
+    L = np.asarray(
+        attribution_matrix(h_star, jnp.asarray(lengths), attribution, n_quad)
+    )
+    b = (sol_star.h * L).sum(axis=1)
+    return b, sol_star
+
+
+@dataclass
+class Tenant:
+    """One proxy/tenant tracked by the controller."""
+
+    name: str
+    b_star: float                 # SLA allocation (unshared-equivalent)
+    b_virtual: float              # current virtual allocation (<= b_star)
+    lam: Optional[np.ndarray] = None  # estimated request rates (N,)
+
+
+@dataclass
+class AdmissionDecision:
+    admitted: bool
+    reason: str
+    b_star: float
+    headroom_before: float
+    headroom_after: float
+
+
+class AdmissionController:
+    """Operator-side controller implementing Section IV-C end to end.
+
+    * ``admit()``: conservative test (eq. (13)) against current virtual
+      allocations; on success the tenant starts with ``b = b*``.
+    * ``refresh()``: once popularities are estimated, recompute all
+      virtual allocations via the working-set approximation, shrinking
+      ``b`` toward the minimal SLA-preserving value and freeing headroom.
+    * ``depart()``: remove a tenant and refresh (footnote 1 of the paper:
+      allocations must be recomputed on departures too).
+    """
+
+    def __init__(
+        self,
+        physical_capacity: float,
+        lengths: np.ndarray,
+        *,
+        attribution: str = "L1",
+        safety_margin: float = 0.0,
+    ) -> None:
+        self.B = float(physical_capacity)
+        self.lengths = np.asarray(lengths, dtype=np.float64)
+        self.attribution = attribution
+        self.safety_margin = float(safety_margin)
+        self.tenants: Dict[str, Tenant] = {}
+
+    # -- bookkeeping ---------------------------------------------------
+    @property
+    def committed(self) -> float:
+        """sum of current virtual allocations (eq. (11) left-hand side)."""
+        return sum(t.b_virtual for t in self.tenants.values())
+
+    @property
+    def committed_sla(self) -> float:
+        """sum of SLA allocations — exceeding B means we are overbooked
+        (eq. (12)), which is the point."""
+        return sum(t.b_star for t in self.tenants.values())
+
+    def headroom(self) -> float:
+        return self.B * (1.0 - self.safety_margin) - self.committed
+
+    @property
+    def overbooked(self) -> bool:
+        return self.committed_sla > self.B
+
+    # -- operations ------------------------------------------------------
+    def admit(self, name: str, b_star: float) -> AdmissionDecision:
+        """Conservative admission per eq. (13)."""
+        if name in self.tenants:
+            raise ValueError(f"tenant {name!r} already admitted")
+        before = self.headroom()
+        if b_star <= before:
+            self.tenants[name] = Tenant(name, b_star, b_virtual=b_star)
+            return AdmissionDecision(
+                True, "eq13-conservative", b_star, before, self.headroom()
+            )
+        return AdmissionDecision(
+            False,
+            f"b*={b_star:.1f} exceeds headroom {before:.1f} (eq. (13))",
+            b_star,
+            before,
+            before,
+        )
+
+    def observe(self, name: str, lam: np.ndarray) -> None:
+        """Attach estimated popularities (per-request rates) to a tenant."""
+        self.tenants[name].lam = np.asarray(lam, dtype=np.float64)
+
+    def depart(self, name: str) -> None:
+        del self.tenants[name]
+
+    def refresh(self) -> Dict[str, float]:
+        """Recompute virtual allocations from current popularity estimates
+        (tenants without estimates keep b = b*). Returns the new b map."""
+        est = [t for t in self.tenants.values() if t.lam is not None]
+        if len(est) >= 2:
+            lam = np.stack([t.lam for t in est])
+            b_star = np.array([t.b_star for t in est])
+            b_new, _ = virtual_allocations(
+                lam, self.lengths, b_star, attribution=self.attribution
+            )
+            for t, b in zip(est, b_new):
+                # b is minimal; never grow beyond the SLA value.
+                t.b_virtual = float(min(b, t.b_star))
+        return {t.name: t.b_virtual for t in self.tenants.values()}
+
+    def allocations(self) -> Dict[str, float]:
+        return {t.name: t.b_virtual for t in self.tenants.values()}

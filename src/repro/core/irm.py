@@ -1,0 +1,116 @@
+"""Independent Reference Model (IRM) request streams with Zipf popularity.
+
+The paper's Section V experiments draw per-proxy requests under the IRM:
+proxy ``i`` requests object ``k`` with probability ``lambda_{i,k}``
+proportional to ``1 / k^{alpha_i}`` (each proxy has its own Zipf exponent
+but the *same* object ranking — that is what makes objects shareable).
+
+Trace generation is vectorized numpy (inverse-CDF sampling); popularity
+estimation is a simple empirical-rate counter used by the admission
+controller (Section IV-C: "once admitted, the object popularities can be
+estimated and fed into our working-set approximation").
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterator, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+def zipf_popularities(n_objects: int, alpha: float) -> np.ndarray:
+    """Normalized Zipf pmf over ranks 1..N: p_k ∝ 1/k^alpha, sum = 1."""
+    ranks = np.arange(1, n_objects + 1, dtype=np.float64)
+    w = ranks ** (-float(alpha))
+    return w / w.sum()
+
+
+def rate_matrix(
+    n_objects: int,
+    alphas: Sequence[float],
+    proxy_rates: Optional[Sequence[float]] = None,
+) -> np.ndarray:
+    """``lambda[i, k]``: request rate of object k by proxy i.
+
+    ``proxy_rates`` scales each proxy's total rate (default: 1 each, the
+    paper's setting — rates normalized per proxy).
+    """
+    J = len(alphas)
+    if proxy_rates is None:
+        proxy_rates = [1.0] * J
+    lam = np.stack([zipf_popularities(n_objects, a) for a in alphas])
+    return lam * np.asarray(proxy_rates, dtype=np.float64)[:, None]
+
+
+@dataclass
+class IRMTrace:
+    """A merged multi-proxy IRM trace: arrays of (proxy, object) pairs."""
+
+    proxies: np.ndarray  # (M,) int32
+    objects: np.ndarray  # (M,) int64, 0-based object ids (rank-1 == id 0)
+
+    def __len__(self) -> int:
+        return len(self.proxies)
+
+    def __iter__(self) -> Iterator[Tuple[int, int]]:
+        return zip(self.proxies.tolist(), self.objects.tolist())
+
+
+def sample_trace(
+    lam: np.ndarray,
+    n_requests: int,
+    seed: int = 0,
+) -> IRMTrace:
+    """Sample a merged IRM trace of ``n_requests`` from rate matrix ``lam``.
+
+    Poisson-merged: each request comes from proxy i w.p. proportional to
+    its total rate, then the object is drawn from proxy i's popularity.
+    Inverse-CDF sampling keeps this O(M log N) and vectorized.
+    """
+    lam = np.asarray(lam, dtype=np.float64)
+    J, N = lam.shape
+    rng = np.random.default_rng(seed)
+    totals = lam.sum(axis=1)
+    proxies = rng.choice(J, size=n_requests, p=totals / totals.sum()).astype(
+        np.int32
+    )
+    objects = np.empty(n_requests, dtype=np.int64)
+    u = rng.random(n_requests)
+    for i in range(J):
+        mask = proxies == i
+        if not mask.any():
+            continue
+        cdf = np.cumsum(lam[i] / totals[i])
+        cdf[-1] = 1.0
+        objects[mask] = np.searchsorted(cdf, u[mask], side="right")
+    np.clip(objects, 0, N - 1, out=objects)
+    return IRMTrace(proxies=proxies, objects=objects)
+
+
+class PopularityEstimator:
+    """Online empirical request-rate estimator (per proxy × object).
+
+    ``lam_hat[i, k] = count[i, k] / n[i]`` — the admission controller
+    feeds this into the working-set solver (Section IV-C).
+    """
+
+    def __init__(self, n_proxies: int, n_objects: int) -> None:
+        self.counts = np.zeros((n_proxies, n_objects), dtype=np.int64)
+        self.totals = np.zeros(n_proxies, dtype=np.int64)
+
+    def observe(self, proxy: int, obj: int) -> None:
+        self.counts[proxy, obj] += 1
+        self.totals[proxy] += 1
+
+    def observe_trace(self, trace: IRMTrace) -> None:
+        np.add.at(self.counts, (trace.proxies, trace.objects), 1)
+        np.add.at(self.totals, trace.proxies, 1)
+
+    def rates(self, laplace: float = 0.0) -> np.ndarray:
+        """Estimated per-request rates, optionally Laplace-smoothed."""
+        J, N = self.counts.shape
+        tot = np.maximum(self.totals, 1).astype(np.float64)[:, None]
+        if laplace > 0.0:
+            return (self.counts + laplace) / (tot + laplace * N)
+        return self.counts / tot

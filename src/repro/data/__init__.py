@@ -1,0 +1,1 @@
+from .pipeline import SyntheticLMData, FileTokenData, make_pipeline  # noqa: F401

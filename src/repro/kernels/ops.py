@@ -1,0 +1,97 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (this container is CPU-only; the
+kernel bodies execute in Python via the Pallas interpreter, which is the
+validation mode for the TPU target). On TPU backends the default flips
+to compiled Mosaic.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_attention import flash_attention as _flash
+from .paged_attention import paged_attention as _paged
+from .shared_prefix_attention import shared_prefix_attention as _shared_prefix
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_kv", "interpret"))
+def flash_attention(
+    q, k, v, *, causal: bool = True, block_q: int = 128, block_kv: int = 128,
+    interpret: Optional[bool] = None,
+):
+    """(B,T,H,D) x (B,S,KV,D) -> (B,T,H,D); FA2 tiling, causal block skip."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return _flash(
+        q, k, v, causal=causal, block_q=block_q, block_kv=block_kv,
+        interpret=interpret,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention(
+    q, k_pages, v_pages, block_tables, context_lens, *,
+    interpret: Optional[bool] = None,
+):
+    """Decode attention through block tables over the shared physical
+    KV pool. (B,H,D) -> (B,H,D)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return _paged(
+        q, k_pages, v_pages, block_tables, context_lens, interpret=interpret
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def shared_prefix_attention(
+    q, prefix_k, prefix_v, prefix_lens, *, block_s: int = 128,
+    interpret: Optional[bool] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Grouped attention of all requests sharing a prefix against its one
+    physical KV copy. Returns (out, lse) for merging."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return _shared_prefix(
+        q, prefix_k, prefix_v, prefix_lens, block_s=block_s, interpret=interpret
+    )
+
+
+@jax.jit
+def shared_prefix_decode(
+    q,                 # (P, M, H, D) grouped queries
+    prefix_k, prefix_v, prefix_lens,       # shared objects (one copy each)
+    suffix_k, suffix_v,                    # (P, M, Ss, KV, D) per-request
+    suffix_lens,                           # (P, M)
+):
+    """Full object-sharing decode: shared-prefix kernel + per-request
+    suffix attention, LSE-merged. The physical prefix KV is read once per
+    GROUP (not once per request) — the compute analogue of the paper's
+    l_n/|P(n)| apportioning."""
+    interpret = _default_interpret()
+    out_a, lse_a = _shared_prefix(
+        q, prefix_k, prefix_v, prefix_lens, interpret=interpret
+    )
+    P, M, H, D = q.shape
+    qf = q.reshape(P * M, 1, H, D)
+    Ss, KV = suffix_k.shape[2], suffix_k.shape[3]
+    out_b, lse_b = ref.reference_attention_with_lse(
+        qf,
+        suffix_k.reshape(P * M, Ss, KV, D),
+        suffix_v.reshape(P * M, Ss, KV, D),
+        kv_valid_len=suffix_lens.reshape(P * M),
+    )
+    out_b = out_b.reshape(P, M, H, D)
+    lse_b = lse_b.reshape(P, M, H)
+    return ref.lse_merge(
+        out_a.astype(jnp.float32), lse_a, out_b, lse_b
+    ).astype(q.dtype)

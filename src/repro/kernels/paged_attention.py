@@ -1,0 +1,143 @@
+"""Paged decode attention as a Pallas TPU kernel — the device data-plane
+of the paper's shared physical cache.
+
+The host-side object-sharing cache manager (``repro.core.shared_lru``,
+driving ``repro.cacheblocks``) owns *which* KV pages are resident and
+*who* is charged for them; this kernel is the data plane that reads a
+sequence's logical KV stream through its **block table**. Physical pages
+can appear in many sequences' tables (shared prefixes) — the kernel
+reads one physical copy, which is exactly the paper's
+``l_n / |P(n)|`` cost sharing realized in HBM.
+
+TPU mapping:
+* ``PrefetchScalarGridSpec`` prefetches the block table + context
+  lengths into SMEM so that BlockSpec ``index_map``s can select the
+  *physical* page for each grid step — pages stream HBM->VMEM with no
+  gather materialization;
+* grid = (batch, kv_head, pages_per_seq); VMEM scratch carries the
+  online softmax across a sequence's pages;
+* GQA: the q block holds all ``G = H / KV`` grouped query heads so one
+  staged page serves G heads (MXU rows = G).
+
+Validated against ``ref.reference_paged_attention`` in interpret mode.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(
+    block_tables_ref, context_lens_ref,   # scalar-prefetch (SMEM)
+    q_ref, k_ref, v_ref,                  # VMEM tiles
+    o_ref,
+    acc_ref, m_ref, l_ref,
+    *,
+    page_size: int,
+    sm_scale: float,
+):
+    b = pl.program_id(0)
+    i = pl.program_id(2)
+    n_pages = pl.num_programs(2)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    ctx = context_lens_ref[b]
+    page_start = i * page_size
+
+    @pl.when(page_start < ctx)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * sm_scale       # (G, d)
+        k = k_ref[0, 0].astype(jnp.float32)                  # (page, d)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                                                    # (G, page)
+        pos = page_start + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1
+        )
+        s = jnp.where(pos < ctx, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_ref[...] = m_new
+
+    @pl.when(i == n_pages - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def paged_attention(
+    q: jnp.ndarray,            # (B, H, D)
+    k_pages: jnp.ndarray,      # (KV, P, page, D)  physical pool
+    v_pages: jnp.ndarray,      # (KV, P, page, D)
+    block_tables: jnp.ndarray, # (B, pages_per_seq) int32
+    context_lens: jnp.ndarray, # (B,) int32
+    *,
+    sm_scale: float | None = None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Returns (B, H, D)."""
+    B, H, D = q.shape
+    KV, P, page_size, _ = k_pages.shape
+    assert H % KV == 0
+    G = H // KV
+    pages_per_seq = block_tables.shape[1]
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(D)
+
+    qg = q.reshape(B, KV, G, D)
+
+    kernel = functools.partial(
+        _paged_kernel, page_size=page_size, sm_scale=sm_scale
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, KV, pages_per_seq),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, i, bt, cl: (b, h, 0, 0)),
+            pl.BlockSpec(
+                (1, 1, page_size, D),
+                lambda b, h, i, bt, cl: (h, bt[b, i], 0, 0),
+            ),
+            pl.BlockSpec(
+                (1, 1, page_size, D),
+                lambda b, h, i, bt, cl: (h, bt[b, i], 0, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, G, D), lambda b, h, i, bt, cl: (b, h, 0, 0)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((G, D), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, D), q.dtype),
+        interpret=interpret,
+    )(block_tables, context_lens, qg, k_pages, v_pages)
+    return out.reshape(B, H, D)

@@ -1,0 +1,2 @@
+"""Launchers + distribution config: production mesh, sharding rules,
+input specs, the multi-pod dry-run, and the train/serve CLIs."""

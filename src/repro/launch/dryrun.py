@@ -1,0 +1,423 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST precede any jax import: jax locks the device
+# count at first backend init, and the production meshes need 512
+# placeholder host devices. (Only the dry-run sets this — smoke tests and
+# benchmarks see the real single CPU device.)
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this driver:
+  1. builds the model + step function (train_step / prefill / serve_step),
+  2. builds ShapeDtypeStruct inputs (``input_specs``) and shardings
+     (``launch.sharding`` rules),
+  3. ``jit(...).lower(...).compile()`` against the production mesh,
+  4. prints ``compiled.memory_analysis()`` and ``cost_analysis()``,
+  5. parses the post-SPMD HLO for collective bytes (ring-model costs),
+  6. writes a JSON artifact consumed by the roofline report.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-1.7b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, get_config, list_archs, runnable
+from repro.launch import sharding as shr
+from repro.launch.mesh import data_axes, make_production_mesh
+from repro.launch.specs import input_specs
+from repro.models import make_model
+from repro.training import TrainConfig, make_train_step
+from repro.training.train_step import init_train_state
+
+ARTIFACT_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / "artifacts" / "dryrun"
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVE_RE = re.compile(
+    r"=\s*(?P<type>[^=]*?)\s*"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?P<start>-start)?\(",
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([0-9,]+)\}")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        b = _DTYPE_BYTES.get(dt)
+        if b is None:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * b
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Per-device collective traffic (bytes on the wire, ring model).
+
+    all-reduce: 2*size*(n-1)/n; all-gather / reduce-scatter / all-to-all:
+    size*(n-1)/n (size = full result); collective-permute: size.
+    """
+    out = {}
+    for line in hlo_text.splitlines():
+        m = _COLLECTIVE_RE.search(line)
+        if not m:
+            continue
+        if "-done" in line.split("=")[0]:
+            continue
+        op = m.group("op")
+        size = _shape_bytes(m.group("type"))
+        g = _GROUPS_RE.search(line)
+        n = len(g.group(1).split(",")) if g else 2
+        if n <= 1:
+            continue
+        ring = (n - 1) / n
+        if op == "all-reduce":
+            traffic = 2.0 * size * ring
+        elif op == "collective-permute":
+            traffic = float(size)
+        else:
+            traffic = size * ring
+        rec = out.setdefault(op, {"count": 0, "bytes": 0.0})
+        rec["count"] += 1
+        rec["bytes"] += traffic
+    return out
+
+
+def build_cell(arch: str, shape_name: str, mesh, cost_repeat: int = 1):
+    """Returns (fn, args, in_shardings, out_shardings, meta).
+
+    ``cost_repeat=2`` builds the body-doubled variant used to isolate
+    per-tile loop-body costs (XLA counts while bodies once): with
+    measurement m_r = outer + r * tile, the corrected total is
+    m_1 + (n_tiles - 1) * (m_2 - m_1).
+    """
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    dp = data_axes(mesh)
+
+    from repro.models import shardctx
+
+    rules = shr.model_internal_rules(mesh)
+    if cfg.moe:
+        from repro.launch.moe_ep import make_moe_apply_ep
+
+        ep = make_moe_apply_ep(mesh, cfg)
+        if ep is not None:
+            rules["moe_apply"] = ep
+    from repro.launch import tuning as _tuning
+
+    if shape.kind == "decode" and _tuning.flash_decode():
+        from repro.launch.flash_decode import make_decode_attention
+
+        fd = make_decode_attention(mesh)
+        if fd is not None:
+            rules["decode_attention"] = fd
+
+    def rule_wrapped(fn):
+        def wrapped(*a):
+            with shardctx.rules(rules):
+                return fn(*a)
+
+        return wrapped
+
+    if shape.kind == "train":
+        from repro.launch import tuning
+
+        # H2: small dense models waste the `model` axis on TP; flip it to
+        # extra data parallelism (params replicated, batch 256-way). Only
+        # when the global batch divides the full device count — otherwise
+        # the fallback partial sharding replicates activations (measured:
+        # xlstm multi-pod regressed 8x before this guard).
+        pure_dp = (
+            not cfg.moe
+            and cfg.n_params < tuning.pure_dp_threshold()
+            and shape.global_batch % mesh.size == 0
+        )
+        model = make_model(
+            cfg,
+            remat=tuning.remat_policy() != "none",
+            remat_policy=tuning.remat_policy(),
+            residual_constraint=shr.residual_constraint(
+                mesh, seq_parallel=tuning.seq_parallel(), pure_dp=pure_dp
+            ),
+            cost_repeat=cost_repeat,
+        )
+        # pure-DP already has minimal per-device batch; accumulation would
+        # make the microbatch (global/micro) non-divisible by 256 shards
+        # and force replication (measured: 4.8 -> 12.1 GB resident).
+        tcfg = TrainConfig(
+            microbatches=1 if pure_dp else tuning.microbatches()
+        )
+        step = make_train_step(model, tcfg)
+        batch = input_specs(arch, shape)
+        state_shapes = jax.eval_shape(
+            lambda: init_train_state(model, jax.random.PRNGKey(0), tcfg)
+        )
+        state_specs = shr.train_state_specs(mesh, state_shapes, tp=not pure_dp)
+        in_sh = (
+            shr.named(mesh, state_specs),
+            shr.named(
+                mesh,
+                shr.batch_specs(
+                    mesh, batch, shape.global_batch, include_model=pure_dp
+                ),
+            ),
+        )
+        out_sh = (in_sh[0], None)
+        return rule_wrapped(step), (state_shapes, batch), in_sh, out_sh, dict(kind="train")
+
+    model = make_model(cfg, param_dtype=jnp.bfloat16, cost_repeat=cost_repeat)
+    params_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    p_named = shr.named(mesh, shr.param_specs(mesh, params_shapes))
+
+    if shape.kind == "prefill":
+        batch = input_specs(arch, shape)
+        if cfg.is_encoder:
+            fn = lambda params, b: model.forward_logits(params, b)
+            out_sh = None
+        else:
+            cache_len = shape.seq_len
+            fn = lambda params, b: model.prefill(params, b, cache_len)
+            cache_shapes = jax.eval_shape(
+                lambda: model.init_cache(shape.global_batch, shape.seq_len)
+            )
+            out_sh = (
+                None,
+                shr.named(
+                    mesh,
+                    shr.cache_specs(
+                        mesh, cache_shapes, shape.global_batch,
+                        decode_layout=False,  # write-aligned; decode reshards
+                    ),
+                ),
+            )
+        in_sh = (
+            p_named,
+            shr.named(mesh, shr.batch_specs(mesh, batch, shape.global_batch)),
+        )
+        return rule_wrapped(fn), (params_shapes, batch), in_sh, out_sh, dict(kind="prefill")
+
+    # decode
+    inputs = input_specs(arch, shape, model=model)
+    cache_sh = shr.named(
+        mesh, shr.cache_specs(mesh, inputs["caches"], shape.global_batch)
+    )
+    tok_sh = shr.named(
+        mesh, shr.batch_specs(mesh, inputs["tokens"], shape.global_batch)
+    )
+    pos_sh = shr.named(
+        mesh, shr.batch_specs(mesh, inputs["position"], shape.global_batch)
+    )
+
+    def serve_step(params, tokens, caches, position):
+        logits, new_caches = model.decode_step(params, tokens, caches, position)
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return next_tok, new_caches
+
+    in_sh = (p_named, tok_sh, cache_sh, pos_sh)
+    out_sh = (None, cache_sh)
+    args = (params_shapes, inputs["tokens"], inputs["caches"], inputs["position"])
+    return rule_wrapped(serve_step), args, in_sh, out_sh, dict(kind="decode")
+
+
+def model_flops(cfg, shape) -> float:
+    """6*N*D (train) / 2*N*D (inference), N = active params."""
+    n = cfg.n_active_params
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: Path) -> dict:
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    t0 = time.time()
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "devices": int(mesh.size), "ok": False,
+    }
+    try:
+        fn, args, in_sh, out_sh, meta = build_cell(arch, shape_name, mesh)
+        # alias state in/out (train) and KV caches (decode): updates are
+        # in-place on real systems; without donation every step pays a
+        # full cache copy in both bytes and residency.
+        donate = {"train": (0,), "decode": (2,)}.get(meta["kind"], ())
+        with mesh:
+            jitted = jax.jit(
+                fn, in_shardings=in_sh, out_shardings=out_sh,
+                donate_argnums=donate,
+            )
+            lowered = jitted.lower(*args)
+            t_lower = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time()
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0] if cost else {}
+        hlo = compiled.as_text()
+        coll = parse_collectives(hlo)
+
+        mem_d = {}
+        for f in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "alias_size_in_bytes",
+                  "generated_code_size_in_bytes"):
+            v = getattr(mem, f, None)
+            if v is not None:
+                mem_d[f] = int(v)
+        print(f"[{arch} x {shape_name} x {mesh_kind}] memory_analysis: {mem_d}")
+        flops = float(cost.get("flops", -1.0))
+        bytes_acc = float(cost.get("bytes accessed", -1.0))
+        print(
+            f"[{arch} x {shape_name} x {mesh_kind}] cost_analysis: "
+            f"flops={flops:.3e} bytes={bytes_acc:.3e}"
+        )
+
+        # --- loop-body correction: body-doubled compile, differencing ---
+        # XLA HloCostAnalysis counts a while-loop body once regardless of
+        # trip count; m1 + (n_tiles-1)*(m2-m1) restores per-tile terms.
+        from repro.models.transformer import TransformerLM  # noqa
+
+        n_tiles = max(
+            get_config(arch).n_layers // len(get_config(arch).block_pattern), 1
+        )
+        corr = {}
+        try:
+            fn2, args2, in2, out2, _ = build_cell(
+                arch, shape_name, mesh, cost_repeat=2
+            )
+            with mesh:
+                compiled2 = (
+                    jax.jit(
+                        fn2, in_shardings=in2, out_shardings=out2,
+                        donate_argnums=donate,
+                    )
+                    .lower(*args2)
+                    .compile()
+                )
+            cost2 = compiled2.cost_analysis()
+            if isinstance(cost2, (list, tuple)):
+                cost2 = cost2[0] if cost2 else {}
+            coll2 = parse_collectives(compiled2.as_text())
+
+            def corrected(v1, v2):
+                tile = max(v2 - v1, 0.0)
+                return v1 + (n_tiles - 1) * tile
+
+            corr["flops_per_device"] = corrected(
+                flops, float(cost2.get("flops", flops))
+            )
+            corr["bytes_per_device"] = corrected(
+                bytes_acc, float(cost2.get("bytes accessed", bytes_acc))
+            )
+            cb1 = sum(c["bytes"] for c in coll.values())
+            cb2 = sum(c["bytes"] for c in coll2.values())
+            corr["collective_bytes_per_device"] = corrected(cb1, cb2)
+            corr["collectives_repeat2"] = coll2
+        except Exception as e:  # calibration is best-effort
+            corr["error"] = f"{type(e).__name__}: {e}"
+
+        # --- analytic cost model (MXU flops; validated vs unrolled XLA) --
+        from repro.launch import tuning
+        from repro.roofline import cell_costs
+
+        cc = cell_costs(cfg, shape, remat=tuning.remat_policy())
+
+        result.update(
+            ok=True,
+            kind=meta["kind"],
+            n_tiles=n_tiles,
+            xla_raw={"flops_per_device": flops, "bytes_per_device": bytes_acc},
+            loop_corrected=corr,
+            analytic={
+                "flops_total_global": cc.flops_total,
+                "flops_fwd_global": cc.flops_fwd,
+                "hbm_bytes_min_global": cc.hbm_bytes_min,
+                "breakdown": cc.breakdown,
+            },
+            collectives=coll,
+            collective_bytes_per_device=corr.get(
+                "collective_bytes_per_device",
+                sum(c["bytes"] for c in coll.values()),
+            ),
+            memory=mem_d,
+            model_flops_global=cc.model_flops,
+            n_params=cfg.n_params,
+            n_active_params=cfg.n_active_params,
+            lower_seconds=t_lower - t0,
+            compile_seconds=t_compile - t_lower,
+        )
+    except Exception as e:
+        result["error"] = f"{type(e).__name__}: {e}"
+        traceback.print_exc()
+    out_dir.mkdir(parents=True, exist_ok=True)
+    path = out_dir / f"{arch}__{shape_name}__{mesh_kind}.json"
+    path.write_text(json.dumps(result, indent=2))
+    status = "OK" if result["ok"] else "FAIL"
+    print(
+        f"[{status}] {arch} x {shape_name} x {mesh_kind} "
+        f"({time.time() - t0:.1f}s)"
+    )
+    return result
+
+
+def all_cells():
+    for arch in list_archs():
+        cfg = get_config(arch)
+        for shape_name, shape in SHAPES.items():
+            ok, why = runnable(cfg, shape)
+            if ok:
+                yield arch, shape_name
+            else:
+                print(f"[SKIP] {arch} x {shape_name}: {why}")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=("single", "multi", "both"), default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=str(ARTIFACT_DIR))
+    args = ap.parse_args()
+    out_dir = Path(args.out)
+    meshes = ("single", "multi") if args.mesh == "both" else (args.mesh,)
+
+    cells = list(all_cells()) if args.all else [(args.arch, args.shape)]
+    n_fail = 0
+    for arch, shape_name in cells:
+        for mesh_kind in meshes:
+            res = run_cell(arch, shape_name, mesh_kind, out_dir)
+            n_fail += 0 if res["ok"] else 1
+    print(f"dry-run complete: {len(cells) * len(meshes) - n_fail} ok, {n_fail} failed")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

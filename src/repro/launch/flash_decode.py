@@ -1,0 +1,94 @@
+"""Flash-decoding for sharded KV caches (shard_map + LSE-merge psum).
+
+Baseline problem (measured, yi-34b decode_32k single-pod): with the KV
+cache sharded on head_dim (kv_heads=8 < model=16), XLA SPMD all-gathers
+the ENTIRE per-layer cache to every device (0.55 GB/layer/device,
+32.7 GB/step collective, 265 GB/step HBM — the 'involuntary full
+rematerialization' warnings). Hypothesis H1 (EXPERIMENTS.md §Perf):
+shard the cache on the SEQUENCE dim and compute flash-decoding partials
+locally, merging with two tiny psums:
+
+    traffic/layer = 2 * psum[(B, H, Dv) + (B, H)]  ~ 0.5 MB
+    vs all-gather  ~ B * S * KV * hd * 2           ~ 550 MB   (~1000x)
+
+Each model-shard owns S/msz cache slots, computes masked local attention
+(+ its own lse), and the merge is the standard log-sum-exp combine — the
+same primitive as the shared-prefix kernel's merge (ref.lse_merge).
+Works for GQA full attention, ring-buffer local attention, and MLA's
+latent MQA (KV=1, Dv=R) through one code path.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .mesh import axis_size, data_axes, model_axis
+
+NEG = -1e30
+
+
+def make_decode_attention(mesh):
+    dp = data_axes(mesh)
+    mdl = model_axis(mesh)
+    if mdl is None:
+        return None
+    msz = axis_size(mesh, mdl)
+    dsz = axis_size(mesh, dp) if dp else 1
+
+    def override(q, k, v, valid_len, scale):
+        """q: (B,1,H,D); k: (B,S,KV,D); v: (B,S,KV,Dv); valid (B,).
+        Returns (B,1,H,Dv) or None if this mesh/shape can't use the path.
+        """
+        B, T, H, D = q.shape
+        S, KV = k.shape[1], k.shape[2]
+        Dv = v.shape[-1]
+        if T != 1 or S % msz != 0 or (dp and B % dsz != 0):
+            return None
+        G = H // KV
+
+        def local(qn, kn, vn, vl):
+            # qn (B_l,1,H,D) kn (B_l,S_l,KV,D) vn (B_l,S_l,KV,Dv) vl (B_l,)
+            m_idx = jax.lax.axis_index(mdl)
+            S_l = kn.shape[1]
+            offset = m_idx * S_l
+            valid_loc = jnp.clip(vl - offset, 0, S_l)
+            qf = qn.astype(jnp.float32).reshape(-1, 1, KV, G, D) * scale
+            s = jnp.einsum(
+                "bkgd,bskd->bkgs", qf[:, 0], kn.astype(jnp.float32)
+            )                                               # (B_l, KV, G, S_l)
+            mask = (
+                jnp.arange(S_l)[None, :] < valid_loc[:, None]
+            )[:, None, None, :]
+            s = jnp.where(mask, s, NEG)
+            m_loc = s.max(axis=-1)                          # (B,KV,G)
+            p = jnp.exp(s - m_loc[..., None])
+            den_loc = p.sum(axis=-1)
+            num_loc = jnp.einsum("bkgs,bskv->bkgv", p, vn.astype(jnp.float32))
+            # merge across the model axis (flash-decoding combine)
+            m_g = jax.lax.pmax(m_loc, mdl)
+            w = jnp.exp(m_loc - m_g)
+            num = jax.lax.psum(num_loc * w[..., None], mdl)
+            den = jax.lax.psum(den_loc * w, mdl)
+            out = num / jnp.maximum(den, 1e-30)[..., None]
+            return out.reshape(-1, 1, H, Dv).astype(qn.dtype)
+
+        b_ax = dp if (dp and B % dsz == 0) else None
+        mapped = jax.shard_map(
+            local,
+            mesh=mesh,
+            in_specs=(
+                P(b_ax, None, None, None),
+                P(b_ax, mdl, None, None),
+                P(b_ax, mdl, None, None),
+                P(b_ax),
+            ),
+            out_specs=P(b_ax, None, None, None),
+            check_vma=False,
+        )
+        return mapped(q, k, v, valid_len)
+
+    return override

@@ -1,0 +1,346 @@
+"""Sharding rules: params (TP over `model`), batch (DP over
+(`pod`,`data`)), KV caches, optimizer state (ZeRO-1: extra `data`
+sharding on the largest divisible dim).
+
+All rules are divisibility-guarded: a dim is only sharded when its size
+divides the axis size, so the same rules serve the production mesh, the
+reduced smoke configs on tiny meshes, and every arch's odd vocab/head
+counts (e.g. granite's vocab=49155 stays replicated on `model` while its
+d_model shards).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .mesh import axis_size, data_axes, model_axis
+
+
+def _div(n: int, size: int) -> bool:
+    return size > 0 and n % size == 0
+
+
+def _axis_if_div(mesh, axis: Optional[str], dim: int):
+    if axis is None:
+        return None
+    return axis if _div(dim, axis_size(mesh, axis)) else None
+
+
+# ---------------------------------------------------------------------------
+# Parameter rules, keyed by the trailing path of the leaf.
+# ---------------------------------------------------------------------------
+def _param_spec(mesh, path: Tuple[str, ...], shape) -> P:
+    mdl = model_axis(mesh)
+    dp = data_axes(mesh)
+    name = path[-1]
+    parent = path[-2] if len(path) >= 2 else ""
+    ndim = len(shape)
+
+    def col(i_shard):  # shard one dim of an ndim-tensor on `model`
+        spec = [None] * ndim
+        spec[i_shard] = _axis_if_div(mesh, mdl, shape[i_shard])
+        return P(*spec)
+
+    # --- embeddings / heads ---
+    if name == "embed":
+        v_ax = _axis_if_div(mesh, mdl, shape[0])
+        if v_ax:
+            return P(v_ax, None)
+        return col(1)
+    if name == "lm_head":
+        return col(1)
+    if name == "frontend_proj":
+        return col(1)
+    if name in ("w1",) and parent == "projector":
+        return col(1)
+    if name in ("w2",) and parent == "projector":
+        return col(0)
+
+    # --- MoE experts: (E, d, f) / (E, f, d) ---
+    if parent == "ffn" and ndim == 3:
+        e_ax = _axis_if_div(mesh, mdl, shape[0])
+        # large expert stacks additionally shard d_ff over `data`
+        # (ZeRO-3-style rest sharding; gathered per layer inside scan)
+        big = shape[0] * shape[1] * shape[2] >= 64 * 1024 * 1024
+        f_dim = 2 if name in ("w_gate", "w_up") else 1
+        f_ax = None
+        if big and dp:
+            f_ax = _axis_if_div(mesh, dp[-1], shape[f_dim])
+        spec = [e_ax, None, None]
+        spec[f_dim] = f_ax
+        return P(*spec)
+    if name == "router":
+        return P(None, None)
+
+    # --- attention (GQA + MLA) ---
+    if name in ("wq", "wk", "wv", "wq_b", "w_uk", "w_uv", "w_ff_up", "w_in",
+                "w_up", "w_gate_up", "wx", "wgate", "w_input_gate",
+                "w_rec_gate", "w_gate"):
+        return col(ndim - 1)
+    if name in ("wo", "w_down", "w_out", "w_ff_down", "down"):
+        return col(0)
+    if name in ("wq_a", "wkv_a"):
+        return P(None, None)
+    if name in ("gate", "up") and ndim == 2:  # dense mlp / shared experts
+        return col(1)
+
+    # --- everything else (norm scales, conv kernels, gates, recurrent
+    #     block-diagonals, biases, log_lambda) ---
+    if name == "log_lambda" and ndim == 1:
+        return P(_axis_if_div(mesh, mdl, shape[0]))
+    return P(*([None] * ndim))
+
+
+def param_specs(mesh, params_tree, tp: bool = True) -> Any:
+    """PartitionSpec pytree for a params (or params-shaped) pytree.
+
+    Leaves under 'blocks' carry a leading stacked-tile dim -> prepend
+    None to the rule computed from the trailing path. ``tp=False``
+    replicates everything (pure-DP mode for small models, where the
+    `model` axis carries batch instead — hypothesis H2)."""
+
+    def rule(path, leaf):
+        if not tp:
+            return P(*([None] * leaf.ndim))
+        keys = tuple(
+            p.key if hasattr(p, "key") else str(p.idx) if hasattr(p, "idx") else str(p)
+            for p in path
+        )
+        shape = leaf.shape
+        stacked = len(keys) > 0 and keys[0] == "blocks"
+        if stacked:
+            spec = _param_spec(mesh, keys, shape[1:])
+            return P(*((None,) + tuple(spec)))
+        return _param_spec(mesh, keys, shape)
+
+    return jax.tree_util.tree_map_with_path(rule, params_tree)
+
+
+def zero1_specs(mesh, params_tree, base_specs) -> Any:
+    """Optimizer-state specs: base TP spec + extra `data` sharding on the
+    largest unsharded dim (ZeRO-1)."""
+    dp = data_axes(mesh)
+    dax = dp[-1] if dp else None
+
+    def rule(leaf, spec):
+        if dax is None or leaf.ndim == 0:
+            return spec
+        parts = list(spec) + [None] * (leaf.ndim - len(spec))
+        if any(p == dax or (isinstance(p, tuple) and dax in p) for p in parts):
+            return spec  # already data-sharded (e.g. 2D expert sharding)
+        dsize = axis_size(mesh, dax)
+        best, best_dim = -1, -1
+        for i, (s, ax) in enumerate(zip(leaf.shape, parts)):
+            if ax is None and _div(s, dsize) and s > best:
+                best, best_dim = s, i
+        if best_dim >= 0:
+            parts[best_dim] = dax
+        return P(*parts)
+
+    return jax.tree.map(rule, params_tree, base_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def opt_state_specs(mesh, opt_state_tree, params_specs) -> Any:
+    """Specs for the AdamW state {mu, nu, step}."""
+    z1 = zero1_specs(mesh, opt_state_tree["mu"], params_specs)
+    return {"mu": z1, "nu": z1, "step": P()}
+
+
+# ---------------------------------------------------------------------------
+# Batch / activation / cache rules
+# ---------------------------------------------------------------------------
+def batch_specs(mesh, batch_tree, global_batch: int, *, include_model=False) -> Any:
+    dp = data_axes(mesh)
+    axes = tuple(dp)
+    if include_model and model_axis(mesh):
+        axes = axes + (model_axis(mesh),)
+    bp = axes if (axes and _div(global_batch, axis_size(mesh, axes))) else (
+        dp if (dp and _div(global_batch, axis_size(mesh, dp))) else ()
+    )
+    b_ax = bp if bp else None
+
+    def rule(leaf):
+        nd = leaf.ndim
+        return P(*((b_ax,) + (None,) * (nd - 1))) if nd else P()
+
+    return jax.tree.map(rule, batch_tree)
+
+
+def cache_specs(mesh, cache_tree, global_batch: int,
+                decode_layout: bool = True) -> Any:
+    """KV-cache rules. Leaves are stacked (n_tiles, B, S, ...):
+    batch -> data axes; with ``decode_layout`` the SEQUENCE dim -> model
+    (flash-decoding: launch/flash_decode.py computes local partials and
+    LSE-merges with two tiny psums). The baseline head_dim sharding made
+    XLA all-gather the whole per-layer cache at decode (hypothesis H1,
+    EXPERIMENTS.md §Perf) — but it IS the zero-cost layout for prefill
+    *writes* (aligned with the column-sharded wk/wv), so prefill cells
+    emit it and the prefill->decode hand-off pays one explicit reshard
+    (exactly a disaggregated-serving KV transfer)."""
+    from . import tuning
+
+    dp = data_axes(mesh)
+    mdl = model_axis(mesh)
+    b_ok = dp and _div(global_batch, axis_size(mesh, dp))
+    b_ax = dp if b_ok else None
+    seq_shard = tuning.flash_decode() and decode_layout
+
+    def rule(path, leaf):
+        nd = leaf.ndim
+        if nd <= 1:
+            return P(*([None] * nd))
+        spec = [None] * nd
+        in_tail = any(
+            getattr(p, "key", None) == "tail" or str(p) == "tail" for p in path
+        )
+        b_dim = 0 if in_tail else 1  # tail caches have no tile dim
+        if b_dim < nd:
+            spec[b_dim] = b_ax
+        is_kv = any(
+            getattr(p, "key", None) in ("k", "v", "c_kv", "k_rope")
+            for p in path
+        )
+        s_dim = b_dim + 1
+        if seq_shard and is_kv and nd > s_dim + 1:
+            ax = _axis_if_div(mesh, mdl, leaf.shape[s_dim])
+            if ax:
+                spec[s_dim] = ax
+                return P(*spec)
+        if nd - 1 > b_dim:
+            spec[nd - 1] = _axis_if_div(mesh, mdl, leaf.shape[nd - 1])
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(rule, cache_tree)
+
+
+def named(mesh, spec_tree) -> Any:
+    leaf = lambda x: isinstance(x, P)
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree, is_leaf=leaf
+    )
+
+
+def train_state_specs(mesh, state_shapes, tp: bool = True) -> Any:
+    """Specs for {"params", "opt"} (+ optional "compress") train state.
+
+    ZeRO-1: fp32 masters AND both Adam moments carry the extra `data`
+    sharding — they are only touched pointwise by the optimizer update
+    and at the bf16 cast (whose all-gather is the price of ZeRO-1).
+    """
+    p_specs = param_specs(mesh, state_shapes["params"], tp=tp)
+    z1 = zero1_specs(mesh, state_shapes["params"], p_specs)
+    out = {
+        "params": z1,
+        "opt": {
+            "mu": zero1_specs(mesh, state_shapes["opt"]["mu"], p_specs),
+            "nu": zero1_specs(mesh, state_shapes["opt"]["nu"], p_specs),
+            "step": P(),
+        },
+    }
+    if "compress" in state_shapes:
+        out["compress"] = zero1_specs(mesh, state_shapes["compress"], p_specs)
+    return out
+
+
+def model_internal_rules(mesh):
+    """Constraint functions installed into models.shardctx: MoE dispatch
+    buffers (E, C, d)/(E, C, f) must be (model, data, None) or they
+    replicate ~80 GB/device at deepseek-v2 train scale; the per-choice
+    gather outputs (N, d) stay token-sharded."""
+    dp = data_axes(mesh)
+    mdl = model_axis(mesh)
+    dsz = axis_size(mesh, dp) if dp else 1
+    msz = axis_size(mesh, mdl) if mdl else 1
+
+    def ecd(x):  # (E, C, d) or (E, C, f)
+        e_ax = mdl if (mdl and x.shape[0] % msz == 0) else None
+        c_ax = dp if (dp and x.shape[1] % dsz == 0) else None
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(e_ax, c_ax, None))
+        )
+
+    def nd(x):  # (N, d): tokens sharded over data AND model (SP carries over)
+        axes = tuple(dp) + ((mdl,) if mdl else ())
+        tot = 1
+        for a in axes:
+            tot *= mesh.shape[a]
+        n_ax = axes if (axes and x.shape[0] % tot == 0) else (dp or None)
+        if n_ax is not None and not isinstance(n_ax, tuple):
+            n_ax = (n_ax,)
+        if n_ax is not None and x.shape[0] % tot != 0:
+            n_ax = dp if (dp and x.shape[0] % dsz == 0) else None
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(n_ax, None))
+        )
+
+    def ec(x):  # (E, C) int32 slot->token map
+        e_ax = mdl if (mdl and x.shape[0] % msz == 0) else None
+        c_ax = dp if (dp and x.shape[1] % dsz == 0) else None
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(e_ax, c_ax))
+        )
+
+    def cne(x):  # (chunks, Nc, E) per-chunk routing intermediates
+        axes = tuple(dp) + ((mdl,) if mdl else ())
+        tot = 1
+        for a in axes:
+            tot *= mesh.shape[a]
+        c_ax = axes if (axes and x.shape[0] % tot == 0) else None
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(c_ax, None, None))
+        )
+
+    return {
+        "moe_ecd": ecd,
+        "moe_ecf": ecd,
+        "moe_nd": nd,
+        "moe_ec": ec,
+        "moe_cne": cne,
+        "moe_chunks": axis_size(mesh, tuple(dp) + ((mdl,) if mdl else ())),
+    }
+
+
+def residual_constraint(mesh, seq_parallel: bool = True, pure_dp: bool = False):
+    """Sharding constraint for the residual stream at tile boundaries:
+    (B, T, d) -> (data-axes, model, None) — Megatron-style sequence
+    parallelism. The scan carry (the activation checkpoint) stays
+    sequence-sharded; XLA inserts all-gather/reduce-scatter around
+    attention/FFN. Falls back to replicated T when not divisible.
+    ``pure_dp``: batch over (data + model), params replicated (H2)."""
+    dp = data_axes(mesh)
+    mdl = model_axis(mesh)
+    if pure_dp and mdl is not None:
+        axes = tuple(dp) + (mdl,)
+
+        def fn(x):
+            n = 1
+            for a in axes:
+                n *= mesh.shape[a]
+            b_ax = axes if x.shape[0] % n == 0 else (dp if dp else None)
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(b_ax, None, None))
+            )
+
+        return fn
+    if not seq_parallel or mdl is None:
+        def fn(x):
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(dp if dp else None, None, None))
+            )
+        return fn
+
+    msize = axis_size(mesh, mdl)
+
+    def fn(x):
+        seq_ax = mdl if x.shape[1] % msize == 0 and x.shape[1] >= msize else None
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(dp if dp else None, seq_ax, None))
+        )
+
+    return fn

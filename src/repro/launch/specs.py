@@ -1,0 +1,72 @@
+"""``input_specs()``: ShapeDtypeStruct stand-ins for every model input of
+every (arch x shape) cell — weak-type-correct, shardable, zero
+allocation. The dry-run lowers against these; the launchers materialize
+real arrays with the same structure.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig, ShapeConfig, get_config
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_batch_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B, T = shape.global_batch, shape.seq_len
+    if cfg.modality == "audio":
+        return {
+            "frames": _sds((B, T, cfg.d_model), jnp.bfloat16),
+            "labels": _sds((B, T), jnp.int32),
+            "mask": _sds((B, T), jnp.bool_),
+        }
+    if cfg.modality == "vision_text":
+        t_text = T - cfg.n_image_tokens
+        return {
+            "tokens": _sds((B, t_text), jnp.int32),
+            "labels": _sds((B, t_text), jnp.int32),
+            "mask": _sds((B, t_text), jnp.bool_),
+            "image_embeds": _sds(
+                (B, cfg.n_image_tokens, cfg.vision_dim), jnp.bfloat16
+            ),
+        }
+    return {
+        "tokens": _sds((B, T), jnp.int32),
+        "labels": _sds((B, T), jnp.int32),
+        "mask": _sds((B, T), jnp.bool_),
+    }
+
+
+def prefill_batch_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    specs = train_batch_specs(cfg, shape)
+    specs.pop("labels", None)
+    if not cfg.is_encoder:
+        specs.pop("mask", None)
+    return specs
+
+
+def decode_inputs_specs(cfg: ArchConfig, shape: ShapeConfig, model):
+    """(tokens, caches, position) specs for one serve_step."""
+    B, S = shape.global_batch, shape.seq_len
+    caches = jax.eval_shape(lambda: model.init_cache(B, S))
+    return {
+        "tokens": _sds((B, 1), jnp.int32),
+        "caches": caches,
+        "position": _sds((B,), jnp.int32),
+    }
+
+
+def input_specs(arch: str, shape_cfg: ShapeConfig, model=None) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    if shape_cfg.kind == "train":
+        return train_batch_specs(cfg, shape_cfg)
+    if shape_cfg.kind == "prefill":
+        return prefill_batch_specs(cfg, shape_cfg)
+    assert model is not None, "decode specs need the model (cache shapes)"
+    return decode_inputs_specs(cfg, shape_cfg, model)

@@ -1,0 +1,59 @@
+"""Performance-tuning knobs, settable via environment variables so the
+dry-run / hillclimb loop can sweep them without code edits. Every knob's
+effect is recorded in EXPERIMENTS.md §Perf.
+
+REPRO_KV_CHUNK       chunk size of the online-softmax attention scan
+REPRO_REMAT_POLICY   dots | none | full  (checkpoint policy inside tiles)
+REPRO_SEQ_PARALLEL   1 | 0   (sequence-shard the residual stream carry)
+REPRO_CAUSAL_FOLD    1 | 0   (folded causal attention: halve masked FLOPs)
+"""
+
+from __future__ import annotations
+
+import os
+
+
+def kv_chunk(default: int = 1024) -> int:
+    return int(os.environ.get("REPRO_KV_CHUNK", default))
+
+
+def remat_policy(default: str = "full") -> str:
+    """'full' (nothing_saveable) is the baseline: 9.8 GB/device temp for
+    qwen3 train_4k vs 18.2 GB with 'dots' (> v5e HBM). Costs +1x forward
+    recompute — priced in roofline/costmodel.py."""
+    return os.environ.get("REPRO_REMAT_POLICY", default)
+
+
+def seq_parallel(default: bool = True) -> bool:
+    return os.environ.get("REPRO_SEQ_PARALLEL", "1" if default else "0") == "1"
+
+
+def causal_fold(default: bool = False) -> bool:
+    return os.environ.get("REPRO_CAUSAL_FOLD", "1" if default else "0") == "1"
+
+
+def pure_dp_threshold(default: int = 500_000_000) -> int:
+    """Dense models below this param count train pure-DP: the `model`
+    axis carries batch instead of TP (REPRO_PURE_DP_THRESHOLD=0 disables
+    — hypothesis H2: TP-16 on a 125M model burns 11.6 GB/step in tiny
+    all-gathers for 30 ms of compute)."""
+    return int(os.environ.get("REPRO_PURE_DP_THRESHOLD", default))
+
+
+def flash_decode(default: bool = True) -> bool:
+    """Sequence-sharded KV cache + shard_map LSE-merge decode
+    (REPRO_FLASH_DECODE=0 restores the baseline head_dim sharding)."""
+    return os.environ.get("REPRO_FLASH_DECODE", "1" if default else "0") == "1"
+
+
+def microbatches(default: int = 1) -> int:
+    """Gradient-accumulation factor for train cells (REPRO_MICROBATCH)."""
+    return int(os.environ.get("REPRO_MICROBATCH", default))
+
+
+def scan_unroll(default: bool = False) -> bool:
+    """Unroll ALL internal scans (attention chunks, sLSTM time steps,
+    mLSTM chunks, layer tiles) — used by the dry-run's cost-model
+    validation on reduced configs, where XLA's count-body-once while-loop
+    behaviour would otherwise hide most FLOPs."""
+    return os.environ.get("REPRO_SCAN_UNROLL", "1" if default else "0") == "1"

@@ -1,0 +1,9 @@
+"""Model zoo: all 10 assigned architectures as one configurable
+transformer skeleton + family-specific blocks (MoE, MLA, RG-LRU, xLSTM).
+
+Everything is functional JAX: ``init(rng, cfg) -> params`` pytrees and
+pure ``apply`` functions, scanned over layers so HLO size and compile
+time stay bounded at 60-layer scale.
+"""
+
+from .transformer import TransformerLM, make_model  # noqa: F401

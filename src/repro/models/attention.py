@@ -1,0 +1,456 @@
+"""Attention layers: GQA (full/local/encoder) and MLA (DeepSeek-V2).
+
+The reference compute path is **chunked online-softmax attention** (a
+pure-XLA flash formulation): `lax.scan` over KV chunks carrying
+(running max, running denominator, accumulator). It never materializes
+the (T, S) score matrix, so 32k-sequence cells compile and fit within
+per-device HBM in the dry-run, and its FLOP count matches the Pallas
+flash kernel (same roofline compute term).
+
+On-device alternatives from ``repro.kernels`` (pallas flash /
+paged / shared-prefix) plug in through the same layer API via
+``impl="pallas"`` (TPU targets; this container validates them in
+interpret mode only — see DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Params, apply_rope, dense_init, rmsnorm, rmsnorm_init
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Core: chunked online-softmax attention (works for causal / local /
+# bidirectional; GQA via q-head grouping).
+#
+# The training path uses a flash-style custom VJP: the naive AD of a
+# scan-over-chunks saves the per-chunk probability matrices as scan
+# residuals — i.e. the FULL (T, S) attention matrix, defeating the whole
+# point of chunking (observed: 8.6 GB/device/layer at deepseek-v2
+# train_4k). The custom backward recomputes p per chunk from the saved
+# (q, k, v, out, lse).
+# ---------------------------------------------------------------------------
+def _chunk_bias(q_pos, kv_pos, causal, window, kv_valid_len):
+    """log-bias (B?, T, c): 0 where attendable, NEG_INF elsewhere."""
+    T, c = q_pos.shape[0], kv_pos.shape[0]
+    mask = jnp.ones((T, c), bool)
+    if causal:
+        mask &= kv_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        mask &= kv_pos[None, :] > q_pos[:, None] - window
+    bias = jnp.where(mask, 0.0, NEG_INF)[None, :, None, None, :]
+    if kv_valid_len is not None:
+        vmask = kv_pos[None, :] < kv_valid_len[:, None]  # (B, c)
+        bias = bias + jnp.where(vmask, 0.0, NEG_INF)[:, None, None, None, :]
+    return bias
+
+
+def _flash_fwd(q, k, v, causal, window, q_offset, kv_chunk, scale,
+               kv_valid_len):
+    """Returns out (B,T,KV,G,Dv) fp32 and lse (B,T,KV,G)."""
+    from repro.launch import tuning
+
+    B, T, KV, G, D = q.shape
+    S = k.shape[1]
+    Dv = v.shape[-1]
+    n_chunks = S // kv_chunk
+    qf = q.astype(jnp.float32) * scale
+    kc = jnp.moveaxis(k.reshape(B, n_chunks, kv_chunk, KV, D), 1, 0)
+    vc = jnp.moveaxis(v.reshape(B, n_chunks, kv_chunk, KV, Dv), 1, 0)
+    q_pos = q_offset + jnp.arange(T)
+
+    def step(carry, inputs):
+        acc, m, denom, c_idx = carry
+        k_i, v_i = inputs
+        kv_pos = c_idx * kv_chunk + jnp.arange(kv_chunk)
+        s = jnp.einsum(
+            "btkgd,bckd->btkgc", qf, k_i.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+        s = s + _chunk_bias(q_pos, kv_pos, causal, window, kv_valid_len)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        denom_new = denom * alpha + p.sum(axis=-1)
+        pv = jnp.einsum(
+            "btkgc,bckv->btkgv", p, v_i.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+        acc_new = acc * alpha[..., None] + pv
+        return (acc_new, m_new, denom_new, c_idx + 1), None
+
+    acc0 = jnp.zeros((B, T, KV, G, Dv), jnp.float32)
+    m0 = jnp.full((B, T, KV, G), NEG_INF, jnp.float32)
+    d0 = jnp.zeros((B, T, KV, G), jnp.float32)
+    (acc, m, denom, _), _ = jax.lax.scan(
+        step, (acc0, m0, d0, 0), (kc, vc), unroll=tuning.scan_unroll()
+    )
+    denom = jnp.maximum(denom, 1e-30)
+    out = acc / denom[..., None]
+    lse = m + jnp.log(denom)
+    return out, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _flash_grouped(q, k, v, causal, window, q_offset, kv_chunk, scale):
+    out, _ = _flash_fwd(q, k, v, causal, window, q_offset, kv_chunk, scale, None)
+    return out
+
+
+def _flash_grouped_fwd(q, k, v, causal, window, q_offset, kv_chunk, scale):
+    out, lse = _flash_fwd(q, k, v, causal, window, q_offset, kv_chunk, scale, None)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_grouped_bwd(causal, window, q_offset, kv_chunk, scale, res, do):
+    from repro.launch import tuning
+
+    q, k, v, out, lse = res
+    B, T, KV, G, D = q.shape
+    S = k.shape[1]
+    Dv = v.shape[-1]
+    n_chunks = S // kv_chunk
+    qf = q.astype(jnp.float32) * scale
+    dof = do.astype(jnp.float32)
+    delta = jnp.sum(dof * out, axis=-1)                      # (B,T,KV,G)
+    kc = jnp.moveaxis(k.reshape(B, n_chunks, kv_chunk, KV, D), 1, 0)
+    vc = jnp.moveaxis(v.reshape(B, n_chunks, kv_chunk, KV, Dv), 1, 0)
+    q_pos = q_offset + jnp.arange(T)
+
+    def step(carry, inputs):
+        dq_acc, c_idx = carry
+        k_i, v_i = inputs
+        kv_pos = c_idx * kv_chunk + jnp.arange(kv_chunk)
+        s = jnp.einsum(
+            "btkgd,bckd->btkgc", qf, k_i.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+        s = s + _chunk_bias(q_pos, kv_pos, causal, window, None)
+        p = jnp.exp(s - lse[..., None])                      # recomputed
+        dv_i = jnp.einsum("btkgc,btkgv->bckv", p, dof)
+        dp = jnp.einsum("btkgv,bckv->btkgc", dof, v_i.astype(jnp.float32))
+        ds = p * (dp - delta[..., None])
+        dq_acc = dq_acc + scale * jnp.einsum(
+            "btkgc,bckd->btkgd", ds, k_i.astype(jnp.float32)
+        )
+        # qf already carries `scale`, so this IS scale * einsum(ds, q)
+        dk_i = jnp.einsum("btkgc,btkgd->bckd", ds, qf)
+        return (dq_acc, c_idx + 1), (dk_i, dv_i)
+
+    dq0 = jnp.zeros((B, T, KV, G, D), jnp.float32)
+    (dq, _), (dk_c, dv_c) = jax.lax.scan(
+        step, (dq0, 0), (kc, vc), unroll=tuning.scan_unroll()
+    )
+    dk = jnp.moveaxis(dk_c, 0, 1).reshape(B, S, KV, D)
+    dv = jnp.moveaxis(dv_c, 0, 1).reshape(B, S, KV, Dv)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+_flash_grouped.defvjp(_flash_grouped_fwd, _flash_grouped_bwd)
+
+
+def chunked_attention(
+    q: jnp.ndarray,            # (B, T, H, D)
+    k: jnp.ndarray,            # (B, S, KV, D)
+    v: jnp.ndarray,            # (B, S, KV, Dv)
+    *,
+    causal: bool = True,
+    window: int = 0,           # >0: local attention (causal, last `window`)
+    q_offset: int | jnp.ndarray = 0,  # absolute position of q[0] (decode)
+    kv_chunk: Optional[int] = None,
+    kv_valid_len: Optional[jnp.ndarray] = None,  # (B,) valid prefix of S
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """Online-softmax attention over KV chunks. Returns (B, T, H, Dv)."""
+    if kv_chunk is None:
+        from repro.launch import tuning
+
+        kv_chunk = tuning.kv_chunk()
+    B, T, H, D = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    G = H // KV  # q heads per kv head
+    if scale is None:
+        scale = 1.0 / math.sqrt(D)
+
+    kv_chunk = min(kv_chunk, S)
+    n_chunks = (S + kv_chunk - 1) // kv_chunk
+    pad = n_chunks * kv_chunk - S
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        if kv_valid_len is None:
+            kv_valid_len = jnp.full((B,), S, jnp.int32)
+
+    qg = q.reshape(B, T, KV, G, D)
+    if kv_valid_len is None and isinstance(q_offset, int):
+        # training/prefill path: memory-safe custom VJP
+        out = _flash_grouped(qg, k, v, causal, window, q_offset, kv_chunk, scale)
+    else:
+        out, _ = _flash_fwd(
+            qg, k, v, causal, window, q_offset, kv_chunk, scale, kv_valid_len
+        )
+    return out.reshape(B, T, H, Dv).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer (qwen3 / deepseek-7b / stablelm / yi / granite /
+# llava backbone / hubert encoder / recurrentgemma local blocks)
+# ---------------------------------------------------------------------------
+def gqa_init(rng, cfg, dtype=jnp.float32) -> Params:
+    hd = cfg.head_dim
+    k = jax.random.split(rng, 5)
+    p: Params = {
+        "wq": dense_init(k[0], cfg.d_model, cfg.n_heads * hd, dtype),
+        "wk": dense_init(k[1], cfg.d_model, cfg.n_kv_heads * hd, dtype),
+        "wv": dense_init(k[2], cfg.d_model, cfg.n_kv_heads * hd, dtype),
+        "wo": dense_init(k[3], cfg.n_heads * hd, cfg.d_model, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(hd, dtype)
+        p["k_norm"] = rmsnorm_init(hd, dtype)
+    return p
+
+
+def _project_qkv(x, p, cfg, positions):
+    B, T, _ = x.shape
+    hd = cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, T, cfg.n_heads, hd)
+    k = (x @ p["wk"]).reshape(B, T, cfg.n_kv_heads, hd)
+    v = (x @ p["wv"]).reshape(B, T, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    if cfg.positional == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_forward(
+    x: jnp.ndarray,
+    p: Params,
+    cfg,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    positions: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """Full-sequence forward (training / prefill without cache return)."""
+    B, T, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(T)
+    q, k, v = _project_qkv(x, p, cfg, positions)
+    out = chunked_attention(q, k, v, causal=causal, window=window)
+    return out.reshape(B, T, -1) @ p["wo"]
+
+
+def gqa_prefill(
+    x: jnp.ndarray, p: Params, cfg, cache_len: int, *, window: int = 0
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Prefill: forward + return KV cache padded/trimmed to ``cache_len``."""
+    B, T, _ = x.shape
+    positions = jnp.arange(T)
+    q, k, v = _project_qkv(x, p, cfg, positions)
+    out = chunked_attention(q, k, v, causal=True, window=window)
+    out = out.reshape(B, T, -1) @ p["wo"]
+    if window > 0:
+        cache_len = min(cache_len, window)
+        k_c, v_c = k[:, -cache_len:], v[:, -cache_len:]
+        if T < cache_len:
+            padw = ((0, 0), (0, cache_len - T), (0, 0), (0, 0))
+            k_c, v_c = jnp.pad(k_c, padw), jnp.pad(v_c, padw)
+    else:
+        padw = ((0, 0), (0, max(cache_len - T, 0)), (0, 0), (0, 0))
+        k_c = jnp.pad(k[:, :cache_len], padw)
+        v_c = jnp.pad(v[:, :cache_len], padw)
+    cache = {"k": k_c, "v": v_c}
+    return out, cache
+
+
+def gqa_decode_step(
+    x: jnp.ndarray,            # (B, 1, d_model)
+    p: Params,
+    cfg,
+    cache: Dict[str, jnp.ndarray],
+    position: jnp.ndarray,     # (B,) current absolute position
+    *,
+    window: int = 0,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """One decode step with an in-place dense KV cache update.
+
+    Full attention: cache slot = position. Local attention: ring buffer of
+    size ``window`` (slot = position % window).
+    """
+    B = x.shape[0]
+    q, k, v = _project_qkv(x, p, cfg, position[:, None])
+    S = cache["k"].shape[1]
+    slot = jnp.where(window > 0, position % jnp.maximum(window, 1), position)
+    batch_idx = jnp.arange(B)
+    k_cache = cache["k"].at[batch_idx, slot].set(k[:, 0])
+    v_cache = cache["v"].at[batch_idx, slot].set(v[:, 0])
+    # Ring buffer (window > 0): every resident slot is within the window
+    # by construction; validity = min(position+1, window) slots.
+    valid = jnp.minimum(position + 1, S) if window > 0 else position + 1
+
+    from . import shardctx
+
+    out = None
+    ov = shardctx.get("decode_attention")
+    if ov is not None:  # flash-decoding over a sequence-sharded cache
+        out = ov(q, k_cache, v_cache, valid,
+                 1.0 / math.sqrt(cfg.head_dim))
+    if out is None:
+        out = chunked_attention(
+            q, k_cache, v_cache, causal=False, kv_valid_len=valid
+        )
+    out = out.reshape(B, 1, -1) @ p["wo"]
+    return out, {"k": k_cache, "v": v_cache}
+
+
+# ---------------------------------------------------------------------------
+# MLA — Multi-head Latent Attention (deepseek-v2-236b)
+#
+# Prefill uses the expanded form with per-chunk K/V expansion; decode uses
+# the "absorbed" form over the compressed latent cache (c_kv 512 + rope
+# 64 per token), which is what makes MLA prefix blocks ~9x smaller than
+# MHA-equivalent in the shared KV cache.
+# ---------------------------------------------------------------------------
+def mla_init(rng, cfg, dtype=jnp.float32) -> Params:
+    k = jax.random.split(rng, 10)
+    H = cfg.n_heads
+    dq = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+    p: Params = {
+        # query path (low-rank as in DeepSeek-V2)
+        "wq_a": dense_init(k[0], cfg.d_model, cfg.q_lora_rank, dtype),
+        "q_a_norm": rmsnorm_init(cfg.q_lora_rank, dtype),
+        "wq_b": dense_init(k[1], cfg.q_lora_rank, H * dq, dtype),
+        # kv path: compress to latent + decoupled rope key
+        "wkv_a": dense_init(
+            k[2], cfg.d_model, cfg.kv_lora_rank + cfg.qk_rope_head_dim, dtype
+        ),
+        "kv_a_norm": rmsnorm_init(cfg.kv_lora_rank, dtype),
+        "w_uk": dense_init(
+            k[3], cfg.kv_lora_rank, H * cfg.qk_nope_head_dim, dtype
+        ),
+        "w_uv": dense_init(k[4], cfg.kv_lora_rank, H * cfg.v_head_dim, dtype),
+        "wo": dense_init(k[5], H * cfg.v_head_dim, cfg.d_model, dtype),
+    }
+    return p
+
+
+def _mla_q(x, p, cfg, positions):
+    B, T, _ = x.shape
+    H = cfg.n_heads
+    q = rmsnorm(x @ p["wq_a"], p["q_a_norm"], cfg.norm_eps) @ p["wq_b"]
+    q = q.reshape(B, T, H, cfg.qk_nope_head_dim + cfg.qk_rope_head_dim)
+    q_nope = q[..., : cfg.qk_nope_head_dim]
+    q_rope = apply_rope(q[..., cfg.qk_nope_head_dim :], positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_latent(x, p, cfg, positions):
+    """Compressed latent c_kv (B,T,R) + rotary key k_rope (B,T,1,Dr)."""
+    kv = x @ p["wkv_a"]
+    c_kv = rmsnorm(kv[..., : cfg.kv_lora_rank], p["kv_a_norm"], cfg.norm_eps)
+    k_rope = kv[..., cfg.kv_lora_rank :][:, :, None, :]  # single shared head
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)
+    return c_kv, k_rope
+
+
+def mla_forward(
+    x: jnp.ndarray, p: Params, cfg, *, causal: bool = True,
+    positions: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """Training/prefill forward, expanded K/V (chunked over sequence)."""
+    B, T, _ = x.shape
+    H = cfg.n_heads
+    if positions is None:
+        positions = jnp.arange(T)
+    q_nope, q_rope = _mla_q(x, p, cfg, positions)
+    c_kv, k_rope = _mla_latent(x, p, cfg, positions)
+    # Expand: k_nope (B,T,H,Dn), v (B,T,H,Dv) — chunked_attention streams
+    # over KV chunks, so the expansion is materialized once (T*(H Dn+H Dv)).
+    k_nope = (c_kv @ p["w_uk"]).reshape(B, T, H, cfg.qk_nope_head_dim)
+    v = (c_kv @ p["w_uv"]).reshape(B, T, H, cfg.v_head_dim)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (B, T, H, cfg.qk_rope_head_dim))],
+        axis=-1,
+    )
+    out = chunked_attention(q, k, v, causal=causal)
+    return out.reshape(B, T, -1) @ p["wo"]
+
+
+def mla_prefill(
+    x: jnp.ndarray, p: Params, cfg, cache_len: int
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    B, T, _ = x.shape
+    positions = jnp.arange(T)
+    out = mla_forward(x, p, cfg, causal=True, positions=positions)
+    c_kv, k_rope = _mla_latent(x, p, cfg, positions)
+    pad = max(cache_len - T, 0)
+    cache = {
+        "c_kv": jnp.pad(c_kv[:, :cache_len], ((0, 0), (0, pad), (0, 0))),
+        "k_rope": jnp.pad(
+            k_rope[:, :cache_len, 0, :], ((0, 0), (0, pad), (0, 0))
+        ),
+    }
+    return out, cache
+
+
+def mla_decode_step(
+    x: jnp.ndarray,            # (B, 1, d)
+    p: Params,
+    cfg,
+    cache: Dict[str, jnp.ndarray],  # c_kv (B,S,R), k_rope (B,S,Dr)
+    position: jnp.ndarray,     # (B,)
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Absorbed-form decode: attention runs in the latent space.
+
+    score_h(s) = q_nope_h . (W_uk_h c_s) + q_rope_h . k_rope_s
+               = (W_uk_h^T q_nope_h) . c_s + q_rope_h . k_rope_s
+    out_h = (sum_s p_s c_s) @ W_uv_h
+    """
+    B = x.shape[0]
+    H = cfg.n_heads
+    R = cfg.kv_lora_rank
+    q_nope, q_rope = _mla_q(x, p, cfg, position[:, None])  # (B,1,H,*)
+    c_new, k_rope_new = _mla_latent(x, p, cfg, position[:, None])
+    batch_idx = jnp.arange(B)
+    c_cache = cache["c_kv"].at[batch_idx, position].set(c_new[:, 0])
+    r_cache = cache["k_rope"].at[batch_idx, position].set(k_rope_new[:, 0, 0])
+
+    w_uk = p["w_uk"].reshape(R, H, cfg.qk_nope_head_dim)
+    q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0], w_uk)  # absorb W_uk
+    # latent MQA: queries (B,H,R+Dr) against keys (B,S,R+Dr), kv_heads=1
+    q_cat = jnp.concatenate([q_lat, q_rope[:, 0]], axis=-1)[:, None]  # (B,1,H,*)
+    k_cat = jnp.concatenate([c_cache, r_cache], axis=-1)[:, :, None, :]
+    # scores are the same dot products as the expanded form, whose query
+    # dim is (nope + rope), NOT the latent dim:
+    mla_scale = 1.0 / math.sqrt(cfg.qk_nope_head_dim + cfg.qk_rope_head_dim)
+
+    from . import shardctx
+
+    o_lat = None
+    ov = shardctx.get("decode_attention")
+    if ov is not None:  # flash-decoding over the sequence-sharded latent
+        o_lat = ov(q_cat, k_cat, c_cache[:, :, None, :], position + 1,
+                   mla_scale)
+    if o_lat is None:
+        o_lat = chunked_attention(
+            q_cat, k_cat, c_cache[:, :, None, :], causal=False,
+            kv_valid_len=position + 1, scale=mla_scale,
+        )  # (B,1,H,R)
+    w_uv = p["w_uv"].reshape(R, H, cfg.v_head_dim)
+    out = jnp.einsum("bhr,rhv->bhv", o_lat[:, 0], w_uv).reshape(B, 1, -1)
+    out = out @ p["wo"]
+    return out, {"c_kv": c_cache, "k_rope": r_cache}

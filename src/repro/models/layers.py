@@ -1,0 +1,154 @@
+"""Foundational layers shared by every architecture: RMSNorm, RoPE,
+linear/embedding initializers, SwiGLU MLP, conv1d. Pure functional JAX —
+params are plain dict pytrees, apply functions are jit/scan friendly.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, jnp.ndarray]
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+def dense_init(rng, in_dim: int, out_dim: int, dtype=jnp.float32) -> jnp.ndarray:
+    """Truncated-normal fan-in init (the MaxText/T5 default)."""
+    std = 1.0 / math.sqrt(in_dim)
+    return std * jax.random.truncated_normal(
+        rng, -2.0, 2.0, (in_dim, out_dim), dtype=jnp.float32
+    ).astype(dtype)
+
+
+def embed_init(rng, vocab: int, dim: int, dtype=jnp.float32) -> jnp.ndarray:
+    # 1/sqrt(dim) scale keeps tied-head logits O(1) at init.
+    return (
+        jax.random.normal(rng, (vocab, dim), dtype=jnp.float32) / math.sqrt(dim)
+    ).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm (+ optional per-head qk-norm)
+# ---------------------------------------------------------------------------
+def rmsnorm_init(dim: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm(x: jnp.ndarray, p: Params, eps: float = 1e-6) -> jnp.ndarray:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * p["scale"].astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+def rope_frequencies(head_dim: int, theta: float = 10000.0) -> jnp.ndarray:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(
+    x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10000.0
+) -> jnp.ndarray:
+    """x: (..., seq, heads, head_dim); positions: (..., seq) int32.
+
+    Split-half convention (as Llama/Qwen): rotate (x1, x2) ->
+    (x1 cos - x2 sin, x2 cos + x1 sin).
+    """
+    half = x.shape[-1] // 2
+    freqs = rope_frequencies(x.shape[-1], theta)  # (half,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, half)
+    cos = jnp.cos(angles)[..., None, :]  # (..., seq, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate(
+        [x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP (the FFN used by every assigned dense arch)
+# ---------------------------------------------------------------------------
+def mlp_init(rng, d_model: int, d_ff: int, dtype=jnp.float32) -> Params:
+    k1, k2, k3 = jax.random.split(rng, 3)
+    return {
+        "w_gate": dense_init(k1, d_model, d_ff, dtype),
+        "w_up": dense_init(k2, d_model, d_ff, dtype),
+        "w_down": dense_init(k3, d_ff, d_model, dtype),
+    }
+
+
+def mlp_apply(x: jnp.ndarray, p: Params) -> jnp.ndarray:
+    gate = jax.nn.silu(x @ p["w_gate"])
+    return (gate * (x @ p["w_up"])) @ p["w_down"]
+
+
+def gelu_mlp_init(rng, d_model: int, d_ff: int, dtype=jnp.float32) -> Params:
+    k1, k2 = jax.random.split(rng, 2)
+    return {
+        "w_up": dense_init(k1, d_model, d_ff, dtype),
+        "w_down": dense_init(k2, d_ff, d_model, dtype),
+    }
+
+
+def gelu_mlp_apply(x: jnp.ndarray, p: Params) -> jnp.ndarray:
+    return jax.nn.gelu(x @ p["w_up"], approximate=True) @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Causal temporal conv1d (RG-LRU blocks; HuBERT positional conv)
+# ---------------------------------------------------------------------------
+def conv1d_init(rng, width: int, kernel: int, dtype=jnp.float32) -> Params:
+    std = 1.0 / math.sqrt(kernel)
+    w = std * jax.random.truncated_normal(rng, -2.0, 2.0, (kernel, width))
+    return {"w": w.astype(dtype), "b": jnp.zeros((width,), dtype)}
+
+
+def causal_conv1d(x: jnp.ndarray, p: Params) -> jnp.ndarray:
+    """Depthwise causal conv. x: (B, T, W); kernel (K, W)."""
+    k = p["w"].shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(k):  # k is small (4); unrolled adds, fusion-friendly
+        out = out + pad[:, i : i + x.shape[1], :] * p["w"][i]
+    return out + p["b"]
+
+
+def causal_conv1d_step(
+    x_t: jnp.ndarray, state: jnp.ndarray, p: Params
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Single decode step. x_t: (B, W); state: (B, K-1, W) past inputs."""
+    k = p["w"].shape[0]
+    window = jnp.concatenate([state, x_t[:, None, :]], axis=1)  # (B, K, W)
+    out = jnp.einsum("bkw,kw->bw", window, p["w"]) + p["b"]
+    return out, window[:, 1:, :]
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+def softmax_cross_entropy(
+    logits: jnp.ndarray, labels: jnp.ndarray, mask: Optional[jnp.ndarray] = None,
+    z_loss: float = 0.0,
+) -> jnp.ndarray:
+    """Mean CE over masked positions; logits (..., V) fp32, labels (...)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = lse - ll
+    if z_loss > 0.0:
+        loss = loss + z_loss * jnp.square(lse)
+    if mask is None:
+        return loss.mean()
+    mask = mask.astype(jnp.float32)
+    return (loss * mask).sum() / jnp.maximum(mask.sum(), 1.0)

@@ -1,0 +1,163 @@
+"""Mixture-of-Experts FFN (deepseek-v2-236b, granite-moe-1b-a400m).
+
+Dispatch is **gather/scatter based** (cumsum positions + scatter into
+(E, C, d) expert buffers), not one-hot-matmul based: a dense dispatch
+einsum costs O(top_k * cf * T^2 * d) FLOPs — ~675x the useful expert
+compute at deepseek-v2 train_4k scale — and would destroy the
+MODEL_FLOPS / HLO_FLOPS roofline ratio. Gathers/scatters cost bytes, not
+FLOPs.
+
+Sharding (applied in launch/sharding.py): experts E over the `model`
+axis; token/capacity dims over (`pod`,`data`); expert weights at rest are
+additionally sharded over `data` on d_ff (ZeRO-3 style for the expert
+tensors only) because 160x(5120x1536x3)x60 layers does not fit TP-16
+alone. The per-layer all-gather this induces is part of the collective
+roofline term (see EXPERIMENTS.md).
+
+DeepSeek-V2 details implemented: 2 shared experts always active, 160
+routed top-6, softmax router over routed experts only.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Params, dense_init, mlp_apply, mlp_init
+
+
+def moe_init(rng, cfg, dtype=jnp.float32) -> Params:
+    E, d, f = cfg.n_experts, cfg.d_model, cfg.moe_d_ff
+    keys = jax.random.split(rng, 5)
+    p: Params = {
+        "router": dense_init(keys[0], d, E, jnp.float32),  # router in fp32
+        "w_gate": jax.vmap(lambda k: dense_init(k, d, f, dtype))(
+            jax.random.split(keys[1], E)
+        ),
+        "w_up": jax.vmap(lambda k: dense_init(k, d, f, dtype))(
+            jax.random.split(keys[2], E)
+        ),
+        "w_down": jax.vmap(lambda k: dense_init(k, f, d, dtype))(
+            jax.random.split(keys[3], E)
+        ),
+    }
+    if cfg.n_shared_experts > 0:
+        p["shared"] = mlp_init(
+            keys[4], d, cfg.moe_d_ff * cfg.n_shared_experts, dtype
+        )
+    return p
+
+
+def moe_apply(
+    x: jnp.ndarray,            # (B, T, d)
+    p: Params,
+    cfg,
+    *,
+    capacity_factor: float = 1.25,
+    no_drop: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (output (B,T,d), aux_load_balance_loss scalar).
+
+    ``no_drop=True`` sets capacity C = N (each expert can receive at most
+    one assignment per token, so C = N is provably drop-free) — used on
+    the decode path where N is small and capacity drops would make decode
+    diverge from the parallel forward.
+    """
+    B, T, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    N = B * T
+    xf = x.reshape(N, d)
+
+    from . import shardctx
+
+    xf = shardctx.constrain("moe_nd", xf)
+    logits = (xf.astype(jnp.float32)) @ p["router"]          # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, k)                    # (N, k)
+    if cfg.moe_renormalize:
+        top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # Load-balance aux loss (Switch-style): E * sum_e f_e * m_e
+    assign = jax.nn.one_hot(top_i[:, 0], E, dtype=jnp.float32)  # top-1 frac
+    f_e = assign.mean(axis=0)
+    m_e = probs.mean(axis=0)
+    aux = E * jnp.sum(f_e * m_e)
+
+    # --- capacity + positions -------------------------------------------
+    # Positions are assigned per CHUNK of tokens (chunk count = shard
+    # count, installed by the launcher): a global cumsum over the sharded
+    # token dim would serialize across shards and force XLA to replicate
+    # every downstream (N, d) tensor (observed: 21.5 GB f32 x hundreds at
+    # deepseek-v2 scale). Per-chunk capacity C/chunks is the standard
+    # "per-device expert capacity" semantics of large-scale MoE systems.
+    chunks = int(shardctx.param("moe_chunks", 1))
+    if N % chunks != 0 or chunks < 1:
+        chunks = 1
+    Nc = N // chunks
+    if no_drop:
+        C = N
+    else:
+        C = int(max(1, round(capacity_factor * k * N / E)))
+    C = max(chunks * max(C // chunks, 1), chunks)  # divisible per-chunk
+    Cc = C // chunks
+
+    ti = top_i.reshape(chunks, Nc, k)
+    pos = jnp.zeros((chunks, Nc, k), jnp.int32)
+    counts = jnp.zeros((chunks, E), jnp.int32)
+    for j in range(k):
+        oh = jax.nn.one_hot(ti[:, :, j], E, dtype=jnp.int32)   # (ch, Nc, E)
+        oh = shardctx.constrain("moe_cne", oh)
+        within = jnp.cumsum(oh, axis=1) - oh                   # before token
+        pos = pos.at[:, :, j].set(
+            jnp.take_along_axis(within, ti[:, :, j : j + 1], axis=2)[:, :, 0]
+            + jnp.take_along_axis(counts, ti[:, :, j], axis=1)
+        )
+        counts = counts + oh.sum(axis=1)
+    pos = pos.reshape(N, k)
+    keep = pos < Cc                                            # (N, k)
+    chunk_of = (
+        jnp.arange(N, dtype=jnp.int32)[:, None] // Nc
+    )                                                          # (N, 1)
+    slot_in_e = chunk_of * Cc + pos
+    dest = jnp.where(keep, top_i * C + slot_in_e, E * C)       # overflow slot
+
+    # --- dispatch: GATHER-ONLY ------------------------------------------
+    # Scatters over (tokens, d_model)-sized buffers lower to
+    # sharding-hostile HLO (per-element u32 index broadcasts, replicated
+    # f32 buffers: ~450 GB/device at deepseek-v2 scale). Instead invert
+    # the routing with an int32-only scatter (slot -> token id, 4 bytes
+    # per slot), then move activations exclusively with gathers, which
+    # SPMD shards cleanly under the (E->model, C->data) constraints.
+    # Reshapes between differently-sharded layouts are also avoided: the
+    # combine gathers from the 2-D (E, C, d) expert output directly.
+    token_ids = jnp.arange(N, dtype=jnp.int32)
+    slot_tok = jnp.zeros((E * C + 1,), jnp.int32)  # sentinel: token 0
+    for j in range(k):
+        slot_tok = slot_tok.at[dest[:, j]].set(token_ids, mode="drop")
+    slot_tok = shardctx.constrain("moe_ec", slot_tok[: E * C].reshape(E, C))
+    # empty slots read token 0: harmless garbage compute — those slots
+    # are never gathered back in the combine step.
+    xe = shardctx.constrain("moe_ecd", jnp.take(xf, slot_tok, axis=0))
+
+    # --- expert FFN (SwiGLU), batched over E ----------------------------
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, p["w_gate"])) * jnp.einsum(
+        "ecd,edf->ecf", xe, p["w_up"]
+    )
+    h = shardctx.constrain("moe_ecf", h)
+    ye = jnp.einsum("ecf,efd->ecd", h, p["w_down"])            # (E, C, d)
+    ye = shardctx.constrain("moe_ecd", ye)
+
+    # --- combine: one 2-D gather per routing choice, accumulated --------
+    out = jnp.zeros((N, d), jnp.float32)
+    for j in range(k):
+        w_j = (top_w[:, j] * keep[:, j]).astype(jnp.float32)   # 0 if dropped
+        slot = jnp.minimum(dest[:, j], E * C - 1)
+        g = shardctx.constrain("moe_nd", ye[slot // C, slot % C])
+        out = out + g.astype(jnp.float32) * w_j[:, None]
+    out = out.astype(x.dtype)
+
+    if cfg.n_shared_experts > 0:
+        out = out + mlp_apply(xf, p["shared"])
+    return out.reshape(B, T, d), aux

@@ -1,0 +1,124 @@
+"""RG-LRU recurrent block (recurrentgemma-2b, arXiv:2402.19427).
+
+The Griffin/RecurrentGemma temporal-mixing block:
+
+    x -> [linear x-branch, linear gate-branch]
+    x-branch -> causal conv1d(4) -> input gate i_t, recurrence gate r_t
+    a_t = exp(-c * softplus(Lambda) * sigmoid(r_t))        (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+    out = o-gate(gate-branch) * h -> linear down
+
+The diagonal linear recurrence is evaluated with
+``jax.lax.associative_scan`` (log-depth, sequence-shardable) for
+train/prefill and as an O(1) state update for decode — this is the
+sub-quadratic property that makes recurrentgemma a ``long_500k``-capable
+architecture.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Params, causal_conv1d, causal_conv1d_step, conv1d_init, dense_init
+
+_C = 8.0  # RG-LRU temperature constant (paper value)
+
+
+def rglru_init(rng, cfg, dtype=jnp.float32) -> Params:
+    W = cfg.lru_width
+    k = jax.random.split(rng, 7)
+    # Lambda init so that a^c in [0.9, 0.999] (paper's init range)
+    u = jax.random.uniform(k[0], (W,), minval=0.9, maxval=0.999)
+    log_lambda = jnp.log(jnp.expm1(-jnp.log(u) / _C))  # softplus^-1
+    return {
+        "wx": dense_init(k[1], cfg.d_model, W, dtype),
+        "wgate": dense_init(k[2], cfg.d_model, W, dtype),
+        "conv": conv1d_init(k[3], W, cfg.conv1d_size, dtype),
+        "w_input_gate": dense_init(k[4], W, W, dtype),
+        "w_rec_gate": dense_init(k[5], W, W, dtype),
+        "log_lambda": log_lambda.astype(jnp.float32),
+        "w_out": dense_init(k[6], W, cfg.d_model, dtype),
+    }
+
+
+def _gates(xc: jnp.ndarray, p: Params) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """log a_t (fp32), input-gated x, and sqrt(1-a^2) multiplier."""
+    r = jax.nn.sigmoid((xc @ p["w_rec_gate"]).astype(jnp.float32))
+    i = jax.nn.sigmoid(xc @ p["w_input_gate"])
+    log_a = -_C * jax.nn.softplus(p["log_lambda"]) * r
+    a2 = jnp.exp(2.0 * log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - a2, 1e-12))
+    return log_a, i, beta
+
+
+def rglru_scan(xc: jnp.ndarray, p: Params, h0=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence recurrence. xc: (B, T, W) post-conv. Returns (h, h_T)."""
+    log_a, i, beta = _gates(xc, p)
+    gated = (beta * (i * xc).astype(jnp.float32))
+    a = jnp.exp(log_a)
+    if h0 is not None:
+        # fold the carried state into the first step
+        gated = gated.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    return h.astype(xc.dtype), h[:, -1]
+
+
+def rglru_step(
+    x_t: jnp.ndarray, p: Params, h: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Single decode step. x_t: (B, W) post-conv; h: (B, W) fp32 state."""
+    log_a, i, beta = _gates(x_t, p)
+    h_new = jnp.exp(log_a) * h + beta * (i * x_t).astype(jnp.float32)
+    return h_new.astype(x_t.dtype), h_new
+
+
+def rglru_block_forward(
+    x: jnp.ndarray, p: Params, cfg
+) -> jnp.ndarray:
+    """Train/prefill (no state in, no state out)."""
+    xb = x @ p["wx"]
+    gate = jax.nn.gelu(x @ p["wgate"], approximate=True)
+    xc = causal_conv1d(xb, p["conv"])
+    h, _ = rglru_scan(xc, p)
+    return (gate * h) @ p["w_out"]
+
+
+def rglru_block_prefill(
+    x: jnp.ndarray, p: Params, cfg
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    B, T, _ = x.shape
+    xb = x @ p["wx"]
+    gate = jax.nn.gelu(x @ p["wgate"], approximate=True)
+    xc = causal_conv1d(xb, p["conv"])
+    h, h_last = rglru_scan(xc, p)
+    K = cfg.conv1d_size
+    conv_state = xb[:, -(K - 1):, :]
+    pad = K - 1 - conv_state.shape[1]
+    if pad > 0:
+        conv_state = jnp.pad(conv_state, ((0, 0), (pad, 0), (0, 0)))
+    out = (gate * h) @ p["w_out"]
+    return out, {"h": h_last, "conv": conv_state}
+
+
+def rglru_block_step(
+    x: jnp.ndarray,            # (B, 1, d_model)
+    p: Params,
+    cfg,
+    state: Dict[str, jnp.ndarray],
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    x_t = x[:, 0, :]
+    xb = x_t @ p["wx"]
+    gate = jax.nn.gelu(x_t @ p["wgate"], approximate=True)
+    xc, conv_state = causal_conv1d_step(xb, state["conv"], p["conv"])
+    h_out, h_new = rglru_step(xc, p, state["h"])
+    out = (gate * h_out) @ p["w_out"]
+    return out[:, None, :], {"h": h_new, "conv": conv_state}

@@ -1,0 +1,492 @@
+"""The configurable model skeleton covering all 10 assigned archs.
+
+One class, pattern-driven: ``cfg.block_pattern`` tiles block kinds over
+layers (attn / local / rglru / mlstm / slstm); the attention kind (GQA vs
+MLA), FFN kind (dense vs MoE), encoder vs decoder, and modality frontends
+(audio stub + conv-pos, vision projector) are all config-selected.
+
+Layers are evaluated with ``lax.scan`` over *tiles* of stacked params
+(HLO stays one-tile-sized regardless of depth; 60-layer yi-34b compiles
+in seconds). Remainder layers (depth not divisible by the pattern) run
+unscanned. ``remat`` wraps the tile body in ``jax.checkpoint``.
+
+API:
+  init(rng) -> params
+  loss(params, batch) -> (scalar, metrics)
+  forward_logits(params, batch) -> logits          # full sequence
+  init_cache(batch_size, cache_len) -> caches      # zeroed decode cache
+  prefill(params, batch, cache_len) -> (last_logits, caches)
+  decode_step(params, tokens, caches, position) -> (logits, caches)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import moe as moe_mod
+from . import rglru as rglru_mod
+from . import xlstm as xlstm_mod
+from .layers import (
+    Params,
+    dense_init,
+    embed_init,
+    mlp_apply,
+    mlp_init,
+    rmsnorm,
+    rmsnorm_init,
+    softmax_cross_entropy,
+)
+
+
+class TransformerLM:
+    def __init__(
+        self,
+        cfg,
+        *,
+        param_dtype=jnp.float32,
+        compute_dtype=jnp.bfloat16,
+        remat: bool = False,
+        remat_policy: str = "dots",
+        residual_constraint=None,
+        scan_unroll: bool = False,
+        cost_repeat: int = 1,
+    ) -> None:
+        self.cfg = cfg
+        self.param_dtype = param_dtype
+        self.compute_dtype = compute_dtype
+        self.remat = remat
+        self.remat_policy = remat_policy
+        # Cost-accounting hooks (see launch/dryrun.py): XLA's
+        # HloCostAnalysis counts a while-loop body ONCE regardless of trip
+        # count, so the dry-run compiles (a) an unrolled variant on small
+        # configs to validate the analytic cost model, and (b) a
+        # body-doubled variant (cost_repeat=2) whose cost delta isolates
+        # the per-tile loop-body contribution for collectives/bytes.
+        self.scan_unroll = scan_unroll
+        self.cost_repeat = cost_repeat
+        # Optional sharding constraint applied to the residual stream at
+        # tile boundaries (Megatron-style sequence parallelism: the scan
+        # carry — the activation checkpoint — stays sequence-sharded, and
+        # XLA inserts all-gather / reduce-scatter around attention/FFN).
+        self.residual_constraint = residual_constraint or (lambda x: x)
+        G = len(cfg.block_pattern)
+        self.n_tiles = cfg.n_layers // G
+        self.n_tail = cfg.n_layers % G
+        self.tail_kinds = cfg.block_pattern[: self.n_tail]
+
+    # ------------------------------------------------------------------
+    # init
+    # ------------------------------------------------------------------
+    def _block_init(self, rng, kind: str) -> Params:
+        cfg, dt = self.cfg, self.param_dtype
+        keys = jax.random.split(rng, 3)
+        p: Params = {"ln1": rmsnorm_init(cfg.d_model, dt)}
+        if kind in ("attn", "local"):
+            if cfg.attention == "mla" and kind == "attn":
+                p["attn"] = attn.mla_init(keys[0], cfg, dt)
+            else:
+                p["attn"] = attn.gqa_init(keys[0], cfg, dt)
+            p["ln2"] = rmsnorm_init(cfg.d_model, dt)
+            if cfg.moe and kind == "attn":
+                p["ffn"] = moe_mod.moe_init(keys[1], cfg, dt)
+            else:
+                p["ffn"] = mlp_init(keys[1], cfg.d_model, cfg.d_ff, dt)
+        elif kind == "rglru":
+            p["core"] = rglru_mod.rglru_init(keys[0], cfg, dt)
+            p["ln2"] = rmsnorm_init(cfg.d_model, dt)
+            p["ffn"] = mlp_init(keys[1], cfg.d_model, cfg.d_ff, dt)
+        elif kind == "mlstm":
+            p["core"] = xlstm_mod.mlstm_init(keys[0], cfg, dt)
+        elif kind == "slstm":
+            p["core"] = xlstm_mod.slstm_init(keys[0], cfg, dt)
+        else:
+            raise ValueError(f"unknown block kind {kind!r}")
+        return p
+
+    def _tile_init(self, rng) -> Params:
+        keys = jax.random.split(rng, len(self.cfg.block_pattern))
+        return {
+            f"g{g}": self._block_init(keys[g], kind)
+            for g, kind in enumerate(self.cfg.block_pattern)
+        }
+
+    def init(self, rng) -> Params:
+        cfg, dt = self.cfg, self.param_dtype
+        k = jax.random.split(rng, 8)
+        params: Params = {}
+        if cfg.modality == "audio":
+            params["frontend_proj"] = dense_init(k[0], cfg.d_model, cfg.d_model, dt)
+            params["conv_pos"] = {
+                "w": 0.02
+                * jax.random.normal(k[1], (128, cfg.d_model), jnp.float32).astype(dt),
+                "b": jnp.zeros((cfg.d_model,), dt),
+            }
+            params["mask_embed"] = 0.02 * jax.random.normal(
+                k[2], (cfg.d_model,), jnp.float32
+            ).astype(dt)
+        else:
+            params["embed"] = embed_init(k[0], cfg.vocab_size, cfg.d_model, dt)
+        if cfg.modality == "vision_text":
+            params["projector"] = {
+                "w1": dense_init(k[3], cfg.vision_dim, cfg.d_model, dt),
+                "w2": dense_init(k[4], cfg.d_model, cfg.d_model, dt),
+            }
+        if self.n_tiles > 0:
+            tile_keys = jax.random.split(k[5], self.n_tiles)
+            params["blocks"] = jax.vmap(self._tile_init)(tile_keys)
+        if self.n_tail:
+            tk = jax.random.split(k[6], self.n_tail)
+            params["tail"] = [
+                self._block_init(tk[i], kind)
+                for i, kind in enumerate(self.tail_kinds)
+            ]
+        params["final_norm"] = rmsnorm_init(cfg.d_model, dt)
+        if not cfg.tie_embeddings:
+            params["lm_head"] = dense_init(k[7], cfg.d_model, cfg.vocab_size, dt)
+        return params
+
+    # ------------------------------------------------------------------
+    # block application (shared by forward / prefill / decode)
+    # ------------------------------------------------------------------
+    def _moe(self, h, p_ffn):
+        """MoE FFN: launcher-installed expert-parallel path (shard_map
+        all-to-all, see launch/moe_ep.py) when available, else the pure
+        jnp gather dispatch."""
+        from . import shardctx
+
+        override = shardctx.get("moe_apply")
+        if override is not None:
+            res = override(
+                h, p_ffn, self.cfg, capacity_factor=self.cfg.capacity_factor
+            )
+            if res is not None:
+                return res
+        return moe_mod.moe_apply(
+            h, p_ffn, self.cfg, capacity_factor=self.cfg.capacity_factor
+        )
+
+    def _block_forward(self, x, p, kind: str):
+        cfg = self.cfg
+        aux = jnp.zeros((), jnp.float32)
+        h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+        if kind in ("attn", "local"):
+            window = cfg.window if kind == "local" else 0
+            causal = not cfg.is_encoder
+            if cfg.attention == "mla" and kind == "attn":
+                a = attn.mla_forward(h, p["attn"], cfg, causal=causal)
+            else:
+                a = attn.gqa_forward(h, p["attn"], cfg, causal=causal, window=window)
+            x = x + a
+            h2 = rmsnorm(x, p["ln2"], cfg.norm_eps)
+            if cfg.moe and kind == "attn":
+                f, aux = self._moe(h2, p["ffn"])
+            else:
+                f = mlp_apply(h2, p["ffn"])
+            x = x + f
+        elif kind == "rglru":
+            x = x + rglru_mod.rglru_block_forward(h, p["core"], cfg)
+            h2 = rmsnorm(x, p["ln2"], cfg.norm_eps)
+            x = x + mlp_apply(h2, p["ffn"])
+        elif kind == "mlstm":
+            x = x + xlstm_mod.mlstm_block_forward(h, p["core"], cfg)
+        elif kind == "slstm":
+            x = x + xlstm_mod.slstm_block_forward(h, p["core"], cfg)
+        return x, aux
+
+    def _block_prefill(self, x, p, kind: str, cache_len: int):
+        cfg = self.cfg
+        h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+        if kind in ("attn", "local"):
+            window = cfg.window if kind == "local" else 0
+            if cfg.attention == "mla" and kind == "attn":
+                a, cache = attn.mla_prefill(h, p["attn"], cfg, cache_len)
+            else:
+                a, cache = attn.gqa_prefill(
+                    h, p["attn"], cfg, cache_len, window=window
+                )
+                if window > 0:
+                    # ring-buffer alignment: token at abs pos q sits at
+                    # slot q % window (see gqa_decode_step)
+                    T = x.shape[1]
+                    W = cache["k"].shape[1]
+                    if T >= W:
+                        shift = (T - W) % W
+                        cache = {
+                            "k": jnp.roll(cache["k"], shift, axis=1),
+                            "v": jnp.roll(cache["v"], shift, axis=1),
+                        }
+            x = x + a
+            h2 = rmsnorm(x, p["ln2"], cfg.norm_eps)
+            if cfg.moe and kind == "attn":
+                f, _ = self._moe(h2, p["ffn"])
+            else:
+                f = mlp_apply(h2, p["ffn"])
+            x = x + f
+        elif kind == "rglru":
+            a, cache = rglru_mod.rglru_block_prefill(h, p["core"], cfg)
+            x = x + a
+            h2 = rmsnorm(x, p["ln2"], cfg.norm_eps)
+            x = x + mlp_apply(h2, p["ffn"])
+        elif kind == "mlstm":
+            a, cache = xlstm_mod.mlstm_block_prefill(h, p["core"], cfg)
+            x = x + a
+        elif kind == "slstm":
+            a, cache = xlstm_mod.slstm_block_prefill(h, p["core"], cfg)
+            x = x + a
+        return x, cache
+
+    def _block_decode(self, x, p, kind: str, cache, position):
+        cfg = self.cfg
+        h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+        if kind in ("attn", "local"):
+            window = cfg.window if kind == "local" else 0
+            if cfg.attention == "mla" and kind == "attn":
+                a, cache = attn.mla_decode_step(h, p["attn"], cfg, cache, position)
+            else:
+                a, cache = attn.gqa_decode_step(
+                    h, p["attn"], cfg, cache, position, window=window
+                )
+            x = x + a
+            h2 = rmsnorm(x, p["ln2"], cfg.norm_eps)
+            if cfg.moe and kind == "attn":
+                f, _ = moe_mod.moe_apply(h2, p["ffn"], cfg, no_drop=True)
+            else:
+                f = mlp_apply(h2, p["ffn"])
+            x = x + f
+        elif kind == "rglru":
+            a, cache = rglru_mod.rglru_block_step(h, p["core"], cfg, cache)
+            x = x + a
+            h2 = rmsnorm(x, p["ln2"], cfg.norm_eps)
+            x = x + mlp_apply(h2, p["ffn"])
+        elif kind == "mlstm":
+            a, cache = xlstm_mod.mlstm_block_step(h, p["core"], cfg, cache)
+            x = x + a
+        elif kind == "slstm":
+            a, cache = xlstm_mod.slstm_block_step(h, p["core"], cfg, cache)
+            x = x + a
+        return x, cache
+
+    # ------------------------------------------------------------------
+    # embedding frontends
+    # ------------------------------------------------------------------
+    def _embed(self, params, batch) -> jnp.ndarray:
+        cfg = self.cfg
+        cdt = self.compute_dtype
+        if cfg.modality == "audio":
+            x = batch["frames"].astype(cdt) @ params["frontend_proj"].astype(cdt)
+            if "mask" in batch:  # masked prediction: replace masked frames
+                m = batch["mask"][..., None]
+                x = jnp.where(m, params["mask_embed"].astype(cdt), x)
+            # conv positional embedding (kernel 128, depthwise, same-pad)
+            w = params["conv_pos"]["w"].astype(cdt)  # (K, d)
+            K = w.shape[0]
+            xp = jnp.pad(x, ((0, 0), (K // 2, K - 1 - K // 2), (0, 0)))
+            pos = jnp.zeros_like(x)
+            # depthwise conv via K shifted adds (K=128) would unroll too
+            # far; use conv_general_dilated with feature groups instead.
+            pos = jax.lax.conv_general_dilated(
+                xp.transpose(0, 2, 1)[:, :, None, :],           # NCHW (H=1)
+                w.transpose(1, 0)[:, None, None, :],            # OIHW depthwise
+                (1, 1), "VALID",
+                dimension_numbers=("NCHW", "OIHW", "NCHW"),
+                feature_group_count=cfg.d_model,
+            )[:, :, 0, :].transpose(0, 2, 1)
+            return x + jax.nn.gelu(pos + params["conv_pos"]["b"].astype(cdt))
+        tok = batch["tokens"]
+        x = params["embed"].astype(cdt)[tok]
+        if cfg.modality == "vision_text" and "image_embeds" in batch:
+            pj = params["projector"]
+            img = batch["image_embeds"].astype(cdt)
+            img = jax.nn.gelu(img @ pj["w1"].astype(cdt)) @ pj["w2"].astype(cdt)
+            x = jnp.concatenate([img, x], axis=1)  # image tokens first
+        return x
+
+    def _head(self, params, x) -> jnp.ndarray:
+        cfg = self.cfg
+        x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        if cfg.tie_embeddings:
+            w = params["embed"].astype(x.dtype).T
+        else:
+            w = params["lm_head"].astype(x.dtype)
+        return x @ w
+
+    # ------------------------------------------------------------------
+    # full-sequence forward (train / encoder)
+    # ------------------------------------------------------------------
+    def forward_hidden(self, params, batch) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        cfg = self.cfg
+        x = self._embed(params, batch)
+        aux0 = jnp.zeros((), jnp.float32)
+
+        def tile_body(carry, tile_p):
+            x, aux = carry
+            for _ in range(self.cost_repeat):
+                for g, kind in enumerate(cfg.block_pattern):
+                    x, a = self._block_forward(x, tile_p[f"g{g}"], kind)
+                    aux = aux + a
+            x = self.residual_constraint(x)
+            return (x, aux), None
+
+        body = tile_body
+        if self.remat:
+            policy = (
+                jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                if self.remat_policy == "dots"
+                else jax.checkpoint_policies.nothing_saveable
+            )
+            body = jax.checkpoint(tile_body, policy=policy, prevent_cse=True)
+
+        if self.n_tiles > 0:
+            (x, aux), _ = jax.lax.scan(
+                body, (x, aux0), params["blocks"], unroll=self.scan_unroll
+            )
+        else:
+            aux = aux0
+        for i, kind in enumerate(self.tail_kinds):
+            x, a = self._block_forward(x, params["tail"][i], kind)
+            aux = aux + a
+        return x, aux
+
+    def forward_logits(self, params, batch) -> jnp.ndarray:
+        x, _ = self.forward_hidden(params, batch)
+        return self._head(params, x)
+
+    def loss(self, params, batch) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+        cfg = self.cfg
+        x, aux = self.forward_hidden(params, batch)
+        if cfg.modality == "vision_text":
+            # image positions carry no next-token loss
+            x = x[:, -batch["tokens"].shape[1]:, :]
+        logits = self._head(params, x)
+        mask = batch.get("mask")
+        ce = softmax_cross_entropy(logits, batch["labels"], mask)
+        aux_w = 0.01 if cfg.moe else 0.0
+        loss = ce + aux_w * aux
+        return loss, {"ce": ce, "aux": aux, "loss": loss}
+
+    # ------------------------------------------------------------------
+    # serving: cache init / prefill / decode
+    # ------------------------------------------------------------------
+    def _cache_struct_one(self, kind: str, batch: int, cache_len: int):
+        cfg = self.cfg
+        cdt = self.compute_dtype
+        hd = cfg.head_dim
+        if kind == "attn" and cfg.attention == "mla":
+            return {
+                "c_kv": jnp.zeros((batch, cache_len, cfg.kv_lora_rank), cdt),
+                "k_rope": jnp.zeros((batch, cache_len, cfg.qk_rope_head_dim), cdt),
+            }
+        if kind in ("attn", "local"):
+            S = min(cache_len, cfg.window) if kind == "local" else cache_len
+            return {
+                "k": jnp.zeros((batch, S, cfg.n_kv_heads, hd), cdt),
+                "v": jnp.zeros((batch, S, cfg.n_kv_heads, hd), cdt),
+            }
+        if kind == "rglru":
+            return {
+                "h": jnp.zeros((batch, cfg.lru_width), jnp.float32),
+                "conv": jnp.zeros((batch, cfg.conv1d_size - 1, cfg.lru_width), cdt),
+            }
+        if kind == "mlstm":
+            return xlstm_mod.mlstm_state_init(batch, cfg, cdt)
+        if kind == "slstm":
+            return xlstm_mod.slstm_state_init(batch, cfg)
+        raise ValueError(kind)
+
+    def init_cache(self, batch: int, cache_len: int):
+        caches: Dict[str, Any] = {}
+        if self.n_tiles > 0:
+            caches["blocks"] = {
+                f"g{g}": jax.tree.map(
+                    lambda a: jnp.broadcast_to(
+                        a, (self.n_tiles,) + a.shape
+                    ).copy(),
+                    self._cache_struct_one(kind, batch, cache_len),
+                )
+                for g, kind in enumerate(self.cfg.block_pattern)
+            }
+        if self.n_tail:
+            caches["tail"] = [
+                self._cache_struct_one(kind, batch, cache_len)
+                for kind in self.tail_kinds
+            ]
+        return caches
+
+    def prefill(self, params, batch, cache_len: int):
+        cfg = self.cfg
+        x = self._embed(params, batch)
+
+        caches: Dict[str, Any] = {}
+        if self.n_tiles > 0:
+            def tile_body(x, tile_p):
+                tile_cache = {}
+                for _ in range(self.cost_repeat):  # >1 only for cost runs
+                    for g, kind in enumerate(cfg.block_pattern):
+                        x, c = self._block_prefill(
+                            x, tile_p[f"g{g}"], kind, cache_len
+                        )
+                        tile_cache[f"g{g}"] = c
+                x = self.residual_constraint(x)
+                return x, tile_cache
+
+            if self.remat:
+                tile_body = jax.checkpoint(
+                    tile_body,
+                    policy=jax.checkpoint_policies.nothing_saveable,
+                    prevent_cse=True,
+                )
+            x, stacked = jax.lax.scan(
+                tile_body, x, params["blocks"], unroll=self.scan_unroll
+            )
+            caches["blocks"] = stacked
+        if self.n_tail:
+            caches["tail"] = []
+            for i, kind in enumerate(self.tail_kinds):
+                x, c = self._block_prefill(x, params["tail"][i], kind, cache_len)
+                caches["tail"].append(c)
+        logits = self._head(params, x[:, -1:, :])
+        return logits, caches
+
+    def decode_step(self, params, tokens, caches, position):
+        """tokens: (B, 1) int32 (or (B,1,d) frames); position: (B,)."""
+        cfg = self.cfg
+        if cfg.modality == "audio":
+            raise ValueError("encoder-only arch has no decode step")
+        x = params["embed"].astype(self.compute_dtype)[tokens]
+
+        new_caches: Dict[str, Any] = {}
+        if self.n_tiles > 0:
+            def tile_body(x, inp):
+                tile_p, tile_c = inp
+                new_c = {}
+                for _ in range(self.cost_repeat):  # >1 only for cost runs
+                    for g, kind in enumerate(cfg.block_pattern):
+                        x, c = self._block_decode(
+                            x, tile_p[f"g{g}"], kind, tile_c[f"g{g}"], position
+                        )
+                        new_c[f"g{g}"] = c
+                return x, new_c
+
+            x, stacked = jax.lax.scan(
+                tile_body, x, (params["blocks"], caches["blocks"]),
+                unroll=self.scan_unroll,
+            )
+            new_caches["blocks"] = stacked
+        if self.n_tail:
+            new_caches["tail"] = []
+            for i, kind in enumerate(self.tail_kinds):
+                x, c = self._block_decode(
+                    x, params["tail"][i], kind, caches["tail"][i], position
+                )
+                new_caches["tail"].append(c)
+        logits = self._head(params, x)
+        return logits, new_caches
+
+
+def make_model(cfg, **kw) -> TransformerLM:
+    return TransformerLM(cfg, **kw)

@@ -1,0 +1,3 @@
+"""Roofline analysis: analytic cost model + dry-run artifact reduction."""
+
+from .costmodel import cell_costs  # noqa: F401

@@ -1,0 +1,3 @@
+"""Multi-tenant serving engine with object-sharing prefix cache."""
+
+from .engine import EngineConfig, ServingEngine, TenantSpec, Request  # noqa: F401

@@ -1,0 +1,44 @@
+"""Token sampling + greedy decode loop for the live serving path."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def sample_token(
+    logits: jnp.ndarray,          # (B, V)
+    rng: Optional[jax.Array] = None,
+    *,
+    temperature: float = 0.0,
+    top_k: int = 0,
+) -> jnp.ndarray:
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / temperature
+    if top_k > 0:
+        vals, _ = jax.lax.top_k(logits, top_k)
+        cutoff = vals[..., -1:]
+        logits = jnp.where(logits < cutoff, -1e30, logits)
+    assert rng is not None, "sampling with temperature needs an rng"
+    return jax.random.categorical(rng, logits).astype(jnp.int32)
+
+
+def greedy_decode(model, params, first_logits, caches, *, start_pos: int,
+                  n_steps: int) -> jnp.ndarray:
+    """Greedy decode loop (host-looped; each step is jit'd by the model).
+
+    Returns (B, n_steps) generated token ids.
+    """
+    B = first_logits.shape[0]
+    tok = jnp.argmax(first_logits[:, -1, :], axis=-1).astype(jnp.int32)
+    out = [tok]
+    pos = jnp.full((B,), start_pos, jnp.int32)
+    for _ in range(n_steps - 1):
+        logits, caches = model.decode_step(params, tok[:, None], caches, pos)
+        tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        out.append(tok)
+        pos = pos + 1
+    return jnp.stack(out, axis=1)

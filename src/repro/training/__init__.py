@@ -1,0 +1,5 @@
+"""Training substrate: optimizer, train step, data, checkpointing,
+fault tolerance, gradient compression."""
+
+from .optimizer import AdamWConfig, adamw_init, adamw_update, cosine_lr  # noqa: F401
+from .train_step import TrainConfig, make_train_step  # noqa: F401

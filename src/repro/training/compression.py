@@ -1,0 +1,69 @@
+"""Int8 error-feedback gradient compression.
+
+Large-scale DP all-reduce traffic can be quantized 4x (fp32->int8, or
+2x vs bf16) if the quantization error is carried forward ("error
+feedback" / EF-SGD): the residual from step t is added to the gradient
+at step t+1 before quantizing, so the *time-averaged* update is unbiased
+and convergence is provably preserved for smooth objectives.
+
+Mechanics per tensor: g' = g + residual; scale = max|g'| / 127;
+q = round(g'/scale) int8; decompressed d = q * scale; residual' = g' - d.
+
+In SPMD the all-reduce is implicit (XLA inserts it from shardings), so
+quantizing "before the all-reduce" is modeled by quantize->dequantize on
+the local gradient — byte-exact with what a real int8 collective would
+transmit per shard, while remaining one pure jit-able function.
+``tests/test_compression.py`` checks convergence parity on a quadratic.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class CompressionConfig:
+    bits: int = 8
+    min_size: int = 4096   # don't quantize tiny tensors (norm scales etc.)
+
+
+def compression_init(params) -> Any:
+    return jax.tree.map(lambda a: jnp.zeros(a.shape, jnp.float32), params)
+
+
+def _quantize(g: jnp.ndarray, res: jnp.ndarray, bits: int):
+    gf = g.astype(jnp.float32) + res
+    qmax = float(2 ** (bits - 1) - 1)
+    scale = jnp.max(jnp.abs(gf)) / qmax
+    scale = jnp.maximum(scale, 1e-30)
+    q = jnp.clip(jnp.round(gf / scale), -qmax, qmax)
+    deq = q * scale
+    return deq, gf - deq
+
+
+def compress_grads(
+    grads, residuals, cfg: CompressionConfig
+) -> Tuple[Any, Any, Dict[str, jnp.ndarray]]:
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_r = jax.tree.leaves(residuals)
+    out_g, out_r = [], []
+    err_num = 0.0
+    err_den = 0.0
+    for g, r in zip(flat_g, flat_r):
+        if g.size < cfg.min_size:
+            out_g.append(g)
+            out_r.append(r)
+            continue
+        d, nr = _quantize(g, r, cfg.bits)
+        out_g.append(d.astype(g.dtype))
+        out_r.append(nr)
+        err_num = err_num + jnp.sum(jnp.square(nr))
+        err_den = err_den + jnp.sum(jnp.square(d))
+    metrics = {
+        "compress_rel_err": jnp.sqrt(err_num / jnp.maximum(err_den, 1e-30))
+    }
+    return tdef.unflatten(out_g), tdef.unflatten(out_r), metrics

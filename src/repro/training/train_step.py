@@ -1,0 +1,120 @@
+"""Builds the jit-able train step for any arch config.
+
+Mixed precision: params are fp32 masters; a bf16 cast copy feeds the
+forward/backward; grads come back fp32 (autodiff through the cast).
+Optional gradient accumulation (lax.scan over microbatches) and int8
+error-feedback gradient compression (see ``compression.py``) slot in
+here. The function is pure — pjit distributes it per the sharding rules
+in ``launch/sharding.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .optimizer import AdamWConfig, adamw_update, global_norm
+from .compression import CompressionConfig, compress_grads
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    optimizer: AdamWConfig = field(default_factory=AdamWConfig)
+    microbatches: int = 1            # gradient accumulation factor
+    compute_dtype: Any = jnp.bfloat16
+    remat: bool = True
+    remat_policy: str = "dots"
+    compression: Optional[CompressionConfig] = None
+
+
+def _cast_tree(tree, dtype):
+    return jax.tree.map(
+        lambda a: a.astype(dtype) if jnp.issubdtype(a.dtype, jnp.floating) else a,
+        tree,
+    )
+
+
+def make_loss_fn(model, train_cfg: TrainConfig):
+    def loss_fn(params, batch):
+        fwd_params = _cast_tree(params, train_cfg.compute_dtype)
+        loss, metrics = model.loss(fwd_params, batch)
+        return loss, metrics
+
+    return loss_fn
+
+
+def make_train_step(model, train_cfg: TrainConfig) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    state = {"params": fp32 pytree, "opt": adamw state, "compress": ef
+    residuals (optional)}; batch = model-specific dict with a leading
+    global-batch dim on every leaf.
+    """
+    loss_fn = make_loss_fn(model, train_cfg)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def compute_grads(params, batch):
+        if train_cfg.microbatches <= 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            return loss, metrics, grads
+
+        n = train_cfg.microbatches
+
+        def reshape(x):
+            return x.reshape((n, x.shape[0] // n) + x.shape[1:])
+
+        micro = jax.tree.map(reshape, batch)
+
+        def body(carry, mb):
+            acc, loss_acc = carry
+            (loss, _), grads = grad_fn(params, mb)
+            acc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32), acc, grads)
+            return (acc, loss_acc + loss), None
+
+        zero = jax.tree.map(
+            lambda a: jnp.zeros(a.shape, jnp.float32), params
+        )
+        (gacc, loss_sum), _ = jax.lax.scan(body, (zero, 0.0), micro)
+        inv = 1.0 / n
+        grads = jax.tree.map(lambda g: g * inv, gacc)
+        loss = loss_sum * inv
+        return loss, {"loss": loss}, grads
+
+    def train_step(state, batch):
+        params = state["params"]
+        loss, metrics, grads = compute_grads(params, batch)
+        if train_cfg.compression is not None:
+            grads, comp_state, comp_metrics = compress_grads(
+                grads, state["compress"], train_cfg.compression
+            )
+            metrics = {**metrics, **comp_metrics}
+        new_params, opt, opt_metrics = adamw_update(
+            params, grads, state["opt"], train_cfg.optimizer
+        )
+        new_state = {"params": new_params, "opt": opt}
+        if train_cfg.compression is not None:
+            new_state["compress"] = comp_state
+        out_metrics = {
+            "loss": loss,
+            **{k: v for k, v in metrics.items() if v.ndim == 0},
+            **opt_metrics,
+        }
+        return new_state, out_metrics
+
+    return train_step
+
+
+def init_train_state(model, rng, train_cfg: TrainConfig):
+    from .optimizer import adamw_init
+
+    params = model.init(rng)
+    state = {"params": params, "opt": adamw_init(params)}
+    if train_cfg.compression is not None:
+        from .compression import compression_init
+
+        state["compress"] = compression_init(params)
+    return state

@@ -1,0 +1,90 @@
+"""Analytic cost model vs XLA cost_analysis on UNROLLED reduced configs.
+
+XLA's HloCostAnalysis counts while-loop bodies once, so the comparison is
+only meaningful with every scan unrolled (REPRO_SCAN_UNROLL=1 + model
+scan_unroll) — run in a subprocess so the env var can't leak into other
+tests. Agreement gate: 0.85x..1.4x (XLA also counts VPU elementwise ops
+that an MXU roofline excludes; see DESIGN.md)."""
+
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+
+@pytest.mark.slow
+def test_costmodel_matches_xla_unrolled():
+    code = textwrap.dedent(
+        """
+        import os
+        os.environ["REPRO_SCAN_UNROLL"] = "1"
+        import jax, dataclasses
+        import jax.numpy as jnp
+        from repro.configs import get_config, ShapeConfig
+        from repro.models import make_model
+        from repro.roofline import cell_costs
+
+        def xla_flops(fn, *args):
+            ca = jax.jit(fn).lower(*args).compile().cost_analysis()
+            if isinstance(ca, (list, tuple)): ca = ca[0]
+            return float(ca.get("flops", -1))
+
+        B, T = 2, 256
+        bad = []
+        for name in ("qwen3-1.7b", "granite-moe-1b-a400m",
+                     "deepseek-v2-236b", "recurrentgemma-2b",
+                     "xlstm-125m", "hubert-xlarge"):
+            cfg = get_config(name).reduced()
+            kw = dict(d_model=256, n_heads=4,
+                      n_kv_heads=4 if cfg.n_kv_heads == cfg.n_heads else 2,
+                      head_dim=64, n_layers=len(cfg.block_pattern) * 2,
+                      d_ff=512 if cfg.d_ff else 0, vocab_size=1024)
+            if cfg.attention == "mla":
+                kw.update(q_lora_rank=128, kv_lora_rank=64,
+                          qk_rope_head_dim=16, qk_nope_head_dim=48,
+                          v_head_dim=64, head_dim=64)
+            if cfg.moe:
+                kw.update(n_experts=8, top_k=2, moe_d_ff=128)
+            if cfg.lru_width:
+                kw.update(lru_width=256)
+            if cfg.vision_dim:
+                kw.update(vision_dim=64, n_image_tokens=32)
+            cfg = dataclasses.replace(cfg, **kw)
+            model = make_model(cfg, param_dtype=jnp.bfloat16, scan_unroll=True)
+            params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+            if cfg.modality == "audio":
+                batch = {"frames": jax.ShapeDtypeStruct((B, T, cfg.d_model),
+                                                        jnp.bfloat16)}
+                fn = lambda p, b: model.forward_logits(p, b)
+            else:
+                batch = {"tokens": jax.ShapeDtypeStruct((B, T), jnp.int32)}
+                if cfg.modality == "vision_text":
+                    batch = {
+                        "tokens": jax.ShapeDtypeStruct(
+                            (B, T - cfg.n_image_tokens), jnp.int32),
+                        "image_embeds": jax.ShapeDtypeStruct(
+                            (B, cfg.n_image_tokens, cfg.vision_dim),
+                            jnp.bfloat16),
+                    }
+                fn = lambda p, b: model.prefill(p, b, T)
+            got = xla_flops(fn, params, batch)
+            pred = cell_costs(cfg, ShapeConfig("v", T, B, "prefill")).flops_fwd
+            r = got / pred
+            print(f"{name}: ratio {r:.3f}")
+            if not (0.85 < r < 1.4):
+                bad.append((name, r))
+        assert not bad, bad
+        print("COSTMODEL-OK")
+        """
+    )
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        env={**os.environ, "PYTHONPATH": SRC}, timeout=560,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "COSTMODEL-OK" in out.stdout

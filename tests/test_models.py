@@ -1,0 +1,163 @@
+"""Per-arch smoke tests: reduced configs, one forward/train step on CPU,
+shape + finiteness asserts, and the strongest correctness check we have:
+prefill + single-step decode must reproduce the parallel forward's
+logits (validates KV caches, ring buffers, MLA absorption, recurrent
+states, and MoE no-drop decode in one shot)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SHAPES, get_config, list_archs, runnable
+from repro.models import make_model
+
+ARCHS = list(list_archs())
+
+
+def _batch(cfg, rng, B=2, T=24):
+    if cfg.modality == "audio":
+        return {
+            "frames": jax.random.normal(rng, (B, T, cfg.d_model)),
+            "labels": jnp.zeros((B, T), jnp.int32),
+            "mask": jnp.ones((B, T), bool),
+        }
+    toks = jax.random.randint(rng, (B, T), 0, cfg.vocab_size)
+    b = {
+        "tokens": toks,
+        "labels": jnp.roll(toks, -1, axis=1),
+        "mask": jnp.ones((B, T), bool),
+    }
+    if cfg.modality == "vision_text":
+        b["image_embeds"] = jax.random.normal(
+            rng, (B, cfg.n_image_tokens, cfg.vision_dim)
+        )
+    return b
+
+
+def test_registry_complete():
+    assert len(ARCHS) == 10
+    for name in ARCHS:
+        cfg = get_config(name)
+        assert cfg.n_layers > 0 and cfg.d_model > 0
+
+
+def test_assigned_configs_match_assignment():
+    """Spot-check the exact assigned hyperparameters."""
+    q = get_config("qwen3-1.7b")
+    assert (q.n_layers, q.d_model, q.n_heads, q.n_kv_heads, q.d_ff,
+            q.vocab_size, q.qk_norm) == (28, 2048, 16, 8, 6144, 151936, True)
+    y = get_config("yi-34b")
+    assert (y.n_layers, y.d_model, y.n_heads, y.n_kv_heads, y.d_ff,
+            y.vocab_size) == (60, 7168, 56, 8, 20480, 64000)
+    d = get_config("deepseek-v2-236b")
+    assert (d.n_experts, d.top_k, d.n_shared_experts, d.kv_lora_rank,
+            d.q_lora_rank) == (160, 6, 2, 512, 1536)
+    r = get_config("recurrentgemma-2b")
+    assert r.block_pattern == ("rglru", "rglru", "local") and r.window == 2048
+    h = get_config("hubert-xlarge")
+    assert h.is_encoder and h.vocab_size == 504
+    g = get_config("granite-moe-1b-a400m")
+    assert (g.n_experts, g.top_k, g.vocab_size) == (32, 8, 49155)
+
+
+def test_skip_rules():
+    assert not runnable(get_config("hubert-xlarge"), SHAPES["decode_32k"])[0]
+    assert not runnable(get_config("yi-34b"), SHAPES["long_500k"])[0]
+    assert runnable(get_config("xlstm-125m"), SHAPES["long_500k"])[0]
+    assert runnable(get_config("recurrentgemma-2b"), SHAPES["long_500k"])[0]
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_smoke_forward_and_loss(name):
+    cfg = get_config(name).reduced()
+    model = make_model(cfg, compute_dtype=jnp.float32)
+    rng = jax.random.PRNGKey(0)
+    params = model.init(rng)
+    batch = _batch(cfg, rng)
+    loss, metrics = model.loss(params, batch)
+    assert np.isfinite(float(loss)), f"{name}: loss not finite"
+    logits = model.forward_logits(params, batch)
+    T_expect = batch.get("tokens", batch.get("frames")).shape[1]
+    if cfg.modality == "vision_text":
+        T_expect += cfg.n_image_tokens
+    assert logits.shape[1] == T_expect
+    assert logits.shape[-1] == cfg.vocab_size
+    assert np.isfinite(np.asarray(logits)).all(), f"{name}: logits NaN"
+
+
+@pytest.mark.parametrize("name", [a for a in ARCHS
+                                  if not get_config(a).is_encoder])
+def test_decode_consistency(name):
+    """prefill(T-1) + decode(token T-1) == forward logits at T-1."""
+    cfg = get_config(name).reduced()
+    if cfg.moe:  # drop-free comparison
+        cfg = dataclasses.replace(cfg, capacity_factor=float(cfg.n_experts))
+    model = make_model(cfg, compute_dtype=jnp.float32)
+    rng = jax.random.PRNGKey(0)
+    params = model.init(rng)
+    B, T = 2, 24
+    batch = _batch(cfg, rng, B, T)
+    full = model.forward_logits(params, batch)
+
+    bd = dict(batch)
+    bd["tokens"] = batch["tokens"][:, : T - 1]
+    last, caches = model.prefill(params, bd, cache_len=T + 8)
+    n_img = cfg.n_image_tokens if cfg.modality == "vision_text" else 0
+    pos = jnp.full((B,), T - 1 + n_img, jnp.int32)
+    lg, _ = model.decode_step(params, batch["tokens"][:, T - 1 : T], caches, pos)
+    scale = float(jnp.max(jnp.abs(full[:, n_img + T - 1]))) + 1e-6
+    d1 = float(jnp.max(jnp.abs(last[:, 0] - full[:, n_img + T - 2])))
+    d2 = float(jnp.max(jnp.abs(lg[:, 0] - full[:, n_img + T - 1])))
+    assert d1 < 3e-3 * max(scale, 1), f"{name}: prefill mismatch {d1}"
+    assert d2 < 3e-3 * max(scale, 1), f"{name}: decode mismatch {d2}"
+
+
+def test_param_count_estimate_matches_init():
+    """configs' closed-form inventory vs actually-initialized params."""
+    for name in ("qwen3-1.7b", "granite-moe-1b-a400m", "xlstm-125m"):
+        cfg = get_config(name).reduced()
+        model = make_model(cfg)
+        params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        actual = sum(
+            int(np.prod(l.shape)) for l in jax.tree.leaves(params)
+        )
+        est = cfg.n_params
+        assert abs(actual - est) / actual < 0.15, (
+            f"{name}: inventory {est} vs init {actual}"
+        )
+
+
+def test_mlstm_chunkwise_matches_quadratic():
+    from repro.models.xlstm import mlstm_chunkwise, mlstm_parallel
+
+    rng = jax.random.PRNGKey(1)
+    ks = jax.random.split(rng, 5)
+    B, T, H, dh = 2, 64, 2, 16
+    q = jax.random.normal(ks[0], (B, T, H, dh))
+    k = jax.random.normal(ks[1], (B, T, H, dh))
+    v = jax.random.normal(ks[2], (B, T, H, dh))
+    i_pre = jax.random.normal(ks[3], (B, T, H))
+    f_pre = jax.random.normal(ks[4], (B, T, H)) + 2.0
+    full = mlstm_parallel(q, k, v, i_pre, f_pre)
+    chunked = mlstm_chunkwise(q, k, v, i_pre, f_pre, chunk=16)
+    np.testing.assert_allclose(full, chunked, atol=2e-4)
+
+
+def test_rglru_scan_matches_step():
+    from repro.models.rglru import rglru_init, rglru_scan, rglru_step
+
+    import dataclasses as dc
+    cfg = get_config("recurrentgemma-2b").reduced()
+    rng = jax.random.PRNGKey(2)
+    p = rglru_init(rng, cfg)
+    B, T = 2, 12
+    xc = jax.random.normal(rng, (B, T, cfg.lru_width))
+    h_seq, h_last = rglru_scan(xc, p)
+    h = jnp.zeros((B, cfg.lru_width))
+    for t in range(T):
+        out, h = rglru_step(xc[:, t], p, h)
+        np.testing.assert_allclose(out, h_seq[:, t], atol=1e-4)
+    np.testing.assert_allclose(h, h_last, atol=1e-4)

@@ -1,0 +1,106 @@
+"""Property-based tests (hypothesis) of the paper's system invariants."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import GetResult, NotSharedSystem, SharedLRUCache
+
+
+def traces(max_j=4, max_obj=30, max_len=3, max_ops=300):
+    return st.tuples(
+        st.integers(2, max_j),                                  # J
+        st.lists(
+            st.tuples(st.integers(0, max_j - 1),                # proxy
+                      st.integers(0, max_obj - 1)),             # object
+            min_size=1, max_size=max_ops,
+        ),
+        st.integers(0, 1_000_000),                              # seed
+    )
+
+
+def _lengths(seed, n=30, max_len=3):
+    rng = np.random.default_rng(seed)
+    return rng.integers(1, max_len + 1, size=n)
+
+
+@settings(max_examples=60, deadline=None)
+@given(traces())
+def test_invariants_hold_after_every_op(tj):
+    J, ops, seed = tj
+    lens = _lengths(seed)
+    rng = np.random.default_rng(seed + 1)
+    allocs = rng.integers(2, 10, size=J).tolist()
+    c = SharedLRUCache(allocs, physical_capacity=sum(allocs) + 10)
+    for step, (i, k) in enumerate(ops):
+        i = i % J
+        c.get_autofetch(i, k, int(lens[k]))
+        if step % 7 == 0:
+            c.check_invariants()
+    c.check_invariants()
+    # share conservation: every held object's shares sum to its length
+    for key, hs in c.holders.items():
+        assert len(hs) >= 1
+        total = sum(
+            c.length[key] * (c._scale // len(hs)) for _ in hs
+        )
+        assert total <= c.length[key] * c._scale  # integer floor rounding
+
+
+@settings(max_examples=40, deadline=None)
+@given(traces())
+def test_prop31_coupling_dominance(tj):
+    """Prop 3.1's coupling: per proxy, the not-shared cache contents are
+    always a subset of the shared system's LRU-list (same trace, same
+    allocations) => sharing can only raise hit rates."""
+    J, ops, seed = tj
+    lens = _lengths(seed)
+    rng = np.random.default_rng(seed + 2)
+    allocs = rng.integers(2, 10, size=J).tolist()
+    shared = SharedLRUCache(allocs, physical_capacity=sum(allocs) + 50)
+    unshared = NotSharedSystem(allocs)
+    for i, k in ops:
+        i = i % J
+        shared.get_autofetch(i, k, int(lens[k]))
+        unshared.get_autofetch(i, k, int(lens[k]))
+    for j in range(J):
+        assert set(unshared.list_keys(j)) <= set(shared.list_keys(j))
+
+
+@settings(max_examples=40, deadline=None)
+@given(traces())
+def test_eviction_loop_terminates_and_respects_allocations(tj):
+    J, ops, seed = tj
+    lens = _lengths(seed)
+    rng = np.random.default_rng(seed + 3)
+    allocs = rng.integers(2, 10, size=J).tolist()
+    c = SharedLRUCache(allocs, physical_capacity=sum(allocs))
+    total_evictions = 0
+    for i, k in ops:
+        i = i % J
+        stats = c.get_autofetch(i, k, int(lens[k]))
+        total_evictions += stats.n_evictions
+        # loop terminated (we got here) and left no list over-allocation
+        for j in range(J):
+            assert c.vlen_scaled[j] <= c.b_scaled[j]
+    # sanity: evictions are finite and bounded by touched objects
+    assert total_evictions <= len(ops) * (J + 2)
+
+
+@settings(max_examples=30, deadline=None)
+@given(traces(max_j=3))
+def test_hit_never_changes_other_lists(tj):
+    """HIT_LIST must be side-effect-free on other proxies (Table IV)."""
+    J, ops, seed = tj
+    lens = _lengths(seed)
+    c = SharedLRUCache([5] * J, physical_capacity=5 * J + 20)
+    for i, k in ops:
+        i = i % J
+        before = [c.list_keys(j) for j in range(J)]
+        st_ = c.get(i, k)
+        if st_.result is GetResult.HIT_LIST:
+            after = [c.list_keys(j) for j in range(J)]
+            for j in range(J):
+                if j != i:
+                    assert before[j] == after[j]
+        elif st_.result is GetResult.MISS:
+            c.set(i, k, int(lens[k]))

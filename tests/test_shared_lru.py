@@ -1,0 +1,143 @@
+"""Unit tests: Section III semantics of the object-sharing cache."""
+
+import pytest
+
+from repro.core import GetResult, SharedLRUCache
+from repro.core.baselines import NotSharedSystem, PooledLRU, SimpleLRU
+
+
+def test_get_miss_then_set_then_hit():
+    c = SharedLRUCache([4, 4], physical_capacity=16)
+    assert c.get(0, "a").result is GetResult.MISS
+    c.set(0, "a", 1)
+    assert c.get(0, "a").result is GetResult.HIT_LIST
+    # other proxy: LRU miss but physical hit -> insert + deflate
+    st = c.get(1, "a")
+    assert st.result is GetResult.HIT_CACHE
+    assert c.share_of("a") == pytest.approx(0.5)
+    assert c.vlen(0) == pytest.approx(0.5)
+    assert c.vlen(1) == pytest.approx(0.5)
+    c.check_invariants()
+
+
+def test_eviction_inflates_remaining_holders():
+    c = SharedLRUCache([2, 2], physical_capacity=8)
+    c.set(0, "x", 2)
+    c.get_autofetch(1, "x", 2)       # shared: 1 unit each
+    assert c.vlen(0) == pytest.approx(1.0)
+    c.set(0, "y", 1)                 # proxy0: 1 + 1 = 2 == b0, no evict
+    assert c.in_list(0, "x")
+    c.set(0, "z", 1)                 # overflow -> evict tail "x" from L0
+    assert not c.in_list(0, "x")
+    # "x" inflates to full length 2 on proxy1 == b1 -> stays
+    assert c.in_list(1, "x")
+    assert c.vlen(1) == pytest.approx(2.0)
+    c.check_invariants()
+
+
+def test_ripple_eviction_cascade():
+    """Fig. 1's scenario: one insert ripples across LRUs.
+
+    Setup (sizes 3 each): obj2 (len 3) shared by all -> 1 unit each;
+    obj3 (len 2) shared by L1,L2 -> 1 each; obj5 (len 1) private to L2;
+    obj4 (len 2) private to L0. All lists exactly full. Inserting obj1
+    on L0 evicts obj2 there, inflating it on L1/L2; L2 overflows and
+    ripples.
+    """
+    c = SharedLRUCache([3, 3, 3], physical_capacity=32)
+    c.set(0, "obj2", 3)
+    c.get_autofetch(1, "obj2", 3)
+    c.get_autofetch(2, "obj2", 3)     # shares: 1.0 each
+    c.set(1, "obj3", 2)               # L1 = 1 + 2 = 3 (full)
+    c.get_autofetch(2, "obj3", 2)     # share 1 each; L1 = 2, L2 = 2
+    c.set(2, "obj5", 1)               # L2 = 3 (full)
+    c.set(0, "obj4", 2)               # L0 = 1 + 2 = 3 (full)
+    for j, want in enumerate((3.0, 2.0, 3.0)):
+        assert c.vlen(j) == pytest.approx(want)
+    st = c.set(0, "obj1", 2)
+    assert st.n_evictions >= 3
+    assert st.n_ripple >= 1           # the L2 eviction is a ripple
+    c.check_invariants()
+
+
+def test_consensus_ghost_retention_and_resurrection():
+    c = SharedLRUCache([2], physical_capacity=8, ghost_retention=True)
+    c.set(0, "a", 2)
+    c.set(0, "b", 2)                 # evicts "a" from the list
+    assert not c.in_list(0, "a")
+    assert c.in_physical("a")        # ghost: physically retained
+    st = c.get(0, "a")               # resurrect
+    assert st.result is GetResult.HIT_CACHE
+    assert "a" not in c.ghosts
+    c.check_invariants()
+
+
+def test_ghosts_evicted_for_room():
+    c = SharedLRUCache([2], physical_capacity=4, ghost_retention=True)
+    c.set(0, "a", 2)
+    c.set(0, "b", 2)                 # "a" ghost; phys: a(2)+b(2)=4
+    c.set(0, "c", 2)                 # needs room -> ghost "a" evicted
+    assert not c.in_physical("a")
+    c.check_invariants()
+
+
+def test_no_ghost_retention_physical_evict():
+    c = SharedLRUCache([2], physical_capacity=8, ghost_retention=False)
+    c.set(0, "a", 2)
+    c.set(0, "b", 2)
+    assert not c.in_physical("a")
+
+
+def test_set_updates_length_inflation_deflation():
+    c = SharedLRUCache([4, 4], physical_capacity=16)
+    c.set(0, "a", 2)
+    c.get_autofetch(1, "a", 2)
+    assert c.vlen(0) == pytest.approx(1.0)
+    c.set(1, "a", 4)                 # update value: bigger object
+    assert c.length["a"] == 4
+    assert c.vlen(0) == pytest.approx(2.0)   # inflated share
+    c.set(0, "a", 1)                 # smaller: deflation
+    assert c.vlen(1) == pytest.approx(0.5)
+    c.check_invariants()
+
+
+def test_rre_thresholds():
+    """Section IV-D: non-trigger lists only trim beyond b_hat."""
+    base = SharedLRUCache([2, 2], physical_capacity=16)
+    rre = SharedLRUCache([2, 2], physical_capacity=16,
+                         ripple_allocations=[3, 3])
+    for c in (base, rre):
+        c.set(0, "s", 2)
+        c.get_autofetch(1, "s", 2)   # shared: 1 each
+        c.set(1, "t", 1)             # L1 = 2 (full)
+        st = c.set(0, "u", 2)        # L0 overflow -> evict "s" -> L1 inflates to 3
+    # base: L1 over b=2 -> ripple eviction; rre: 3 <= b_hat=3 -> absorbed
+    assert base.vlen(1) <= 2
+    assert rre.vlen(1) == pytest.approx(3.0)
+    assert rre.enforce()             # delayed batch trim brings it back
+    assert rre.vlen(1) <= 2
+    rre.check_invariants()
+
+
+def test_allocation_validation():
+    with pytest.raises(ValueError):
+        SharedLRUCache([4, 4], physical_capacity=6)  # B < sum b
+    with pytest.raises(ValueError):
+        SharedLRUCache([4], ripple_allocations=[2])  # b_hat < b
+
+
+def test_baselines():
+    ns = NotSharedSystem([2, 2])
+    ns.get_autofetch(0, "a", 1)
+    ns.get_autofetch(1, "a", 1)      # full copy in each: no sharing
+    assert ns.in_list(0, "a") and ns.in_list(1, "a")
+    pooled = PooledLRU(2)
+    pooled.get_autofetch(0, "a", 1)
+    assert pooled.get(1, "a").result is GetResult.HIT_LIST  # one list
+
+    lru = SimpleLRU(2)
+    lru.set("a", 1)
+    lru.set("b", 1)
+    lru.get("a")
+    evicted = lru.set("c", 1)
+    assert evicted == ["b"]          # LRU order respected

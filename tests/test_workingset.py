@@ -1,0 +1,121 @@
+"""Working-set solver: numpy cross-checks, bounds, and structure."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    attribution_matrix,
+    expected_inverse_one_plus,
+    rate_matrix,
+    solve_workingset,
+    solve_workingset_unshared,
+)
+
+import jax.numpy as jnp
+
+
+def test_expected_inverse_exact_vs_monte_carlo():
+    rng = np.random.default_rng(0)
+    h = rng.uniform(0, 1, size=5)
+    exact = float(expected_inverse_one_plus(jnp.asarray(h), n_quad=8))
+    zs = rng.random((200_000, 5)) < h
+    mc = np.mean(1.0 / (1.0 + zs.sum(axis=1)))
+    assert exact == pytest.approx(mc, rel=5e-3)
+
+
+def test_expected_inverse_closed_form_j2():
+    # paper: E[1/(1+Z)] = 1 - h/2 for a single Bernoulli(h)
+    for h in (0.0, 0.3, 0.99, 1.0):
+        got = float(expected_inverse_one_plus(jnp.asarray([h]), n_quad=8))
+        assert got == pytest.approx(1 - h / 2, abs=1e-6)
+
+
+def test_attribution_ordering_eq14_eq15():
+    """Paper eqs (14)-(15): L1 >= L* >= L2 elementwise."""
+    rng = np.random.default_rng(1)
+    h = jnp.asarray(rng.uniform(0.05, 0.95, size=(4, 50)))
+    lens = jnp.ones(50)
+    L1 = np.asarray(attribution_matrix(h, lens, "L1", 8))
+    Ls = np.asarray(attribution_matrix(h, lens, "Lstar", 8))
+    L2 = np.asarray(attribution_matrix(h, lens, "L2", 8))
+    assert np.all(L1 >= Ls - 1e-6)
+    assert np.all(Ls >= L2 - 1e-6)
+    assert np.all(L1 <= 1.0 + 1e-6)  # never exceeds the full length
+
+
+def _numpy_residual(lam, lengths, b, t, n_quad=8):
+    """Independent numpy implementation of eq. (8) with L1."""
+    h = 1.0 - np.exp(-lam * t[:, None])
+    x, w = np.polynomial.legendre.leggauss(n_quad)
+    x = (x + 1) / 2
+    w = w / 2
+    J, N = h.shape
+    res = np.empty(J)
+    for i in range(J):
+        others = np.delete(h, i, axis=0)              # (J-1, N)
+        terms = 1.0 - others[None] * (1.0 - x[:, None, None])
+        e = (terms.prod(axis=1) * w[:, None]).sum(axis=0)
+        res[i] = b[i] - (h[i] * lengths * e).sum()
+    return res
+
+
+def test_solver_satisfies_eq8_vs_numpy():
+    lam = rate_matrix(400, [0.8, 0.6, 1.1])
+    lengths = np.ones(400)
+    b = np.array([10.0, 20.0, 6.0])
+    sol = solve_workingset(lam, lengths, b, attribution="L1")
+    assert sol.converged
+    res = _numpy_residual(lam, lengths, b, sol.t)
+    assert np.max(np.abs(res)) < 1e-2 * b.max()
+
+
+def test_unshared_matches_classical_denning_schwartz():
+    lam = rate_matrix(300, [1.0])
+    lengths = np.ones(300)
+    sol = solve_workingset_unshared(lam, lengths, np.array([12.0]))
+    # b = sum h must hold exactly
+    assert sol.h[0].sum() == pytest.approx(12.0, rel=1e-4)
+    # monotone in rank
+    assert np.all(np.diff(sol.h[0]) <= 1e-9)
+
+
+def test_sharing_raises_hit_probs_vs_unshared():
+    """Prop 3.1 at the approximation level."""
+    lam = rate_matrix(400, [0.8, 0.9])
+    lengths = np.ones(400)
+    b = np.array([15.0, 15.0])
+    shared = solve_workingset(lam, lengths, b, attribution="L1")
+    unshared = solve_workingset_unshared(lam, lengths, b)
+    assert np.all(shared.h >= unshared.h - 1e-6)
+
+
+def test_monotone_in_allocation():
+    lam = rate_matrix(300, [0.7, 0.9])
+    lengths = np.ones(300)
+    small = solve_workingset(lam, lengths, np.array([8.0, 8.0]))
+    big = solve_workingset(lam, lengths, np.array([16.0, 8.0]))
+    assert np.all(big.h[0] >= small.h[0] - 1e-6)
+
+
+def test_eq9_guard():
+    lam = rate_matrix(100, [1.0, 1.0])
+    with pytest.raises(ValueError):
+        solve_workingset(lam, np.ones(100), np.array([60.0, 10.0]))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    st.integers(2, 5),
+    st.floats(0.4, 1.4),
+    st.integers(0, 10_000),
+)
+def test_solver_residuals_random(J, alpha0, seed):
+    rng = np.random.default_rng(seed)
+    alphas = alpha0 + rng.uniform(-0.2, 0.2, size=J)
+    lam = rate_matrix(200, alphas.tolist())
+    lengths = rng.integers(1, 4, size=200).astype(float)
+    b = rng.uniform(4, lengths.sum() / J * 0.8, size=J)
+    sol = solve_workingset(lam, lengths, b, attribution="L1")
+    assert np.max(np.abs(sol.residual)) < 2e-2 * b.max()
+    assert np.all(sol.h >= -1e-9) and np.all(sol.h <= 1 + 1e-6)
