@@ -6,19 +6,36 @@ Section VI-C workload: J=9 very different proxies (Zipf 0.5+0.5(i-1)),
 
 Reported:
 * histogram of evictions per set under MCD-OS (paper: max ~9-10, only
-  16 % of sets ripple beyond one eviction);
+  16 % of sets ripple beyond one eviction) — measured on the array
+  engine (``repro.core.fastsim``), which is event-equivalent to the
+  reference server and fast enough for the full Section VI-C trace;
 * mean/std set execution times for MCD-OS vs plain MCD with one pooled
   LRU of the same collective size (paper Table V: 474 vs 412 us — the
-  *ratio*, ~1.15x, is the implementation-independent claim).
+  *ratio*, ~1.15x, is the implementation-independent claim). Wall-clock
+  per-command timing is inherently about the reference server objects,
+  so that part still drives ``MCDOSServer``/``MCDServer`` directly, on a
+  capped sub-trace.
 """
 
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core import GetResult, MCDOSServer, MCDServer, rate_matrix, sample_trace
+from repro.core import (
+    GetResult,
+    MCDOSServer,
+    MCDServer,
+    SimParams,
+    rate_matrix,
+    sample_trace,
+    simulate_trace,
+)
 
 from .common import FIG2_ALPHAS, Timer, csv_row, fig2_scale, save_artifact
+
+# Wall-clock Table-V timing drives the reference servers per request;
+# cap that part so the benchmark stays dominated by the fast engine.
+LATENCY_MAX_REQUESTS = 150_000
 
 
 def drive(server, proxies, objects, warmup: int) -> None:
@@ -35,21 +52,32 @@ def drive(server, proxies, objects, warmup: int) -> None:
             server.set(i, k, 1)  # 1 unit = 100 kB
 
 
+
 def main() -> dict:
     b, n_objects, B, n_requests = fig2_scale()
     lam = rate_matrix(n_objects, list(FIG2_ALPHAS))
     trace = sample_trace(lam, n_requests, seed=23)
     warmup = n_requests // 10
 
+    # ---- Fig. 2: evictions-per-set histogram on the array engine -----
     with Timer() as tm:
-        mcdos = MCDOSServer(list(b), B, n_objects_hint=1)
-        drive(mcdos, trace.proxies, trace.objects, warmup)
+        res = simulate_trace(
+            SimParams(allocations=tuple(b), physical_capacity=B),
+            trace,
+            n_objects,
+            warmup=warmup,
+        )
+    hist = res.histogram()
+    frac_multi = res.frac_multi_eviction
 
-        mcd = MCDServer(B, len(b), n_objects_hint=1)
-        drive(mcd, trace.proxies, trace.objects, warmup)
-
-    hist = mcdos.stats.ripple.histogram()
-    frac_multi = mcdos.stats.ripple.frac_multi_eviction
+    # ---- Table V: per-set wall clock on the reference servers --------
+    n_lat = min(n_requests, LATENCY_MAX_REQUESTS)
+    lat_trace = sample_trace(lam, n_lat, seed=24)
+    lat_warmup = n_lat // 10
+    mcdos = MCDOSServer(list(b), B, n_objects_hint=1)
+    drive(mcdos, lat_trace.proxies, lat_trace.objects, lat_warmup)
+    mcd = MCDServer(B, len(b), n_objects_hint=1)
+    drive(mcd, lat_trace.proxies, lat_trace.objects, lat_warmup)
     os_mean, os_std, os_n = mcdos.stats.latency.summary("set")
     mc_mean, mc_std, mc_n = mcd.stats.latency.summary("set")
 
@@ -58,11 +86,14 @@ def main() -> dict:
         "n_objects": n_objects,
         "B": B,
         "n_requests": n_requests,
+        "engine": "fastsim",
+        "engine_requests_per_sec": res.requests_per_sec,
         "evictions_per_set_histogram": hist,
         "frac_multi_eviction": frac_multi,
         "paper_frac_multi_eviction": 0.16,
         "max_ripple": max((k for k, v in hist.items() if v), default=0),
         "set_us": {
+            "n_requests_timed": n_lat,
             "mcd_os": {"mean": os_mean, "std": os_std, "n": os_n},
             "mcd": {"mean": mc_mean, "std": mc_std, "n": mc_n},
             "overhead_ratio": os_mean / mc_mean if mc_mean > 0 else float("nan"),
@@ -80,10 +111,12 @@ def main() -> dict:
             bar = "#" * int(60 * hist[k] / max(total, 1))
             print(f"  {k:3d}: {hist[k]:9d}  {bar}")
     print(f"# fraction of sets with >1 eviction: {frac_multi:.3f} (paper: 0.16)")
+    print(f"# engine: {res.requests_per_sec:,.0f} req/s over {n_requests} requests")
     print(f"# Table V: set exec time MCD-OS {os_mean:.1f}+-{os_std:.1f} us vs "
           f"MCD {mc_mean:.1f}+-{mc_std:.1f} us -> ratio "
           f"{os_mean / max(mc_mean, 1e-9):.2f} (paper 1.15)")
-    csv_row("fig2_ripple", os_mean, f"frac_multi={frac_multi:.3f}")
+    csv_row("fig2_ripple", tm.seconds * 1e6 / n_requests,
+            f"frac_multi={frac_multi:.3f}")
     csv_row("table5_set_overhead", os_mean,
             f"ratio={os_mean / max(mc_mean, 1e-9):.3f};paper=1.15")
     return payload

@@ -10,8 +10,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import GetResult, SharedLRUCache, rate_matrix, sample_trace, solve_workingset
-from repro.core.metrics import OccupancyRecorder
+from repro.core import SimParams, rate_matrix, sample_trace, simulate_trace, solve_workingset
 
 from .common import N_OBJECTS, RANKS, Timer, csv_row, save_artifact, table1_requests
 
@@ -25,20 +24,12 @@ def main() -> dict:
 
     with Timer() as tm:
         trace = sample_trace(lam, n_requests, seed=5)
-        cache = SharedLRUCache(list(b), physical_capacity=N_OBJECTS)
-        rec = OccupancyRecorder(2, N_OBJECTS).attach_to(cache)
-        warmup = n_requests // 15
-        P, O = trace.proxies.tolist(), trace.objects.tolist()
-        for idx in range(n_requests):
-            rec.now = idx
-            if idx == warmup:
-                rec.reset_window()
-            i, k = P[idx], O[idx]
-            if cache.get(i, k).result is GetResult.MISS:
-                cache.set(i, k, 1)
-        rec.now = n_requests
-        rec.finalize()
-        h_sim = rec.occupancy()
+        h_sim = simulate_trace(
+            SimParams(allocations=b, physical_capacity=N_OBJECTS),
+            trace,
+            N_OBJECTS,
+            warmup=n_requests // 15,
+        ).occupancy
 
     sols = {
         kind: solve_workingset(lam, lengths, np.array(b, float), attribution=kind)

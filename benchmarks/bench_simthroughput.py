@@ -1,0 +1,173 @@
+"""Monte-Carlo engine throughput: reference vs array engine (fastsim).
+
+Measures requests/sec of:
+
+* ``reference`` — the executable spec: ``SharedLRUCache`` driven one
+  request at a time with an attached ``OccupancyRecorder`` (exactly how
+  ``bench_table1_sim`` ran before the array engine existed);
+* ``fastsim-flat`` — the allocation-free inlined Python loop over the
+  struct-of-arrays state;
+* ``fastsim`` — the auto backend (native C loop when a compiler is
+  available, else the Python loop).
+
+Workloads: the Table-I grid (J=3, N=1000, b in {8,64}^3, the paper's
+Section V setup) and the reduced Fig.-2 / Section VI-C workload (J=9).
+The estimators are bit-identical across engines (asserted in
+``tests/test_fastsim.py``), so the speedup is free: same trajectory,
+same occupancy integers, same Table-I numbers.
+
+The reference loop is timed on a capped sub-trace (it is the slow thing
+being replaced); the fast engines run the full trace.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import (
+    GetResult,
+    SharedLRUCache,
+    SimParams,
+    rate_matrix,
+    sample_trace,
+    simulate_trace,
+)
+from repro.core import fastsim_c
+from repro.core.fastsim import default_warmup
+from repro.core.irm import IRMTrace
+from repro.core.metrics import OccupancyRecorder
+
+from .common import (
+    ALPHAS,
+    B_GRID,
+    B_PHYSICAL,
+    FIG2_ALPHAS,
+    FULL,
+    N_OBJECTS,
+    Timer,
+    csv_row,
+    fig2_scale,
+    quick_mode,
+    save_artifact,
+    table1_requests,
+)
+
+
+def reference_run(b, B, trace, n_objects, warmup) -> float:
+    """Drive the reference engine exactly as the old bench_table1_sim."""
+    cache = SharedLRUCache(list(b), physical_capacity=B)
+    rec = OccupancyRecorder(len(b), n_objects).attach_to(cache)
+    P, O = trace.proxies.tolist(), trace.objects.tolist()
+    t0 = time.perf_counter()
+    for idx in range(len(P)):
+        rec.now = idx
+        if idx == warmup:
+            rec.reset_window()
+        i, k = P[idx], O[idx]
+        if cache.get(i, k).result is GetResult.MISS:
+            cache.set(i, k, 1)
+    rec.now = len(P)
+    rec.finalize()
+    return time.perf_counter() - t0
+
+
+def _sub(trace, n):
+    return IRMTrace(trace.proxies[:n], trace.objects[:n])
+
+
+def bench_workload(name, alphas, b_combos, n_objects, B, n_requests, ref_cap):
+    lam = rate_matrix(n_objects, list(alphas))
+    rows = {}
+    tot = {"reference": [0, 0.0], "fastsim-flat": [0, 0.0], "fastsim": [0, 0.0]}
+    for ci, b in enumerate(b_combos):
+        trace = sample_trace(lam, n_requests, seed=7 + ci)
+        warmup = default_warmup(n_requests, b)
+        params = SimParams(allocations=tuple(b), physical_capacity=B)
+
+        n_ref = min(n_requests, ref_cap)
+        ref_s = reference_run(b, B, _sub(trace, n_ref), n_objects,
+                              min(warmup, n_ref // 2))
+        res_flat = simulate_trace(params, trace, n_objects, warmup=warmup,
+                                  engine="flat")
+        res_auto = simulate_trace(params, trace, n_objects, warmup=warmup)
+
+        rows[str(tuple(b))] = {
+            "reference_rps": n_ref / ref_s,
+            "fastsim_flat_rps": res_flat.requests_per_sec,
+            "fastsim_rps": res_auto.requests_per_sec,
+        }
+        tot["reference"][0] += n_ref
+        tot["reference"][1] += ref_s
+        tot["fastsim-flat"][0] += n_requests
+        tot["fastsim-flat"][1] += res_flat.elapsed_s
+        tot["fastsim"][0] += n_requests
+        tot["fastsim"][1] += res_auto.elapsed_s
+
+    agg = {k: n / max(s, 1e-12) for k, (n, s) in tot.items()}
+    return {
+        "workload": name,
+        "n_requests_per_combo": n_requests,
+        "reference_requests_per_combo": min(n_requests, ref_cap),
+        "combos": rows,
+        "requests_per_sec": agg,
+        "speedup_auto_vs_reference": agg["fastsim"] / agg["reference"],
+        "speedup_flat_vs_reference": agg["fastsim-flat"] / agg["reference"],
+        "c_backend_available": fastsim_c.available(),
+    }
+
+
+def main() -> dict:
+    quick = quick_mode()
+    n_t1 = table1_requests()
+    ref_cap = 20_000 if quick else (200_000 if not FULL else 400_000)
+    t1_combos = B_GRID[:2] if quick else B_GRID
+
+    with Timer() as tm:
+        t1 = bench_workload(
+            "table1", ALPHAS, t1_combos, N_OBJECTS, B_PHYSICAL, n_t1, ref_cap
+        )
+        b, n_objects, B, n_req_f2 = fig2_scale()
+        f2 = bench_workload(
+            "fig2_reduced", FIG2_ALPHAS, [b], n_objects, B,
+            max(n_req_f2 // 3, 10_000), ref_cap
+        )
+
+    payload = {
+        "table1": t1,
+        "fig2": f2,
+        "estimator_note": (
+            "occupancy/hit statistics are bit-identical across engines on "
+            "the same trace (tests/test_fastsim.py), so Table-I accuracy "
+            "is unchanged by construction"
+        ),
+        "elapsed_s": tm.seconds,
+    }
+    save_artifact("simthroughput", payload)
+
+    print("# Monte-Carlo engine throughput (requests/sec)")
+    for wl in (t1, f2):
+        agg = wl["requests_per_sec"]
+        print(
+            f"  {wl['workload']:13s} reference={agg['reference']:>12,.0f}  "
+            f"flat={agg['fastsim-flat']:>12,.0f}  "
+            f"auto={agg['fastsim']:>14,.0f}  "
+            f"speedup={wl['speedup_auto_vs_reference']:.1f}x"
+        )
+    t1_speed = t1["speedup_auto_vs_reference"]
+    csv_row(
+        "sim_throughput_table1",
+        1e6 / t1["requests_per_sec"]["fastsim"],
+        f"speedup_vs_reference={t1_speed:.1f}x",
+    )
+    csv_row(
+        "sim_throughput_fig2",
+        1e6 / f2["requests_per_sec"]["fastsim"],
+        f"speedup_vs_reference={f2['speedup_auto_vs_reference']:.1f}x",
+    )
+    return payload
+
+
+if __name__ == "__main__":
+    main()

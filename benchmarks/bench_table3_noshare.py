@@ -5,20 +5,17 @@ Simulates J independent LRUs on the identical request trace used for the
 shared system, reports hit probabilities at ranks 1/10/100/1000, and
 verifies that the shared system's per-object occupancy dominates the
 not-shared one everywhere (the coupling argument of Prop. 3.1).
+
+Both systems run on the array engine (``variant="noshare"`` is the exact
+fast port of :class:`repro.core.baselines.NotSharedSystem` — see
+``tests/test_fastsim.py``).
 """
 
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core import (
-    GetResult,
-    NotSharedSystem,
-    SharedLRUCache,
-    rate_matrix,
-    sample_trace,
-)
-from repro.core.metrics import OccupancyRecorder
+from repro.core import SimParams, rate_matrix, sample_trace, simulate_trace
 
 from .common import (
     ALPHAS,
@@ -34,55 +31,26 @@ from .common import (
 )
 
 
-class _NotSharedOccupancy:
-    """Residence-time occupancy for the J independent LRUs."""
-
-    def __init__(self, J: int, N: int) -> None:
-        self.rec = OccupancyRecorder(J, N)
-
-    def run(self, system: NotSharedSystem, proxies, objects) -> np.ndarray:
-        n = len(proxies)
-        warmup = max(n // 15, 1000)
-        P, O = proxies.tolist(), objects.tolist()
-        for idx in range(n):
-            self.rec.now = idx
-            if idx == warmup:
-                self.rec.reset_window()
-            i, k = P[idx], O[idx]
-            st = system.get_autofetch(i, k, 1)
-            if st.result is GetResult.MISS:
-                self.rec.hook("attach", i, k)
-            for ev in st.evictions:
-                self.rec.hook("detach", ev.proxy, ev.key)
-        self.rec.now = n
-        self.rec.finalize()
-        return self.rec.occupancy()
-
-
 def main() -> dict:
     b = (64, 64, 8)
     n_requests = table1_requests()
     lam = rate_matrix(N_OBJECTS, list(ALPHAS))
     trace = sample_trace(lam, n_requests, seed=11)
+    warmup = max(n_requests // 15, 1000)
 
     with Timer() as tm:
-        ns = NotSharedSystem(list(b))
-        h_ns = _NotSharedOccupancy(3, N_OBJECTS).run(ns, trace.proxies, trace.objects)
-
-        shared = SharedLRUCache(list(b), physical_capacity=B_PHYSICAL)
-        rec = OccupancyRecorder(3, N_OBJECTS).attach_to(shared)
-        warmup = max(n_requests // 15, 1000)
-        P, O = trace.proxies.tolist(), trace.objects.tolist()
-        for idx in range(n_requests):
-            rec.now = idx
-            if idx == warmup:
-                rec.reset_window()
-            i, k = P[idx], O[idx]
-            if shared.get(i, k).result is GetResult.MISS:
-                shared.set(i, k, 1)
-        rec.now = n_requests
-        rec.finalize()
-        h_sh = rec.occupancy()
+        h_ns = simulate_trace(
+            SimParams(allocations=b, variant="noshare"),
+            trace,
+            N_OBJECTS,
+            warmup=warmup,
+        ).occupancy
+        h_sh = simulate_trace(
+            SimParams(allocations=b, physical_capacity=B_PHYSICAL),
+            trace,
+            N_OBJECTS,
+            warmup=warmup,
+        ).occupancy
 
     rows, all_pred, all_ref = {}, [], []
     for i in range(3):
@@ -108,6 +76,7 @@ def main() -> dict:
         "prop31_dominance_ok": prop31_ok,
         "prop31_worst_margin": prop31_margin,
         "mean_gain_sharing": float(diff.mean()),
+        "engine": "fastsim",
     }
     save_artifact("table3_noshare", payload)
 

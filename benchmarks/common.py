@@ -26,6 +26,16 @@ ARTIFACTS.mkdir(exist_ok=True)
 
 FULL = os.environ.get("REPRO_FULL", "0") not in ("0", "", "false")
 
+# Smoke scale: every benchmark runs in seconds so CI can exercise the
+# whole harness end to end. Set by ``python -m benchmarks.run --quick``
+# or REPRO_QUICK=1; read it via quick_mode() (run.py flips it after
+# import).
+QUICK = os.environ.get("REPRO_QUICK", "0") not in ("0", "", "false")
+
+
+def quick_mode() -> bool:
+    return QUICK and not FULL
+
 # ---------------------------------------------------------------------------
 # The paper's Section V setup (Tables I-III): J=3 LRU-lists over a B=1000
 # physical cache, unit-length objects, Zipf alphas (0.75, 0.5, 1.0),
@@ -81,16 +91,22 @@ FIG2_REQUESTS = 3_000_000
 
 def fig2_scale() -> Tuple[Tuple[int, ...], int, int, int]:
     """(allocations, N, B, n_requests) for the Section VI-C workload,
-    reduced 10x by default (same shape, same b/N ratio regime)."""
+    reduced 10x by default (same shape, same b/N ratio regime); --quick
+    shrinks it another 10x for smoke runs."""
     if FULL:
         b = FIG2_B_UNITS
         return b, FIG2_N, sum(b), FIG2_REQUESTS
+    if quick_mode():
+        b = tuple(x // 100 for x in FIG2_B_UNITS)
+        return b, FIG2_N // 100, sum(b), FIG2_REQUESTS // 100
     b = tuple(x // 10 for x in FIG2_B_UNITS)
     return b, FIG2_N // 10, sum(b), FIG2_REQUESTS // 10
 
 
 def table1_requests() -> int:
-    return 10_000_000 if FULL else 1_500_000
+    if FULL:
+        return 10_000_000
+    return 100_000 if quick_mode() else 1_500_000
 
 
 def save_artifact(name: str, payload: dict) -> Path:

@@ -6,6 +6,7 @@ Usage:
     PYTHONPATH=src python -m benchmarks.run            # reduced sizes
     REPRO_FULL=1 PYTHONPATH=src python -m benchmarks.run   # paper scale
     PYTHONPATH=src python -m benchmarks.run table2_ws rre  # subset
+    PYTHONPATH=src python -m benchmarks.run --quick    # CI smoke scale
 """
 
 from __future__ import annotations
@@ -21,6 +22,7 @@ BENCHES = [
     ("fig2_ripple", "benchmarks.bench_fig2_ripple"),      # also covers Table V
     ("rre", "benchmarks.bench_rre"),
     ("slru", "benchmarks.bench_slru"),
+    ("simthroughput", "benchmarks.bench_simthroughput"),  # engine speedup
     ("admission", "benchmarks.bench_admission"),
     ("serving", "benchmarks.bench_serving"),
     ("roofline", "benchmarks.bench_roofline"),
@@ -30,7 +32,19 @@ BENCHES = [
 def main() -> None:
     import importlib
 
-    selected = set(sys.argv[1:])
+    args = sys.argv[1:]
+    if "--quick" in args:
+        args = [a for a in args if a != "--quick"]
+        from benchmarks import common
+
+        common.QUICK = True
+    selected = set(args)
+    known = {name for name, _ in BENCHES}
+    unknown = selected - known
+    if unknown:
+        print(f"unknown benchmark(s): {', '.join(sorted(unknown))}")
+        print(f"available: {', '.join(sorted(known))}")
+        sys.exit(2)
     failures = []
     for name, module in BENCHES:
         if selected and name not in selected:

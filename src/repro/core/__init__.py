@@ -7,6 +7,11 @@ Layers:
   physical cache with per-object length apportionment and the
   ripple-eviction operator loop.
 * :mod:`~repro.core.slru` — Section VII: Segmented-LRU (HOT/WARM/COLD).
+* :mod:`~repro.core.fastsim` — the array-based Monte-Carlo engine:
+  struct-of-arrays linked lists + whole-trace drivers (Python / C / XLA
+  backends), event-equivalent to the reference classes above and 2-3
+  orders of magnitude faster; use :func:`~repro.core.fastsim.
+  simulate_trace` for anything that drives millions of IRM requests.
 * :mod:`~repro.core.workingset` — Section IV: working-set approximation
   of hit probabilities (JAX fixed-point solver; L1/Lstar/L2/full).
 * :mod:`~repro.core.admission` — Section IV-C: overbooking + admission.
@@ -27,6 +32,13 @@ from .shared_lru import (  # noqa: F401
     SharedLRUCache,
 )
 from .slru import SegmentedSharedLRUCache  # noqa: F401
+from .fastsim import (  # noqa: F401
+    FastSegmentedSharedLRU,
+    FastSharedLRU,
+    SimParams,
+    SimResult,
+    simulate_trace,
+)
 from .baselines import NotSharedSystem, PooledLRU, SimpleLRU  # noqa: F401
 from .irm import (  # noqa: F401
     IRMTrace,
@@ -41,6 +53,7 @@ from .workingset import (  # noqa: F401
     expected_inverse_one_plus,
     hit_probabilities,
     solve_workingset,
+    solve_workingset_batch,
     solve_workingset_unshared,
 )
 from .admission import (  # noqa: F401

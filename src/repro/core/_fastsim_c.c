@@ -1,0 +1,319 @@
+/* C hot loop of the shared-LRU array simulation engine.
+ *
+ * A line-for-line port of the (slower, equivalent) pure-Python loops in
+ * repro/core/fastsim.py — which are themselves proven equivalent,
+ * event for event, to the reference SharedLRUCache by
+ * tests/test_fastsim.py. Same struct-of-arrays layout: intrusive
+ * doubly-linked lists in flat int64 vectors, holder bitmasks, exact
+ * lcm-scaled virtual lengths, ghost list, inline residence-time (PASTA)
+ * occupancy accumulation.
+ *
+ * Built on demand by repro/core/fastsim_c.py with the system C compiler
+ * (cc -O2 -shared -fPIC); if that fails the Python loops take over.
+ */
+
+#include <stdint.h>
+#include <string.h>
+
+#define NIL (-1)
+
+/* out_scalars layout (in/out) */
+enum {
+    SC_PHYS = 0,
+    SC_GHEAD,
+    SC_GTAIL,
+    SC_NGHOSTS,
+    SC_TSTART,
+    SC_NHITLIST,
+    SC_NHITCACHE,
+    SC_NMISS,
+    SC_NSETS,
+    SC_NPRIM,
+    SC_NRIP,
+    SC_NBATCH,
+    SC_COUNT
+};
+
+/* One full trim loop: repeatedly evict the lowest-rank object of the
+ * list with the largest overflow until none remains (the paper's
+ * operator loop). The limit of list j is b_scaled[j] when j == trig,
+ * else lim_other[j]; pass lim_other = b_scaled with trig = -1 for the
+ * RRE delayed-batch trim. Returns the eviction count; *n_rip_out gets
+ * the number with worst != trig (ignored when NULL). Static + few call
+ * sites, so the compiler inlines it back into the drive loop. */
+static int64_t trim_loop(
+    int64_t J, int64_t N, int64_t trig,
+    const int64_t *b_scaled, const int64_t *lim_other,
+    const int64_t *share, int64_t ghost_retention,
+    int64_t now, int64_t t_start,
+    int64_t *nxt, int64_t *prv, int64_t *head, int64_t *tail,
+    uint64_t *hmask, int64_t *length, int64_t *vlen,
+    int64_t *gnxt, int64_t *gprv, uint8_t *isghost,
+    int64_t *res_since, int64_t *tot_time,
+    int64_t *phys, int64_t *ghead, int64_t *gtail, int64_t *n_ghosts,
+    int64_t *n_rip_out)
+{
+    int64_t n_ev = 0, n_rp = 0;
+    for (;;) {
+        int64_t worst = -1, worst_over = 0;
+        for (int64_t j = 0; j < J; j++) {
+            int64_t over = vlen[j] - (j == trig ? b_scaled[j] : lim_other[j]);
+            if (over > worst_over) { worst = j; worst_over = over; }
+        }
+        if (worst < 0) break;
+        int64_t wbase = worst * N;
+        int64_t v = tail[worst], wv = wbase + v;
+        int64_t nv = nxt[wv];
+        tail[worst] = nv;
+        if (nv == NIL) head[worst] = NIL; else prv[wbase + nv] = NIL;
+        int64_t since = res_since[wv];
+        if (since >= 0) {
+            tot_time[wv] += now - (since > t_start ? since : t_start);
+            res_since[wv] = -1;
+        }
+        uint64_t mv = hmask[v];
+        int64_t lv = length[v];
+        int64_t p_old = (int64_t)__builtin_popcountll(mv);
+        mv &= ~(1ull << worst);
+        hmask[v] = mv;
+        vlen[worst] -= lv * share[p_old];
+        if (mv) {
+            int64_t delta = lv * share[p_old - 1] - lv * share[p_old];
+            while (mv) {
+                vlen[__builtin_ctzll(mv)] += delta;  /* inflation */
+                mv &= mv - 1;
+            }
+        } else if (ghost_retention) {
+            if (*gtail == NIL) *ghead = v; else gnxt[*gtail] = v;
+            gprv[v] = *gtail; gnxt[v] = NIL; *gtail = v;
+            isghost[v] = 1; (*n_ghosts)++;
+        } else {
+            *phys -= lv; length[v] = 0;
+        }
+        n_ev++;
+        if (worst != trig) n_rp++;
+    }
+    if (n_rip_out) *n_rip_out = n_rp;
+    return n_ev;
+}
+
+int64_t simulate_flat(
+    int64_t n, int64_t J, int64_t N,
+    const int32_t *P, const int64_t *O,
+    const int64_t *lengths,       /* (N)   l_k                         */
+    const int64_t *b_scaled,      /* (J)   primary allocations * M     */
+    const int64_t *bhat_scaled,   /* (J)   RRE ripple allocations * M  */
+    const int64_t *share,         /* (J+2) [0, M/1, ..., M/J, 0]       */
+    int64_t scale, int64_t B, int64_t ghost_retention,
+    int64_t warmup, int64_t ripple_from, int64_t batch_interval,
+    /* state, preallocated and initialised by the caller: */
+    int64_t *nxt, int64_t *prv,           /* (J*N) */
+    int64_t *head, int64_t *tail,         /* (J)   */
+    uint64_t *hmask,                      /* (N)   */
+    int64_t *length,                      /* (N)   */
+    int64_t *vlen,                        /* (J)   */
+    int64_t *gnxt, int64_t *gprv,         /* (N)   */
+    uint8_t *isghost,                     /* (N)   */
+    int64_t *res_since, int64_t *tot_time,/* (J*N) */
+    /* outputs: */
+    int64_t *sc,                          /* (SC_COUNT) scalars, in/out */
+    int64_t *hits_p, int64_t *reqs_p,     /* (J) post-warmup counters   */
+    int64_t *hist, int64_t hist_len)      /* evictions-per-set histogram */
+{
+    int64_t phys = sc[SC_PHYS], ghead = sc[SC_GHEAD], gtail = sc[SC_GTAIL];
+    int64_t n_ghosts = sc[SC_NGHOSTS], t_start = sc[SC_TSTART];
+    int64_t n_hit_list = 0, n_hit_cache = 0, n_miss = 0;
+    int64_t n_sets = 0, n_prim = 0, n_rip = 0, n_batch = 0;
+    int64_t sets_since_batch = 0;
+
+    for (int64_t idx = 0; idx < n; idx++) {
+        if (idx == warmup) {
+            memset(tot_time, 0, (size_t)(J * N) * sizeof(int64_t));
+            t_start = idx;
+        }
+        int64_t i = (int64_t)P[idx];
+        int64_t k = O[idx];
+        int64_t base = i * N, ik = base + k;
+        uint64_t m = hmask[k];
+        if ((m >> i) & 1u) {
+            /* ---- HIT_LIST: promote to head of list i ---- */
+            n_hit_list++;
+            if (head[i] != k) {
+                int64_t p = prv[ik], nx = nxt[ik];
+                if (p == NIL) tail[i] = nx; else nxt[base + p] = nx;
+                prv[base + nx] = p;   /* nx != NIL: k is not the head */
+                int64_t h = head[i];
+                nxt[base + h] = k; prv[ik] = h; nxt[ik] = NIL; head[i] = k;
+            }
+            if (idx >= warmup) { reqs_p[i]++; hits_p[i]++; }
+            continue;
+        }
+        int64_t l = length[k];
+        int64_t is_set;
+        if (l > 0) {
+            /* ---- HIT_CACHE: attach to list i ---- */
+            n_hit_cache++;
+            if (m) {
+                int64_t p_old = (int64_t)__builtin_popcountll(m);
+                int64_t delta = l * share[p_old + 1] - l * share[p_old];
+                uint64_t mm = m;
+                while (mm) {
+                    vlen[__builtin_ctzll(mm)] += delta;  /* deflation */
+                    mm &= mm - 1;
+                }
+                hmask[k] = m | (1ull << i);
+                vlen[i] += l * share[p_old + 1];
+            } else {
+                /* resurrected ghost */
+                hmask[k] = 1ull << i;
+                vlen[i] += l * scale;
+                int64_t gp = gprv[k], gn = gnxt[k];
+                if (gp == NIL) ghead = gn; else gnxt[gp] = gn;
+                if (gn == NIL) gtail = gp; else gprv[gn] = gp;
+                isghost[k] = 0; n_ghosts--;
+            }
+            is_set = 0;
+        } else {
+            /* ---- MISS -> fetch + set(k, l_k) ---- */
+            n_miss++;
+            l = lengths[k];
+            while (phys + l > B && ghead != NIL) {
+                int64_t g = ghead;
+                ghead = gnxt[g];
+                if (ghead == NIL) gtail = NIL; else gprv[ghead] = NIL;
+                isghost[g] = 0; n_ghosts--;
+                phys -= length[g]; length[g] = 0;
+            }
+            length[k] = l; phys += l;
+            hmask[k] = 1ull << i;
+            vlen[i] += l * scale;
+            is_set = 1;
+        }
+        /* link k at head of list i (+ occupancy attach) */
+        {
+            int64_t h = head[i];
+            if (h == NIL) tail[i] = k; else nxt[base + h] = k;
+            prv[ik] = h; nxt[ik] = NIL; head[i] = k;
+            res_since[ik] = idx;
+        }
+        /* ---- eviction loop (RRE thresholds; trigger = i) ---- */
+        int64_t n_rp;
+        int64_t n_ev = trim_loop(
+            J, N, i, b_scaled, bhat_scaled, share, ghost_retention,
+            idx, t_start, nxt, prv, head, tail, hmask, length, vlen,
+            gnxt, gprv, isghost, res_since, tot_time,
+            &phys, &ghead, &gtail, &n_ghosts, &n_rp);
+        if (is_set) {
+            /* reconcile transient physical overshoot */
+            while (phys > B && ghead != NIL) {
+                int64_t g = ghead;
+                ghead = gnxt[g];
+                if (ghead == NIL) gtail = NIL; else gprv[ghead] = NIL;
+                isghost[g] = 0; n_ghosts--;
+                phys -= length[g]; length[g] = 0;
+            }
+            if (batch_interval > 0 && ++sets_since_batch >= batch_interval) {
+                /* delayed batch trim to primary allocations (RRE) */
+                sets_since_batch = 0;
+                n_batch += trim_loop(
+                    J, N, -1, b_scaled, b_scaled, share, ghost_retention,
+                    idx, t_start, nxt, prv, head, tail, hmask, length, vlen,
+                    gnxt, gprv, isghost, res_since, tot_time,
+                    &phys, &ghead, &gtail, &n_ghosts, (int64_t *)0);
+            }
+            if (idx >= ripple_from) {
+                n_sets++;
+                hist[n_ev < hist_len ? n_ev : hist_len - 1]++;
+                n_rip += n_rp;
+                n_prim += n_ev - n_rp;
+            }
+        }
+        if (idx >= warmup) reqs_p[i]++;
+    }
+
+    /* finalize open residence intervals at t = n */
+    for (int64_t ik = 0; ik < J * N; ik++) {
+        int64_t since = res_since[ik];
+        if (since >= 0) {
+            tot_time[ik] += n - (since > t_start ? since : t_start);
+            res_since[ik] = n;
+        }
+    }
+
+    sc[SC_PHYS] = phys; sc[SC_GHEAD] = ghead; sc[SC_GTAIL] = gtail;
+    sc[SC_NGHOSTS] = n_ghosts; sc[SC_TSTART] = t_start;
+    sc[SC_NHITLIST] = n_hit_list; sc[SC_NHITCACHE] = n_hit_cache;
+    sc[SC_NMISS] = n_miss;
+    sc[SC_NSETS] = n_sets; sc[SC_NPRIM] = n_prim; sc[SC_NRIP] = n_rip;
+    sc[SC_NBATCH] = n_batch;
+    return 0;
+}
+
+/* J independent full-length-charging LRUs (the Table-III "not shared"
+ * baseline), driven with get_autofetch semantics. */
+int64_t simulate_noshare(
+    int64_t n, int64_t J, int64_t N,
+    const int32_t *P, const int64_t *O,
+    const int64_t *lengths, const int64_t *b,
+    int64_t warmup,
+    int64_t *nxt, int64_t *prv,           /* (J*N) */
+    int64_t *head, int64_t *tail,         /* (J)   */
+    uint8_t *inlist,                      /* (J*N) */
+    int64_t *used,                        /* (J)   */
+    int64_t *res_since, int64_t *tot_time,/* (J*N) */
+    int64_t *sc,                          /* [t_start, n_hit, n_miss] */
+    int64_t *hits_p, int64_t *reqs_p)     /* (J) */
+{
+    int64_t t_start = sc[0], n_hit = 0, n_miss = 0;
+    for (int64_t idx = 0; idx < n; idx++) {
+        if (idx == warmup) {
+            memset(tot_time, 0, (size_t)(J * N) * sizeof(int64_t));
+            t_start = idx;
+        }
+        int64_t i = (int64_t)P[idx];
+        int64_t k = O[idx];
+        int64_t base = i * N, ik = base + k;
+        if (inlist[ik]) {
+            n_hit++;
+            if (head[i] != k) {
+                int64_t p = prv[ik], nx = nxt[ik];
+                if (p == NIL) tail[i] = nx; else nxt[base + p] = nx;
+                prv[base + nx] = p;
+                int64_t h = head[i];
+                nxt[base + h] = k; prv[ik] = h; nxt[ik] = NIL; head[i] = k;
+            }
+            if (idx >= warmup) { reqs_p[i]++; hits_p[i]++; }
+            continue;
+        }
+        n_miss++;
+        inlist[ik] = 1;
+        used[i] += lengths[k];
+        int64_t h = head[i];
+        if (h == NIL) tail[i] = k; else nxt[base + h] = k;
+        prv[ik] = h; nxt[ik] = NIL; head[i] = k;
+        res_since[ik] = idx;
+        while (used[i] > b[i]) {
+            int64_t v = tail[i], iv = base + v;
+            int64_t nv = nxt[iv];
+            tail[i] = nv;
+            if (nv == NIL) head[i] = NIL; else prv[base + nv] = NIL;
+            inlist[iv] = 0;
+            used[i] -= lengths[v];
+            int64_t since = res_since[iv];
+            if (since >= 0) {
+                tot_time[iv] += idx - (since > t_start ? since : t_start);
+                res_since[iv] = -1;
+            }
+        }
+        if (idx >= warmup) reqs_p[i]++;
+    }
+    for (int64_t ik = 0; ik < J * N; ik++) {
+        int64_t since = res_since[ik];
+        if (since >= 0) {
+            tot_time[ik] += n - (since > t_start ? since : t_start);
+            res_since[ik] = n;
+        }
+    }
+    sc[0] = t_start; sc[1] = n_hit; sc[2] = n_miss;
+    return 0;
+}

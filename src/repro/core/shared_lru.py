@@ -306,7 +306,7 @@ class SharedLRUCache:
         self._physical_evict(key)
         return True
 
-    def _make_physical_room(self, need: int) -> None:
+    def _make_physical_room(self, need: int, exclude: object = None) -> None:
         """Evict ghosts (LRU order) to make ``need`` bytes fit if possible.
 
         A transient overshoot beyond ``B`` is permitted *between* the
@@ -314,9 +314,17 @@ class SharedLRUCache:
         mirrors MCD-OS, which links the item before trimming LRUs); it is
         reconciled by :meth:`_reconcile_physical` immediately after the
         loop, which always succeeds because held bytes <= sum(b_i) <= B.
+
+        ``exclude`` protects the object a ``set`` is currently updating:
+        evicting it mid-update would corrupt the length accounting.
         """
         while self.phys_used + need > self.B and self.ghosts:
-            victim = next(iter(self.ghosts))
+            victims = iter(self.ghosts)
+            victim = next(victims)
+            if victim == exclude:
+                victim = next(victims, None)
+                if victim is None:
+                    return
             self._physical_evict(victim)
 
     def _reconcile_physical(self) -> None:
@@ -433,7 +441,7 @@ class SharedLRUCache:
         if length != old_len:
             # Update in place: adjust every holder's share; physical usage.
             if length > old_len:
-                self._make_physical_room(length - old_len)
+                self._make_physical_room(length - old_len, exclude=key)
             self.phys_used += length - old_len
             self.length[key] = length
             hs = self.holders.get(key)

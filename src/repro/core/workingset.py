@@ -216,6 +216,53 @@ def _solve_jax(
     return t, h, L, res, iters, delta
 
 
+@functools.lru_cache(maxsize=None)
+def _jitted_solver(
+    kind: str,
+    n_quad: int,
+    n_outer: int,
+    n_bisect: int,
+    damping: float,
+    tol: float,
+    batched: bool,
+):
+    """One jit-compiled solver per hyperparameter set (cached).
+
+    Previously every ``solve_workingset`` call wrapped a fresh
+    ``functools.partial`` in ``jax.jit``, so the Table-II sweep paid 8
+    compilations for 8 identical-shape solves. The cache reuses the
+    executable; ``batched=True`` additionally ``vmap``s over a batch of
+    allocation vectors so a whole ``b``-grid is one compiled call.
+    """
+    fn = functools.partial(
+        _solve_jax,
+        kind=kind,
+        n_quad=n_quad,
+        n_outer=n_outer,
+        n_bisect=n_bisect,
+        damping=damping,
+        tol=tol,
+    )
+    if batched:
+        fn = jax.vmap(fn, in_axes=(None, None, 0))
+    return jax.jit(fn)
+
+
+def _check_inputs(lam, lengths, b, attribution):
+    J, N = lam.shape
+    if lengths.shape != (N,) or b.shape[-1] != J:
+        raise ValueError("shape mismatch between lam, lengths, b")
+    if attribution not in ATTRIBUTIONS:
+        raise ValueError(f"unknown attribution {attribution!r}")
+    if attribution != "full" and np.any(b >= lengths.sum() / J):
+        raise ValueError(
+            "paper eq. (9) violated: some b_i >= sum(lengths)/J — the "
+            "shared working-set fixed point need not exist"
+        )
+    if attribution == "full" and np.any(b >= lengths.sum()):
+        raise ValueError("b_i >= total catalogue size: cache never evicts")
+
+
 def solve_workingset(
     lam,
     lengths,
@@ -239,32 +286,16 @@ def solve_workingset(
     lengths = np.asarray(lengths, dtype=np.float64)
     b = np.asarray(b, dtype=np.float64)
     J, N = lam.shape
-    if lengths.shape != (N,) or b.shape != (J,):
+    if b.shape != (J,):
         raise ValueError("shape mismatch between lam, lengths, b")
-    if attribution not in ATTRIBUTIONS:
-        raise ValueError(f"unknown attribution {attribution!r}")
-    if attribution != "full" and np.any(b >= lengths.sum() / J):
-        raise ValueError(
-            "paper eq. (9) violated: some b_i >= sum(lengths)/J — the "
-            "shared working-set fixed point need not exist"
-        )
-    if attribution == "full" and np.any(b >= lengths.sum()):
-        raise ValueError("b_i >= total catalogue size: cache never evicts")
+    _check_inputs(lam, lengths, b, attribution)
 
     if n_quad is None:
         n_quad = max(8, (J + 1) // 2 + 1)
 
     dtype = jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
-    fn = jax.jit(
-        functools.partial(
-            _solve_jax,
-            kind=attribution,
-            n_quad=n_quad,
-            n_outer=n_outer,
-            n_bisect=n_bisect,
-            damping=damping,
-            tol=tol,
-        )
+    fn = _jitted_solver(
+        attribution, n_quad, n_outer, n_bisect, damping, tol, False
     )
     t, h, L, res, iters, delta = fn(
         jnp.asarray(lam, dtype), jnp.asarray(lengths, dtype), jnp.asarray(b, dtype)
@@ -283,3 +314,61 @@ def solve_workingset(
 def solve_workingset_unshared(lam, lengths, b, **kw) -> WorkingSetSolution:
     """Classical Denning-Schwartz (no sharing): eq. (2)-(3)."""
     return solve_workingset(lam, lengths, b, attribution="full", **kw)
+
+
+def solve_workingset_batch(
+    lam,
+    lengths,
+    b_batch,
+    attribution: str = "L1",
+    *,
+    n_quad: int | None = None,
+    n_outer: int = 200,
+    n_bisect: int = 90,
+    damping: float = 0.7,
+    tol: float = 1e-7,
+) -> list:
+    """Solve eq. (8) for a whole batch of allocation vectors at once.
+
+    ``b_batch``: (K, J) — e.g. the 8 Table-II ``b``-combinations. One
+    ``jax.vmap``-ed jit call replaces K sequential solves (and K
+    recompilations under the old per-call jit), so the Table-II sweep
+    compiles once and solves the grid in a single XLA execution. The
+    batched while-loop iterates until the *slowest* combo converges;
+    per-combo ``converged`` is still reported from its final delta.
+
+    Returns a list of K :class:`WorkingSetSolution`.
+    """
+    lam = np.asarray(lam, dtype=np.float64)
+    lengths = np.asarray(lengths, dtype=np.float64)
+    b_batch = np.atleast_2d(np.asarray(b_batch, dtype=np.float64))
+    J, N = lam.shape
+    if b_batch.shape[1] != J:
+        raise ValueError("b_batch must be (K, J)")
+    for b in b_batch:
+        _check_inputs(lam, lengths, b, attribution)
+
+    if n_quad is None:
+        n_quad = max(8, (J + 1) // 2 + 1)
+
+    dtype = jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
+    fn = _jitted_solver(attribution, n_quad, n_outer, n_bisect, damping, tol, True)
+    t, h, L, res, iters, delta = fn(
+        jnp.asarray(lam, dtype),
+        jnp.asarray(lengths, dtype),
+        jnp.asarray(b_batch, dtype),
+    )
+    t, h, L, res = (np.asarray(x, np.float64) for x in (t, h, L, res))
+    iters, delta = np.asarray(iters), np.asarray(delta)
+    out = []
+    for k in range(b_batch.shape[0]):
+        sol = WorkingSetSolution(
+            t=t[k],
+            h=h[k],
+            L=L[k],
+            residual=res[k],
+            iterations=int(iters[k]),
+            converged=bool(delta[k] <= tol),
+        )
+        out.append(sol.with_rates(lam))
+    return out

@@ -1,6 +1,14 @@
-"""Property-based tests (hypothesis) of the paper's system invariants."""
+"""Property-based tests (hypothesis) of the paper's system invariants.
+
+The whole module is hypothesis-driven, so it is skipped when hypothesis
+is not installed; ``tests/test_fastsim.py`` covers the same invariants
+with plain-numpy randomized differential tests.
+"""
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import GetResult, NotSharedSystem, SharedLRUCache

@@ -10,29 +10,21 @@ from repro.core import (
     GetResult,
     MCDOSServer,
     MCDServer,
-    NotSharedSystem,
-    SharedLRUCache,
+    SimParams,
     consistent_route,
     rate_matrix,
     sample_trace,
+    simulate_trace,
     solve_workingset,
 )
-from repro.core.metrics import OccupancyRecorder
 
 
-def _simulate(cache, trace, n_objects, warmup_frac=0.1):
-    rec = OccupancyRecorder(cache.J, n_objects).attach_to(cache)
-    n = len(trace.proxies)
-    P, O = trace.proxies.tolist(), trace.objects.tolist()
-    for idx in range(n):
-        rec.now = idx
-        if idx == int(n * warmup_frac):
-            rec.reset_window()
-        if cache.get(P[idx], O[idx]).result is GetResult.MISS:
-            cache.set(P[idx], O[idx], 1)
-    rec.now = n
-    rec.finalize()
-    return rec.occupancy()
+def _simulate(params, trace, n_objects, warmup_frac=0.1):
+    """Whole-trace occupancy via the array engine (fastsim)."""
+    n = len(trace)
+    return simulate_trace(
+        params, trace, n_objects, warmup=int(n * warmup_frac)
+    ).occupancy
 
 
 def test_sharing_beats_not_shared_hit_rates():
@@ -40,18 +32,16 @@ def test_sharing_beats_not_shared_hit_rates():
     N = 300
     lam = rate_matrix(N, [0.8, 0.9, 1.0])
     trace = sample_trace(lam, 150_000, seed=5)
-    h_sh = _simulate(SharedLRUCache([16, 16, 16], physical_capacity=N),
-                     trace, N)
-    ns = NotSharedSystem([16, 16, 16])
-    hit = np.zeros(3)
-    req = np.zeros(3)
-    for idx, (i, k) in enumerate(zip(trace.proxies.tolist(),
-                                     trace.objects.tolist())):
-        st = ns.get_autofetch(i, k, 1)
-        if idx > 15_000:
-            req[i] += 1
-            hit[i] += st.result is GetResult.HIT_LIST
-    h_ns = hit / req
+    h_sh = _simulate(
+        SimParams(allocations=(16, 16, 16), physical_capacity=N), trace, N
+    )
+    ns = simulate_trace(
+        SimParams(allocations=(16, 16, 16), variant="noshare"),
+        trace,
+        N,
+        warmup=15_000,
+    )
+    h_ns = ns.hit_rate_by_proxy
     # weighted hit rate per proxy must improve under sharing
     w = lam / lam.sum(axis=1, keepdims=True)
     hr_sh = (w * h_sh).sum(axis=1)
@@ -62,7 +52,9 @@ def test_workingset_predicts_simulation():
     N = 400
     lam = rate_matrix(N, [0.7, 1.0])
     trace = sample_trace(lam, 200_000, seed=9)
-    h_sim = _simulate(SharedLRUCache([24, 24], physical_capacity=N), trace, N)
+    h_sim = _simulate(
+        SimParams(allocations=(24, 24), physical_capacity=N), trace, N
+    )
     sol = solve_workingset(lam, np.ones(N), np.array([24.0, 24.0]))
     head = slice(0, 50)
     rel = np.abs(sol.h[:, head] - h_sim[:, head]) / np.maximum(
