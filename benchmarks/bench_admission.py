@@ -11,14 +11,18 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import (
-    AdmissionController,
-    rate_matrix,
-    solve_workingset,
-    virtual_allocations,
-)
+from repro.core import AdmissionController, virtual_allocations
+from repro.scenario import Workload
 
 from .common import N_OBJECTS, Timer, csv_row, save_artifact
+
+
+def _tenant_rates(alphas):
+    """Tenant demand via the scenario Workload axis (same IRM/Zipf
+    definition the presets use)."""
+    return Workload(
+        kind="irm", n_objects=N_OBJECTS, alphas=tuple(alphas)
+    ).rates()
 
 
 def main() -> dict:
@@ -33,7 +37,7 @@ def main() -> dict:
         # Overbooking factor as tenants join: virtual b for J tenants.
         factors = {}
         for J in (2, 3, 4, 6, 8):
-            lam = rate_matrix(N_OBJECTS, alphas[:J])
+            lam = _tenant_rates(alphas[:J])
             b, _ = virtual_allocations(lam, lengths, np.full(J, b_star))
             factors[J] = {
                 "sum_b_star": J * b_star,
@@ -54,7 +58,7 @@ def main() -> dict:
                 d = ctl.admit(f"tenant{j}", b_star)
             if d.admitted:
                 admitted.append(j)
-                lam = rate_matrix(N_OBJECTS, alphas[: len(admitted)])
+                lam = _tenant_rates(alphas[: len(admitted)])
                 for idx, name in enumerate(f"tenant{a}" for a in admitted):
                     ctl.observe(name, lam[idx])
                 ctl.refresh()

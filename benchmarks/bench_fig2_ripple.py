@@ -2,36 +2,29 @@
 
 Section VI-C workload: J=9 very different proxies (Zipf 0.5+0.5(i-1)),
 1e6 items of 100 kB, 3 GB cache, allocations 3x100 MB + 3x200 MB +
-3x700 MB (scaled 10x down by default; REPRO_FULL=1 for paper scale).
+3x700 MB — the ``fig2_ripple`` preset, scaled 10x down by default
+(REPRO_FULL=1 for paper scale).
 
 Reported:
 * histogram of evictions per set under MCD-OS (paper: max ~9-10, only
-  16 % of sets ripple beyond one eviction) — measured on the array
-  engine (``repro.core.fastsim``), which is event-equivalent to the
-  reference server and fast enough for the full Section VI-C trace;
+  16 % of sets ripple beyond one eviction) — from the scenario run's
+  ripple statistics;
 * mean/std set execution times for MCD-OS vs plain MCD with one pooled
   LRU of the same collective size (paper Table V: 474 vs 412 us — the
   *ratio*, ~1.15x, is the implementation-independent claim). Wall-clock
   per-command timing is inherently about the reference server objects,
   so that part still drives ``MCDOSServer``/``MCDServer`` directly, on a
-  capped sub-trace.
+  capped sub-trace drawn from the same preset workload.
 """
 
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core import (
-    GetResult,
-    MCDOSServer,
-    MCDServer,
-    SimParams,
-    rate_matrix,
-    sample_trace,
-    simulate_trace,
-)
+from repro.core import GetResult, MCDOSServer, MCDServer
+from repro.scenario import get_preset
 
-from .common import FIG2_ALPHAS, Timer, csv_row, fig2_scale, save_artifact
+from .common import Timer, csv_row, fig2_scale_factors, save_artifact
 
 # Wall-clock Table-V timing drives the reference servers per request;
 # cap that part so the benchmark stays dominated by the fast engine.
@@ -52,27 +45,22 @@ def drive(server, proxies, objects, warmup: int) -> None:
             server.set(i, k, 1)  # 1 unit = 100 kB
 
 
-
 def main() -> dict:
-    b, n_objects, B, n_requests = fig2_scale()
-    lam = rate_matrix(n_objects, list(FIG2_ALPHAS))
-    trace = sample_trace(lam, n_requests, seed=23)
-    warmup = n_requests // 10
+    sc = get_preset("fig2_ripple").scaled(*fig2_scale_factors())
+    b = tuple(sc.system.allocations)
+    n_objects = sc.workload.n_objects
+    B = sc.system.capacity()
+    n_requests = sc.n_requests
 
-    # ---- Fig. 2: evictions-per-set histogram on the array engine -----
+    # ---- Fig. 2: evictions-per-set histogram via the scenario run ----
     with Timer() as tm:
-        res = simulate_trace(
-            SimParams(allocations=tuple(b), physical_capacity=B),
-            trace,
-            n_objects,
-            warmup=warmup,
-        )
-    hist = res.histogram()
-    frac_multi = res.frac_multi_eviction
+        rep = sc.run()
+    hist = {int(k): v for k, v in rep.ripple["evictions_per_set"].items()}
+    frac_multi = rep.ripple["frac_multi_eviction"]
 
     # ---- Table V: per-set wall clock on the reference servers --------
     n_lat = min(n_requests, LATENCY_MAX_REQUESTS)
-    lat_trace = sample_trace(lam, n_lat, seed=24)
+    lat_trace = sc.workload.sample(n_lat, seed=sc.seed + 1)
     lat_warmup = n_lat // 10
     mcdos = MCDOSServer(list(b), B, n_objects_hint=1)
     drive(mcdos, lat_trace.proxies, lat_trace.objects, lat_warmup)
@@ -82,12 +70,14 @@ def main() -> dict:
     mc_mean, mc_std, mc_n = mcd.stats.latency.summary("set")
 
     payload = {
+        "preset": "fig2_ripple",
+        "scenario": sc.to_dict(),
         "allocations": list(b),
         "n_objects": n_objects,
         "B": B,
         "n_requests": n_requests,
-        "engine": "fastsim",
-        "engine_requests_per_sec": res.requests_per_sec,
+        "engine": rep.backend,
+        "engine_requests_per_sec": rep.throughput_rps,
         "evictions_per_set_histogram": hist,
         "frac_multi_eviction": frac_multi,
         "paper_frac_multi_eviction": 0.16,
@@ -106,12 +96,13 @@ def main() -> dict:
 
     print(f"# Fig. 2: evictions-per-set histogram (J=9, N={n_objects}, B={B})")
     total = sum(hist.values())
-    for k in sorted(hist):
-        if hist[k] or k <= 10:
-            bar = "#" * int(60 * hist[k] / max(total, 1))
-            print(f"  {k:3d}: {hist[k]:9d}  {bar}")
+    for k in sorted(set(hist) | set(range(3))):
+        c = hist.get(k, 0)
+        if c or k <= 10:
+            bar = "#" * int(60 * c / max(total, 1))
+            print(f"  {k:3d}: {c:9d}  {bar}")
     print(f"# fraction of sets with >1 eviction: {frac_multi:.3f} (paper: 0.16)")
-    print(f"# engine: {res.requests_per_sec:,.0f} req/s over {n_requests} requests")
+    print(f"# engine: {rep.throughput_rps:,.0f} req/s over {n_requests} requests")
     print(f"# Table V: set exec time MCD-OS {os_mean:.1f}+-{os_std:.1f} us vs "
           f"MCD {mc_mean:.1f}+-{mc_std:.1f} us -> ratio "
           f"{os_mean / max(mc_mean, 1e-9):.2f} (paper 1.15)")

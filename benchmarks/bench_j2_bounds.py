@@ -2,37 +2,31 @@
 (by ~30 % in the paper's setting) while L2 overestimates — together they
 bracket the truth; Lstar is only marginally above L1.
 
-We simulate a J=2 shared cache (occupancy estimator) and solve the
-working-set approximation under all three attribution models.
+One ``j2_bounds`` preset, four estimators: the Monte-Carlo run plus
+``with_estimator("working_set", attribution=...)`` under L1/Lstar/L2 —
+the scenario layer makes the simulator and the three analytic models
+interchangeable views of the same experiment.
 """
 
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core import SimParams, rate_matrix, sample_trace, simulate_trace, solve_workingset
+from repro.scenario import get_preset
 
-from .common import N_OBJECTS, RANKS, Timer, csv_row, save_artifact, table1_requests
+from .common import RANKS, Timer, csv_row, save_artifact, section5_scale
 
 
 def main() -> dict:
-    alphas = (0.75, 1.0)
-    b = (32, 32)
-    n_requests = table1_requests()
-    lam = rate_matrix(N_OBJECTS, list(alphas))
-    lengths = np.ones(N_OBJECTS)
+    sc = get_preset("j2_bounds").scaled(*section5_scale())
+    n_requests = sc.n_requests
 
     with Timer() as tm:
-        trace = sample_trace(lam, n_requests, seed=5)
-        h_sim = simulate_trace(
-            SimParams(allocations=b, physical_capacity=N_OBJECTS),
-            trace,
-            N_OBJECTS,
-            warmup=n_requests // 15,
-        ).occupancy
+        sim = sc.run()
+    h_sim = sim.hit_prob
 
     sols = {
-        kind: solve_workingset(lam, lengths, np.array(b, float), attribution=kind)
+        kind: sc.with_estimator("working_set", attribution=kind).run()
         for kind in ("L1", "Lstar", "L2")
     }
 
@@ -41,16 +35,18 @@ def main() -> dict:
     rows = {}
     under_L1, over_L2 = [], []
     for i in range(2):
-        sim = h_sim[i, head]
+        hs = h_sim[i, head]
         rows[i] = {
-            "sim": [float(h_sim[i, k - 1]) for k in RANKS],
+            "sim": sim.hit_prob_at_ranks(i, RANKS),
             **{
-                kind: [float(s.h[i, k - 1]) for k in RANKS]
-                for kind, s in sols.items()
+                kind: rep.hit_prob_at_ranks(i, RANKS)
+                for kind, rep in sols.items()
             },
         }
-        for kind, s in sols.items():
-            bias = float(np.mean((s.h[i, head] - sim) / np.maximum(sim, 1e-6)))
+        for kind, rep in sols.items():
+            bias = float(
+                np.mean((rep.hit_prob[i, head] - hs) / np.maximum(hs, 1e-6))
+            )
             rows[i][f"bias_{kind}"] = bias
         under_L1.append(rows[i]["bias_L1"])
         over_L2.append(rows[i]["bias_L2"])
@@ -59,8 +55,8 @@ def main() -> dict:
     l2_over = all(x > -0.02 for x in over_L2) and np.mean(over_L2) > np.mean(under_L1)
 
     payload = {
-        "alphas": alphas,
-        "b": b,
+        "preset": "j2_bounds",
+        "scenario": sc.to_dict(),
         "rows": rows,
         "L1_underestimates": l1_under,
         "L2_over_or_upper": l2_over,
@@ -68,6 +64,8 @@ def main() -> dict:
     }
     save_artifact("j2_bounds", payload)
 
+    alphas = sc.workload.alphas
+    b = sc.system.allocations
     print(f"# J=2 bounds (alphas={alphas}, b={b})")
     print("# i   rank:      1        10       100      1000")
     for i in range(2):

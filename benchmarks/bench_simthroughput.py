@@ -26,32 +26,21 @@ import time
 
 import numpy as np
 
-from repro.core import (
-    GetResult,
-    SharedLRUCache,
-    SimParams,
-    rate_matrix,
-    sample_trace,
-    simulate_trace,
-)
-from repro.core import fastsim_c
-from repro.core.fastsim import default_warmup
+from repro.core import GetResult, SharedLRUCache, fastsim_c
+from repro.core.fastsim import default_warmup, simulate_trace
 from repro.core.irm import IRMTrace
 from repro.core.metrics import OccupancyRecorder
+from repro.scenario import get_preset
 
 from .common import (
-    ALPHAS,
     B_GRID,
-    B_PHYSICAL,
-    FIG2_ALPHAS,
     FULL,
-    N_OBJECTS,
     Timer,
     csv_row,
-    fig2_scale,
+    fig2_scale_factors,
     quick_mode,
     save_artifact,
-    table1_requests,
+    section5_scale,
 )
 
 
@@ -77,14 +66,19 @@ def _sub(trace, n):
     return IRMTrace(trace.proxies[:n], trace.objects[:n])
 
 
-def bench_workload(name, alphas, b_combos, n_objects, B, n_requests, ref_cap):
-    lam = rate_matrix(n_objects, list(alphas))
+def bench_workload(name, scenarios, ref_cap):
+    """Race the reference loop against the fastsim backends on the
+    workload/system of each scenario (presets supply both)."""
     rows = {}
     tot = {"reference": [0, 0.0], "fastsim-flat": [0, 0.0], "fastsim": [0, 0.0]}
-    for ci, b in enumerate(b_combos):
-        trace = sample_trace(lam, n_requests, seed=7 + ci)
+    for ci, sc in enumerate(scenarios):
+        b = sc.system.allocations
+        B = sc.system.capacity()
+        n_objects = sc.workload.n_objects
+        n_requests = sc.n_requests
+        trace = sc.workload.sample(n_requests, seed=sc.seed + ci)
         warmup = default_warmup(n_requests, b)
-        params = SimParams(allocations=tuple(b), physical_capacity=B)
+        params = sc.system.to_sim_params()
 
         n_ref = min(n_requests, ref_cap)
         ref_s = reference_run(b, B, _sub(trace, n_ref), n_objects,
@@ -120,19 +114,19 @@ def bench_workload(name, alphas, b_combos, n_objects, B, n_requests, ref_cap):
 
 def main() -> dict:
     quick = quick_mode()
-    n_t1 = table1_requests()
     ref_cap = 20_000 if quick else (200_000 if not FULL else 400_000)
     t1_combos = B_GRID[:2] if quick else B_GRID
 
     with Timer() as tm:
         t1 = bench_workload(
-            "table1", ALPHAS, t1_combos, N_OBJECTS, B_PHYSICAL, n_t1, ref_cap
+            "table1",
+            [get_preset("table1", b=b).scaled(*section5_scale())
+             for b in t1_combos],
+            ref_cap,
         )
-        b, n_objects, B, n_req_f2 = fig2_scale()
-        f2 = bench_workload(
-            "fig2_reduced", FIG2_ALPHAS, [b], n_objects, B,
-            max(n_req_f2 // 3, 10_000), ref_cap
-        )
+        req_f, cat_f = fig2_scale_factors()
+        f2_sc = get_preset("fig2_ripple").scaled(req_f / 3, cat_f)
+        f2 = bench_workload("fig2_reduced", [f2_sc], ref_cap)
 
     payload = {
         "table1": t1,

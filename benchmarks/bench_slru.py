@@ -1,50 +1,41 @@
 """Section VII: Segmented-LRU variant under object sharing.
 
 The paper reports that cache-hit probabilities change by only ~2-3 %
-between flat LRU and S-LRU under object sharing. We run both on the same
-trace and report the per-proxy overall hit-rate delta.
-
-Both systems run on the array engine: the flat cache on the native C/
-inlined loop, the S-LRU on the per-operation fast engine
-(:class:`repro.core.fastsim.FastSegmentedSharedLRU`, event-equivalent to
-the reference ``SegmentedSharedLRUCache``).
+between flat LRU and S-LRU under object sharing. The ``slru`` preset and
+the ``table1`` preset at the same allocations and seed see the identical
+trace; we report the per-proxy overall hit-rate delta.
 """
 
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core import SimParams, rate_matrix, sample_trace, simulate_trace
+from repro.scenario import get_preset
 
-from .common import ALPHAS, B_PHYSICAL, N_OBJECTS, Timer, csv_row, save_artifact, table1_requests
-
-
-def run(variant: str, b, trace):
-    res = simulate_trace(
-        SimParams(allocations=tuple(b), physical_capacity=B_PHYSICAL,
-                  variant=variant),
-        trace,
-        N_OBJECTS,
-        warmup=len(trace) // 10,
-    )
-    return res.hit_rate_by_proxy
+from .common import Timer, csv_row, save_artifact, section5_scale
 
 
 def main() -> dict:
     b = (64, 64, 64)
-    n_requests = max(table1_requests() // 3, 300_000)
-    lam = rate_matrix(N_OBJECTS, list(ALPHAS))
-    trace = sample_trace(lam, n_requests, seed=13)
+    req_f, cat_f = section5_scale()
+    req_f = req_f / 3  # two Python-speed runs; keep the pair affordable
+    slru_sc = get_preset("slru", b=b).scaled(req_f, cat_f)
+    flat_sc = get_preset("table1", b=b, seed=slru_sc.seed).scaled(req_f, cat_f)
+    n_requests = slru_sc.n_requests
 
     with Timer() as tm:
-        h_flat = run("lru", b, trace)
-        h_slru = run("slru", b, trace)
+        flat = flat_sc.run()
+        slru = slru_sc.run()
+    h_flat = flat.realized_hit_rate
+    h_slru = slru.realized_hit_rate
 
     delta = h_slru - h_flat
     payload = {
+        "preset": "slru",
+        "scenarios": {"slru": slru_sc.to_dict(), "flat": flat_sc.to_dict()},
         "b": b,
         "n_requests": n_requests,
-        "engine": "fastsim",
+        "engine": f"{flat.backend}/{slru.backend}",
         "hit_rate_flat": h_flat.tolist(),
         "hit_rate_slru": h_slru.tolist(),
         "delta": delta.tolist(),

@@ -1,79 +1,63 @@
 """Paper Table I: empirical hit probabilities of the shared-object cache.
 
-Simulates the J=3 system (Zipf 0.75/0.5/1.0, unit objects, B=1000,
-b in {8,64}^3) under the IRM and reports the hit probability of objects
-at ranks 1/10/100/1000 per proxy, next to the paper's values.
+Runs the named ``table1`` preset (J=3, Zipf 0.75/0.5/1.0, unit objects,
+B=1000) for every allocation combination ``b in {8,64}^3`` and reports
+the hit probability of objects at ranks 1/10/100/1000 per proxy, next to
+the paper's values.
 
 Estimator: exact residence-time occupancy (PASTA) instead of realized-hit
-counting — variance-free given the trajectory, which is what lets the
-default (1.5M-request) run resolve the 1e-3 tail entries the paper needed
-"sufficiently long" simulations for.
-
-Engine: the array-based ``repro.core.fastsim`` drive loop (equivalent to
-the reference ``SharedLRUCache`` event for event — see
-``tests/test_fastsim.py`` — so the occupancy numbers are bit-identical
-to the old per-request reference loop on the same trace, only 2-3 orders
-of magnitude faster; ``bench_simthroughput`` tracks the ratio).
+counting — variance-free given the trajectory. Engine: whatever backend
+``scenario.run()`` picks (the native C loop when a compiler is present;
+equivalent event for event to the reference cache, see
+``tests/test_fastsim.py``).
 """
 
 from __future__ import annotations
 
-import numpy as np
-
-from repro.core import SimParams, rate_matrix, sample_trace, simulate_trace
-from repro.core.fastsim import default_warmup
+from repro.scenario import get_preset
 
 from .common import (
-    ALPHAS,
     B_GRID,
-    B_PHYSICAL,
-    N_OBJECTS,
     RANKS,
     TABLE1,
     Timer,
     csv_row,
     mean_rel_err,
     save_artifact,
-    table1_requests,
+    section5_scale,
 )
 
 
-def simulate_combo(b, n_requests: int, seed: int = 7):
-    lam = rate_matrix(N_OBJECTS, list(ALPHAS))
-    trace = sample_trace(lam, n_requests, seed=seed)
-    res = simulate_trace(
-        SimParams(allocations=tuple(b), physical_capacity=B_PHYSICAL),
-        trace,
-        N_OBJECTS,
-        warmup=default_warmup(n_requests, b),
-    )
-    return res.occupancy, res
-
-
 def main() -> dict:
-    n_requests = table1_requests()
-    rows, all_pred, all_ref = {}, [], []
+    scale = section5_scale()
+    rows, scenarios, all_pred, all_ref = {}, {}, [], []
     total_us = 0.0
     engine_us = 0.0
+    n_requests = n_total = 0
     for b in B_GRID:
+        sc = get_preset("table1", b=b).scaled(*scale)
+        scenarios[str(b)] = sc.to_dict()
+        n_requests = sc.n_requests
         with Timer() as tm:
-            h, res = simulate_combo(b, n_requests)
+            rep = sc.run()
         total_us += tm.seconds * 1e6
-        engine_us += res.elapsed_s * 1e6
+        engine_us += rep.elapsed_s * 1e6
+        n_total += rep.n_requests
         rows[str(b)] = {}
         for i in range(3):
-            pred = [float(h[i, k - 1]) for k in RANKS]
+            pred = rep.hit_prob_at_ranks(i, RANKS)
             ref = TABLE1[b][i]
             rows[str(b)][i] = {"sim": pred, "paper": ref}
             all_pred += pred
             all_ref += ref
     err = mean_rel_err(all_pred, all_ref)
-    n_total = len(B_GRID) * n_requests
     payload = {
+        "preset": "table1",
+        "scenarios": scenarios,
         "n_requests_per_combo": n_requests,
         "rows": rows,
         "mean_rel_err_vs_paper": err,
-        "engine": "fastsim",
+        "engine": rep.backend,
         "engine_requests_per_sec": n_total / max(engine_us / 1e6, 1e-9),
     }
     save_artifact("table1_sim", payload)
@@ -92,7 +76,7 @@ def main() -> dict:
     )
     csv_row(
         "table1_sim",
-        total_us / n_total,
+        total_us / max(n_total, 1),
         f"mean_rel_err={err:.4f}",
     )
     return payload

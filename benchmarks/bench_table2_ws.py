@@ -1,25 +1,23 @@
 """Paper Table II: working-set approximation (eq. (8) with L1/eq. (5)).
 
-Deterministic — solves the fixed point for every allocation combination
-and compares elementwise against the paper's Table II. This is also the
+Deterministic — runs the ``table2_ws`` preset (the Table-I system with
+the ``working_set`` estimator) for every allocation combination and
+compares elementwise against the paper's Table II. This is also the
 N-calibration evidence (see DESIGN.md §7): at N=1000 the residuals are
 sub-1 %; at N=2000 they exceed 20 %.
 
-The 8-combo grid is one ``jax.vmap``-ed jit call
-(:func:`repro.core.workingset.solve_workingset_batch`): one compilation
-and one XLA execution instead of 8 sequential jit-compiled solves.
+The jit-compiled fixed-point solver is cached per hyperparameter set, so
+the 8-combo grid costs one XLA compilation and 8 executions.
 """
 
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core import rate_matrix, solve_workingset_batch
+from repro.scenario import get_preset
 
 from .common import (
-    ALPHAS,
     B_GRID,
-    N_OBJECTS,
     RANKS,
     TABLE2,
     Timer,
@@ -30,33 +28,32 @@ from .common import (
 
 
 def main() -> dict:
-    lam = rate_matrix(N_OBJECTS, list(ALPHAS))
-    lengths = np.ones(N_OBJECTS)
     rows, all_pred, all_ref = {}, [], []
+    grid = {b: get_preset("table2_ws", b=b) for b in B_GRID}
+    scenarios = {str(b): sc.to_dict() for b, sc in grid.items()}
     with Timer() as tm:
-        sols = solve_workingset_batch(
-            lam, lengths, np.array(B_GRID, float), attribution="L1"
-        )
+        reports = {b: sc.run() for b, sc in grid.items()}
     total_us = tm.seconds * 1e6
     n_solves = len(B_GRID)
-    for b, sol in zip(B_GRID, sols):
-        assert sol.converged, f"working-set solve did not converge for b={b}"
-        assert np.max(np.abs(sol.residual)) < 1e-2 * max(b), (
-            f"large residual for b={b}: {sol.residual}"
+    for b, rep in reports.items():
+        assert rep.converged, f"working-set solve did not converge for b={b}"
+        assert rep.extras["max_abs_residual"] < 1e-2 * max(b), (
+            f"large residual for b={b}: {rep.extras['max_abs_residual']}"
         )
         rows[str(b)] = {}
         for i in range(3):
-            pred = [float(sol.h[i, k - 1]) for k in RANKS]
+            pred = rep.hit_prob_at_ranks(i, RANKS)
             ref = TABLE2[b][i]
             rows[str(b)][i] = {"ws": pred, "paper": ref}
             all_pred += pred
             all_ref += ref
     err = mean_rel_err(all_pred, all_ref)
     payload = {
+        "preset": "table2_ws",
+        "scenarios": scenarios,
         "rows": rows,
         "mean_rel_err_vs_paper": err,
-        "n_objects": N_OBJECTS,
-        "solver": "solve_workingset_batch (one vmap-ed jit over the b-grid)",
+        "solver": "scenario working_set estimator (cached jit solver)",
     }
     save_artifact("table2_ws", payload)
 

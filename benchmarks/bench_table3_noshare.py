@@ -1,63 +1,48 @@
 """Paper Table III: the not-shared baseline at b=(64,64,8), plus the
 Prop. 3.1 dominance check (sharing >= not-shared per proxy, per object).
 
-Simulates J independent LRUs on the identical request trace used for the
-shared system, reports hit probabilities at ranks 1/10/100/1000, and
+Runs the ``table3_noshare`` preset (J independent LRUs) and the
+``table1`` preset at the same allocations **on the same seed** — the
+scenario layer guarantees both see the identical request trace — then
 verifies that the shared system's per-object occupancy dominates the
 not-shared one everywhere (the coupling argument of Prop. 3.1).
-
-Both systems run on the array engine (``variant="noshare"`` is the exact
-fast port of :class:`repro.core.baselines.NotSharedSystem` — see
-``tests/test_fastsim.py``).
 """
 
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core import SimParams, rate_matrix, sample_trace, simulate_trace
+from repro.scenario import get_preset
 
 from .common import (
-    ALPHAS,
-    B_PHYSICAL,
-    N_OBJECTS,
     RANKS,
     TABLE3,
     Timer,
     csv_row,
     mean_rel_err,
     save_artifact,
-    table1_requests,
+    section5_scale,
 )
 
 
 def main() -> dict:
     b = (64, 64, 8)
-    n_requests = table1_requests()
-    lam = rate_matrix(N_OBJECTS, list(ALPHAS))
-    trace = sample_trace(lam, n_requests, seed=11)
-    warmup = max(n_requests // 15, 1000)
+    scale = section5_scale()
+    ns_sc = get_preset("table3_noshare", b=b).scaled(*scale)
+    # Same workload + same seed -> bit-identical trace for the shared run.
+    sh_sc = get_preset("table1", b=b, seed=ns_sc.seed).scaled(*scale)
 
     with Timer() as tm:
-        h_ns = simulate_trace(
-            SimParams(allocations=b, variant="noshare"),
-            trace,
-            N_OBJECTS,
-            warmup=warmup,
-        ).occupancy
-        h_sh = simulate_trace(
-            SimParams(allocations=b, physical_capacity=B_PHYSICAL),
-            trace,
-            N_OBJECTS,
-            warmup=warmup,
-        ).occupancy
+        ns = ns_sc.run()
+        sh = sh_sc.run()
+    h_ns, h_sh = ns.hit_prob, sh.hit_prob
 
     rows, all_pred, all_ref = {}, [], []
     for i in range(3):
-        pred = [float(h_ns[i, k - 1]) for k in RANKS]
+        pred = ns.hit_prob_at_ranks(i, RANKS)
         ref = TABLE3[b][i]
         rows[i] = {"sim_notshared": pred, "paper": ref,
-                   "sim_shared": [float(h_sh[i, k - 1]) for k in RANKS]}
+                   "sim_shared": sh.hit_prob_at_ranks(i, RANKS)}
         all_pred += pred
         all_ref += ref
     err = mean_rel_err(all_pred, all_ref)
@@ -70,13 +55,15 @@ def main() -> dict:
     prop31_margin = float(diff.min())
 
     payload = {
+        "preset": "table3_noshare",
+        "scenarios": {"noshare": ns_sc.to_dict(), "shared": sh_sc.to_dict()},
         "b": b,
         "rows": rows,
         "mean_rel_err_vs_paper": err,
         "prop31_dominance_ok": prop31_ok,
         "prop31_worst_margin": prop31_margin,
         "mean_gain_sharing": float(diff.mean()),
-        "engine": "fastsim",
+        "engine": ns.backend,
     }
     save_artifact("table3_noshare", payload)
 
@@ -92,7 +79,7 @@ def main() -> dict:
           f"(worst margin {prop31_margin:+.4f})")
     csv_row(
         "table3_noshare",
-        tm.seconds * 1e6 / (2 * n_requests),
+        tm.seconds * 1e6 / (2 * ns_sc.n_requests),
         f"mean_rel_err={err:.4f};prop31_ok={prop31_ok}",
     )
     return payload

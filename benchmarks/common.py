@@ -1,14 +1,20 @@
 """Shared configuration + helpers for the paper-reproduction benchmarks.
 
-Every benchmark has two fidelity modes:
+The paper experiments are defined once, at paper scale, as named
+presets in :mod:`repro.scenario.presets`; every benchmark routes through
+``get_preset(...).scaled(...)``. This module only maps the harness's
+three fidelity modes onto scale factors:
 
 * default: reduced sizes so ``python -m benchmarks.run`` finishes in a few
   minutes on one CPU core;
-* ``REPRO_FULL=1``: the paper's full experiment scale.
+* ``REPRO_FULL=1``: the paper's full experiment scale (factor 1.0);
+* ``--quick`` / ``REPRO_QUICK=1``: smoke scale, every benchmark in
+  seconds, used by CI.
 
 All benchmarks write machine-readable artifacts to
-``benchmarks/artifacts/*.json`` (consumed by EXPERIMENTS.md tooling) and
-print ``name,us_per_call,derived`` CSV rows per the harness contract.
+``benchmarks/artifacts/*.json`` (consumed by ``python -m
+benchmarks.report``, which renders EXPERIMENTS.md) and print
+``name,us_per_call,derived`` CSV rows per the harness contract.
 """
 
 from __future__ import annotations
@@ -80,33 +86,22 @@ TABLE3 = {
     (64, 64, 8): {0: [.9800, .5084, .11760, .02259], 1: [.6683, .2944, .10437, .03503], 2: [.7005, .1123, .01176, .00113]},
 }
 
-# Section VI-C workload (Fig. 2 / Table V): J=9 proxies, Zipf
-# 0.5+0.5(i-1), N=1e6 items of 100 kB, B=3 GB, b = 3x100MB, 3x200MB,
-# 3x700MB. We work in 100 kB units -> item length 1, allocations below.
-FIG2_ALPHAS = tuple(0.5 + 0.5 * i for i in range(9))
-FIG2_B_UNITS = (1000, 1000, 1000, 2000, 2000, 2000, 7000, 7000, 7000)
-FIG2_N = 1_000_000
-FIG2_REQUESTS = 3_000_000
-
-
-def fig2_scale() -> Tuple[Tuple[int, ...], int, int, int]:
-    """(allocations, N, B, n_requests) for the Section VI-C workload,
-    reduced 10x by default (same shape, same b/N ratio regime); --quick
-    shrinks it another 10x for smoke runs."""
+def section5_scale() -> Tuple[float, float]:
+    """(requests_factor, catalogue_factor) for the Section V presets
+    (Tables I-III, J=2, S-LRU). The catalogue never shrinks: the Table
+    I/II numbers are calibrated at N=1000."""
     if FULL:
-        b = FIG2_B_UNITS
-        return b, FIG2_N, sum(b), FIG2_REQUESTS
-    if quick_mode():
-        b = tuple(x // 100 for x in FIG2_B_UNITS)
-        return b, FIG2_N // 100, sum(b), FIG2_REQUESTS // 100
-    b = tuple(x // 10 for x in FIG2_B_UNITS)
-    return b, FIG2_N // 10, sum(b), FIG2_REQUESTS // 10
+        return 1.0, 1.0
+    return (0.01, 1.0) if quick_mode() else (0.15, 1.0)
 
 
-def table1_requests() -> int:
+def fig2_scale_factors() -> Tuple[float, float]:
+    """(requests_factor, catalogue_factor) for the Section VI-C presets
+    (Fig. 2 / RRE): 10x down by default — same shape, same b/N regime —
+    and 100x down for smoke runs."""
     if FULL:
-        return 10_000_000
-    return 100_000 if quick_mode() else 1_500_000
+        return 1.0, 1.0
+    return (0.01, 0.01) if quick_mode() else (0.1, 0.1)
 
 
 def save_artifact(name: str, payload: dict) -> Path:

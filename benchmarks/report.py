@@ -1,0 +1,320 @@
+"""EXPERIMENTS.md generator: render ``benchmarks/artifacts/*.json``.
+
+    PYTHONPATH=src python -m benchmarks.report            # write EXPERIMENTS.md
+    PYTHONPATH=src python -m benchmarks.report --stdout   # print instead
+
+Each benchmark records a machine-readable artifact (most embed the exact
+scenario spec that produced them — ``repro.scenario.Scenario.from_dict``
+reruns it); this module turns the artifact directory into the
+human-readable experiment report the repo promises. Unknown artifacts get
+a generic summary, so new benchmarks show up without touching this file.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+from typing import Callable, Dict, List
+
+ARTIFACTS = Path(__file__).resolve().parent / "artifacts"
+OUTPUT = ARTIFACTS.parent.parent / "EXPERIMENTS.md"
+
+
+def _load(name: str) -> dict:
+    with open(ARTIFACTS / f"{name}.json") as f:
+        return json.load(f)
+
+
+def _ranks_table(rows: dict, key: str, ranks=(1, 10, 100, 1000)) -> List[str]:
+    out = [
+        "| b | proxy | " + " | ".join(f"h@{r}" for r in ranks) + " |",
+        "|---|---|" + "---|" * len(ranks),
+    ]
+    for b, per_proxy in rows.items():
+        for i, cell in per_proxy.items():
+            pred, paper = cell[key], cell["paper"]
+            vals = " | ".join(
+                f"{p:.4f} ({r:.4f})" for p, r in zip(pred, paper)
+            )
+            out.append(f"| {b} | {i} | {vals} |")
+    out.append("")
+    out.append("(parenthesized: paper value)")
+    return out
+
+
+def _scenario_note(d: dict) -> List[str]:
+    scs = d.get("scenarios")
+    if scs:
+        first = next(iter(scs.values()))
+        est = first.get("estimator", {}).get("kind", "?")
+        return [
+            f"Preset `{d.get('preset', first.get('name', '?'))}` — "
+            f"{len(scs)} configurations (estimator `{est}`, "
+            f"{first.get('n_requests', 0):,} requests each); every "
+            "configuration's exact scenario is embedded in the "
+            "artifact's `scenarios` map."
+        ]
+    sc = d.get("scenario")
+    if not sc:
+        return []
+    est = sc.get("estimator", {}).get("kind", "?")
+    return [
+        f"Preset `{d.get('preset', sc.get('name', '?'))}` "
+        f"(estimator `{est}`, seed {sc.get('seed')}, "
+        f"{sc.get('n_requests', 0):,} requests)."
+    ]
+
+
+def render_table1_sim(d: dict) -> List[str]:
+    out = _scenario_note(d)
+    out += [
+        f"Mean relative error vs paper Table I: "
+        f"**{d['mean_rel_err_vs_paper']:.4f}** over "
+        f"{d['n_requests_per_combo']:,} requests/combo "
+        f"({d.get('engine', 'fastsim')} engine, "
+        f"{d.get('engine_requests_per_sec', 0):,.0f} req/s).",
+        "",
+    ]
+    out += _ranks_table(d["rows"], "sim")
+    return out
+
+
+def render_table2_ws(d: dict) -> List[str]:
+    out = _scenario_note(d)
+    out += [
+        f"Mean relative error vs paper Table II: "
+        f"**{d['mean_rel_err_vs_paper']:.4f}** (deterministic fixed-point "
+        "solve; also the N=1000 calibration evidence).",
+        "",
+    ]
+    out += _ranks_table(d["rows"], "ws")
+    return out
+
+
+def render_table3_noshare(d: dict) -> List[str]:
+    out = _scenario_note(d)
+    out += [
+        f"Mean relative error vs paper Table III: "
+        f"**{d['mean_rel_err_vs_paper']:.4f}**. "
+        f"Prop. 3.1 dominance (shared >= not-shared, per proxy and "
+        f"object): **{d['prop31_dominance_ok']}** "
+        f"(worst margin {d['prop31_worst_margin']:+.4f}; mean occupancy "
+        f"gain from sharing {d['mean_gain_sharing']:+.4f}).",
+    ]
+    return out
+
+
+def render_j2_bounds(d: dict) -> List[str]:
+    mb = d["mean_bias"]
+    return _scenario_note(d) + [
+        f"L1 underestimates: **{d['L1_underestimates']}** "
+        f"(mean head-rank bias {mb['L1']:+.3f}); "
+        f"L2 upper bound: **{d['L2_over_or_upper']}** "
+        f"(mean bias {mb['L2']:+.3f}).",
+        "",
+        "### Reproduction discrepancies",
+        "",
+        "The paper claims L1 is ~30% under at J=2; in this implementation "
+        "L1 is near-unbiased at J=2 across workloads while the "
+        "L2-overestimate claim reproduces — the L1/L2 bracket therefore "
+        "still holds, just tighter than reported.",
+    ]
+
+
+def render_fig2_ripple(d: dict) -> List[str]:
+    hist = {int(k): v for k, v in d["evictions_per_set_histogram"].items()}
+    total = sum(hist.values())
+    out = _scenario_note(d) + [
+        f"Fraction of sets with >1 eviction: "
+        f"**{d['frac_multi_eviction']:.3f}** (paper: "
+        f"{d['paper_frac_multi_eviction']}); max ripple depth "
+        f"{d['max_ripple']} (J=9, N={d['n_objects']:,}, B={d['B']:,}).",
+        "",
+        "| evictions/set | count | share |",
+        "|---|---|---|",
+    ]
+    for k in sorted(hist):
+        out.append(f"| {k} | {hist[k]:,} | {hist[k] / max(total, 1):.1%} |")
+    s = d.get("set_us", {})
+    if s:
+        os_, mc = s["mcd_os"], s["mcd"]
+        out += [
+            "",
+            f"Table V set execution time: MCD-OS {os_['mean']:.1f}±"
+            f"{os_['std']:.1f} us vs MCD {mc['mean']:.1f}±{mc['std']:.1f} "
+            f"us — overhead ratio **{s['overhead_ratio']:.2f}** "
+            f"(paper {s['paper']['overhead_ratio']:.2f}).",
+        ]
+    return out
+
+
+def render_rre(d: dict) -> List[str]:
+    out = _scenario_note(d) + [
+        "| config | base ripple | RRE on-path | batch evictions | "
+        "giveback | reduction |",
+        "|---|---|---|---|---|---|",
+    ]
+    for key, r in d["results"].items():
+        out.append(
+            f"| {key} | {r['base_ripple']:,} | {r['rre_ripple_onpath']:,} | "
+            f"{r['rre_batch_evictions']:,} | {r['memory_giveback']:,} | "
+            f"{r['reduction']:.1%} |"
+        )
+    return out
+
+
+def render_slru(d: dict) -> List[str]:
+    return _scenario_note(d) + [
+        f"Max |hit-rate delta| flat-LRU vs S-LRU: "
+        f"**{d['max_abs_delta']:.4f}** over {d['n_requests']:,} requests "
+        f"at b={tuple(d['b'])} (paper claim: {d['paper_claim']}).",
+    ]
+
+
+def render_simthroughput(d: dict) -> List[str]:
+    out = []
+    for wl_key in ("table1", "fig2"):
+        wl = d.get(wl_key)
+        if not wl:
+            continue
+        agg = wl["requests_per_sec"]
+        out.append(
+            f"- `{wl['workload']}`: reference {agg['reference']:,.0f} req/s, "
+            f"fastsim-flat {agg['fastsim-flat']:,.0f}, auto "
+            f"{agg['fastsim']:,.0f} — speedup "
+            f"**{wl['speedup_auto_vs_reference']:.0f}x** "
+            f"(C backend available: {wl['c_backend_available']})."
+        )
+    out.append("")
+    out.append(d.get("estimator_note", ""))
+    return out
+
+
+def render_admission(d: dict) -> List[str]:
+    out = [
+        f"Admission at B={d['B']:.0f}: sharing admits "
+        f"**{d['admitted_with_sharing']}** tenants vs "
+        f"**{d['admitted_without_sharing']}** under static partitioning "
+        f"(overbooked: {d['overbooked']}).",
+        "",
+        "| tenants J | sum b* | sum b virtual | overbooking factor |",
+        "|---|---|---|---|",
+    ]
+    for J, f in d["overbooking"].items():
+        out.append(
+            f"| {J} | {f['sum_b_star']:.0f} | {f['sum_b_virtual']:.1f} | "
+            f"{f['overbooking_factor']:.3f} |"
+        )
+    return out
+
+
+def render_serving(d: dict) -> List[str]:
+    sh, dj = d["overlapping"], d["disjoint"]
+    return [
+        f"Prefix hit-token ratio {sh['prefix_hit_token_ratio']:.3f} "
+        f"(overlapping tenants) vs {dj['prefix_hit_token_ratio']:.3f} "
+        f"(disjoint) — object sharing raises it "
+        f"**{d['hit_ratio_gain']:.2f}x** (Prop. 3.1 in serving form).",
+    ]
+
+
+def render_roofline(d: dict) -> List[str]:
+    if not d:
+        return ["No dry-run artifacts (sweep not run)."]
+    return [
+        f"{d['n_cells']} (arch x shape x mesh) cells; bottlenecks: "
+        f"{d['bottleneck_counts']}; {d['fits_hbm']}/{d['n_cells']} fit "
+        "16 GB HBM.",
+    ]
+
+
+def render_generic(d: dict) -> List[str]:
+    scalars = {
+        k: v
+        for k, v in d.items()
+        if isinstance(v, (int, float, str, bool)) and not k.startswith("_")
+    }
+    out = _scenario_note(d) + ["| key | value |", "|---|---|"]
+    for k, v in sorted(scalars.items()):
+        out.append(f"| {k} | {v} |")
+    return out
+
+
+RENDERERS: Dict[str, Callable[[dict], List[str]]] = {
+    "table1_sim": render_table1_sim,
+    "table2_ws": render_table2_ws,
+    "table3_noshare": render_table3_noshare,
+    "j2_bounds": render_j2_bounds,
+    "fig2_ripple": render_fig2_ripple,
+    "rre": render_rre,
+    "slru": render_slru,
+    "simthroughput": render_simthroughput,
+    "admission": render_admission,
+    "serving": render_serving,
+    "roofline": render_roofline,
+}
+
+TITLES = {
+    "table1_sim": "Table I — simulated hit probabilities (shared cache)",
+    "table2_ws": "Table II — working-set approximation",
+    "table3_noshare": "Table III — not-shared baseline + Prop. 3.1",
+    "j2_bounds": "J=2 attribution bounds (L1/Lstar/L2)",
+    "fig2_ripple": "Fig. 2 + Table V — ripple evictions & set overhead",
+    "rre": "Section IV-D — Reducing Ripple Evictions",
+    "slru": "Section VII — Segmented LRU under sharing",
+    "simthroughput": "Monte-Carlo engine throughput",
+    "admission": "Section IV-C — overbooking & admission control",
+    "serving": "Serving-side sharing (LLM prefix caches)",
+    "roofline": "Roofline report",
+}
+
+
+def build() -> str:
+    names = sorted(p.stem for p in ARTIFACTS.glob("*.json"))
+    ordered = [n for n in RENDERERS if n in names] + [
+        n for n in names if n not in RENDERERS
+    ]
+    lines = [
+        "# EXPERIMENTS",
+        "",
+        "Auto-generated by `python -m benchmarks.report` from "
+        "`benchmarks/artifacts/*.json` — do not edit by hand; rerun "
+        "`python -m benchmarks.run` (optionally `REPRO_FULL=1`) and "
+        "regenerate. Artifacts embedding a `scenario` block (or a "
+        "`scenarios` map for swept benchmarks) can be reproduced "
+        "exactly via "
+        "`repro.scenario.Scenario.from_dict(...).run()` on each "
+        "embedded spec.",
+        "",
+    ]
+    for name in ordered:
+        try:
+            d = _load(name)
+        except Exception as e:  # unreadable artifact: note and move on
+            lines += [f"## {name}", "", f"(unreadable artifact: {e})", ""]
+            continue
+        lines.append(f"## {TITLES.get(name, name)}")
+        lines.append("")
+        renderer = RENDERERS.get(name, render_generic)
+        try:
+            lines += renderer(d)
+        except Exception as e:
+            lines += [f"(renderer failed: {e}; falling back)", ""]
+            lines += render_generic(d)
+        lines.append("")
+    return "\n".join(lines).rstrip() + "\n"
+
+
+def main() -> None:
+    text = build()
+    if "--stdout" in sys.argv[1:]:
+        print(text)
+        return
+    OUTPUT.write_text(text)
+    print(f"wrote {OUTPUT} ({len(text.splitlines())} lines, "
+          f"{len(list(ARTIFACTS.glob('*.json')))} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -7,6 +7,10 @@ Usage:
     REPRO_FULL=1 PYTHONPATH=src python -m benchmarks.run   # paper scale
     PYTHONPATH=src python -m benchmarks.run table2_ws rre  # subset
     PYTHONPATH=src python -m benchmarks.run --quick    # CI smoke scale
+    PYTHONPATH=src python -m benchmarks.run --list     # what can run
+
+After a run, ``python -m benchmarks.report`` renders EXPERIMENTS.md from
+the artifacts.
 """
 
 from __future__ import annotations
@@ -29,10 +33,25 @@ BENCHES = [
 ]
 
 
+def list_available() -> None:
+    """Enumerate benchmarks and the scenario presets they run on."""
+    from repro.scenario import list_presets
+
+    print("benchmarks (python -m benchmarks.run <name> ...):")
+    for name, module in BENCHES:
+        print(f"  {name:16s} {module}")
+    print("\nscenario presets (repro.scenario.get_preset(name)):")
+    for name, desc in list_presets().items():
+        print(f"  {name:16s} {desc}")
+
+
 def main() -> None:
     import importlib
 
     args = sys.argv[1:]
+    if "--list" in args:
+        list_available()
+        return
     if "--quick" in args:
         args = [a for a in args if a != "--quick"]
         from benchmarks import common

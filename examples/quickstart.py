@@ -2,55 +2,61 @@
 
     PYTHONPATH=src python examples/quickstart.py
 
-1. Build a shared cache for 3 proxies (Zipf demand), run an IRM trace.
-2. Compare measured hit probabilities against the working-set
-   approximation (paper Tables I vs II).
-3. Show overbooking: virtual allocations + eq. (13) admission.
+One declarative `Scenario` = workload x system x estimator:
+
+1. Run the `quickstart` preset under BOTH estimators — Monte-Carlo
+   simulation and the working-set approximation — and compare (paper
+   Tables I vs II in miniature).
+2. Swap one axis: the not-shared baseline on the same trace (Prop. 3.1).
+3. Serialize the scenario to JSON and rerun it bit-identically.
+4. Overbooking + eq. (13) admission control (paper Section IV-C).
+
+The older entry points (`SharedLRUCache`, `SimParams`/`simulate_trace`,
+`solve_workingset`, `MCDOSServer`) all still work — `Scenario.run()` is
+a declarative front door over exactly those engines, and
+`tests/test_fastsim.py` keeps them event-equivalent.
 """
+
+import dataclasses
 
 import numpy as np
 
-from repro.core import (
-    AdmissionController,
-    GetResult,
-    SharedLRUCache,
-    rate_matrix,
-    sample_trace,
-    solve_workingset,
-    virtual_allocations,
-)
-from repro.core.metrics import OccupancyRecorder
+from repro.core import AdmissionController, virtual_allocations
+from repro.scenario import Scenario, System, get_preset
 
-N, B = 1000, 1000
-ALPHAS = (0.75, 0.5, 1.0)
-ALLOC = (64, 64, 8)
+print("== 1. one scenario, two estimators ==")
+sc = get_preset("quickstart")          # J=3 Zipf IRM, b=(64,64,8), B=1000
+sim = sc.run()                         # Monte-Carlo (fast C/Python engine)
+ws = sc.with_estimator("working_set").run()  # eq. (8) fixed point (JAX)
 
-print("== 1. simulate the shared cache ==")
-lam = rate_matrix(N, ALPHAS)
-trace = sample_trace(lam, 400_000, seed=1)
-cache = SharedLRUCache(list(ALLOC), physical_capacity=B)
-rec = OccupancyRecorder(3, N).attach_to(cache)
-for idx, (i, k) in enumerate(zip(trace.proxies.tolist(), trace.objects.tolist())):
-    rec.now = idx
-    if idx == 40_000:
-        rec.reset_window()
-    if cache.get(i, k).result is GetResult.MISS:
-        cache.set(i, k, 1)
-rec.now = len(trace)
-rec.finalize()
-h_sim = rec.occupancy()
-print(f"cache state: {cache}")
-
-print("\n== 2. working-set approximation (paper eq. 8 + eq. 5) ==")
-sol = solve_workingset(lam, np.ones(N), np.array(ALLOC, float), attribution="L1")
+print(f"scenario: {sc.name} ({sc.n_requests:,} requests, "
+      f"backend {sim.backend})")
 print("rank:        1       10      100")
 for i in range(3):
-    sim = [h_sim[i, r - 1] for r in (1, 10, 100)]
-    ws = [sol.h[i, r - 1] for r in (1, 10, 100)]
-    print(f"proxy {i} sim  " + "  ".join(f"{x:.4f}" for x in sim))
-    print(f"proxy {i} ws   " + "  ".join(f"{x:.4f}" for x in ws))
+    print(f"proxy {i} sim  "
+          + "  ".join(f"{x:.4f}" for x in sim.hit_prob_at_ranks(i, (1, 10, 100))))
+    print(f"proxy {i} ws   "
+          + "  ".join(f"{x:.4f}" for x in ws.hit_prob_at_ranks(i, (1, 10, 100))))
+print(f"overall hit rate: sim={sim.overall_hit_rate:.4f} "
+      f"ws={ws.overall_hit_rate:.4f}")
 
-print("\n== 3. overbooking + admission (paper Section IV-C) ==")
+print("\n== 2. swap the system axis: not-shared baseline, same trace ==")
+ns = dataclasses.replace(
+    sc, system=System(variant="noshare", allocations=sc.system.allocations)
+).run()
+gain = sim.hit_rate - ns.hit_rate
+print("per-proxy hit-rate gain from sharing: "
+      + "  ".join(f"{g:+.4f}" for g in gain))
+
+print("\n== 3. JSON round trip ==")
+clone = Scenario.from_json(sc.to_json())
+assert clone.run().same_estimates(sim)
+print(f"Scenario.from_json(sc.to_json()).run() reproduces the Report "
+      f"bit for bit ({len(sc.to_json())} bytes of JSON)")
+
+print("\n== 4. overbooking + admission (paper Section IV-C) ==")
+lam = sc.workload.rates()
+N = sc.workload.n_objects
 b_star = np.array([64.0, 64.0, 64.0])
 b_virtual, _ = virtual_allocations(lam, np.ones(N), b_star)
 print(f"SLA allocations b*      = {b_star}")

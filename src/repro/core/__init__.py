@@ -45,6 +45,7 @@ from .irm import (  # noqa: F401
     PopularityEstimator,
     rate_matrix,
     sample_trace,
+    sample_trace_chunks,
     zipf_popularities,
 )
 from .workingset import (  # noqa: F401

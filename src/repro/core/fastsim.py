@@ -54,8 +54,10 @@ Which engine to use
 Variants: ``SimParams(variant="slru")`` runs the memcached HOT/WARM/COLD
 segmented lists of :mod:`repro.core.slru`; ``variant="noshare"`` runs J
 independent full-length-charging LRUs (the Table-III baseline);
-``ripple_allocations`` + ``batch_interval`` cover the Section IV-D RRE
-mechanisms.
+``variant="pooled"`` runs one collective LRU of the combined size with
+per-proxy hit accounting (the no-isolation upper envelope, cf. Dehghan
+et al.'s pooled sharing); ``ripple_allocations`` + ``batch_interval``
+cover the Section IV-D RRE mechanisms.
 """
 
 from __future__ import annotations
@@ -686,7 +688,7 @@ class SimParams:
     physical_capacity: Optional[int] = None
     ghost_retention: bool = True
     ripple_allocations: Optional[Tuple[int, ...]] = None  # RRE b_hat
-    variant: str = "lru"  # "lru" | "slru" | "noshare"
+    variant: str = "lru"  # "lru" | "slru" | "noshare" | "pooled"
     hot_frac: float = 0.32
     warm_frac: float = 0.32
     batch_interval: int = 0  # sets between RRE batch trims (0 = off)
@@ -718,6 +720,11 @@ class SimParams:
                     else None
                 ),
             )
+        if self.variant == "pooled":
+            raise ValueError(
+                "variant='pooled' has no per-operation engine; use "
+                "simulate_trace (whole-trace driver) instead"
+            )
         raise ValueError(f"unknown variant {self.variant!r}")
 
 
@@ -740,6 +747,7 @@ class SimResult:
     n_batch_evictions: int  # RRE delayed-batch evictions (off request path)
     final_vlen: np.ndarray  # (J,) virtual list lengths at end of trace
     elapsed_s: float
+    engine: str = "?"  # backend that actually ran: c | flat | generic | xla
 
     @property
     def requests_per_sec(self) -> float:
@@ -833,7 +841,7 @@ def simulate_trace(
         if engine in ("auto", "c"):
             got = _try_c_noshare(params, n_objects, trace, lengths_l, warmup)
             if got is not None:
-                return _assemble(got[0], got[1], n, warmup, J, n_objects, 1)
+                return _assemble(got[0], got[1], n, warmup, J, n_objects, 1, "c")
             if engine == "c":
                 raise RuntimeError(
                     "engine='c' requested but the C backend is unavailable"
@@ -842,13 +850,18 @@ def simulate_trace(
         O = trace.objects.tolist()
         return _run_noshare(params, n_objects, P, O, lengths_l, warmup)
 
+    if params.variant == "pooled":
+        P = trace.proxies.tolist()
+        O = trace.objects.tolist()
+        return _run_pooled(params, n_objects, P, O, lengths_l, warmup)
+
     if params.variant == "lru":
         if engine in ("auto", "c"):
             got = _try_c_flat(
                 params, n_objects, trace, lengths_l, warmup, ripple_from, scale
             )
             if got is not None:
-                return _assemble(got[0], got[1], n, warmup, J, n_objects, scale)
+                return _assemble(got[0], got[1], n, warmup, J, n_objects, scale, "c")
             if engine == "c":
                 raise RuntimeError(
                     "engine='c' requested but the C backend is unavailable"
@@ -880,6 +893,7 @@ _ENGINES_BY_VARIANT = {
     "lru": ("c", "flat", "generic", "xla"),
     "slru": ("generic",),
     "noshare": ("c", "flat"),
+    "pooled": ("flat",),
 }
 
 
@@ -895,8 +909,8 @@ def _validate_params(params: SimParams) -> None:
     b = [int(x) for x in params.allocations]
     if any(x < 0 for x in b):
         raise ValueError("allocations must be nonnegative")
-    if params.variant == "noshare":
-        return  # independent LRUs: no sharing state, B/b_hat unused
+    if params.variant in ("noshare", "pooled"):
+        return  # no sharing state: b_hat unused (pooled B defaults to sum b)
     if J > 62:
         raise ValueError("holder bitmask supports at most 62 proxies")
     if params.ripple_allocations is not None:
@@ -954,7 +968,14 @@ def _try_c_noshare(params, n_objects, trace, lengths, warmup):
 
 
 def _assemble(
-    out: dict, elapsed: float, n: int, warmup: int, J: int, N: int, scale: int
+    out: dict,
+    elapsed: float,
+    n: int,
+    warmup: int,
+    J: int,
+    N: int,
+    scale: int,
+    engine: str,
 ) -> SimResult:
     """Build a SimResult from a backend's raw output dict."""
     horizon = max(int(out["horizon"]), 1)
@@ -977,6 +998,7 @@ def _assemble(
         n_batch_evictions=int(out.get("n_batch", 0)),
         final_vlen=np.asarray(out["vlen"], dtype=np.int64) / scale,
         elapsed_s=elapsed,
+        engine=engine,
     )
 
 
@@ -1025,7 +1047,7 @@ def _run_xla(
         ripple_from,
         scale,
     )
-    return _assemble(out, elapsed, len(trace), warmup, J, n_objects, scale)
+    return _assemble(out, elapsed, len(trace), warmup, J, n_objects, scale, "xla")
 
 
 def _ripple_finish(hist: List[int]) -> np.ndarray:
@@ -1100,6 +1122,7 @@ def _run_generic(
         n_batch_evictions=n_batch,
         final_vlen=np.asarray([eng.vlen(i) for i in range(J)]),
         elapsed_s=elapsed,
+        engine="generic",
     )
 
 
@@ -1363,6 +1386,7 @@ def _run_flat(
         n_batch_evictions=n_batch,
         final_vlen=np.asarray([eng.vlen(i) for i in rng_J]),
         elapsed_s=elapsed,
+        engine="flat",
     )
 
 
@@ -1478,4 +1502,123 @@ def _run_noshare(
         n_batch_evictions=0,
         final_vlen=np.asarray(used, dtype=np.float64),
         elapsed_s=elapsed,
+        engine="flat",
+    )
+
+
+def _run_pooled(
+    params: SimParams,
+    N: int,
+    P: List[int],
+    O: List[int],
+    lengths: List[int],
+    warmup: int,
+) -> SimResult:
+    """One collective LRU over all proxies (no isolation, no sharing
+    accounting): capacity ``physical_capacity`` (default ``sum(b)``),
+    hits/requests attributed to the issuing proxy. This is the
+    no-partitioning envelope the paper's multi-list system sits between
+    (cf. the pooled MCD baseline of Table V). Per-object occupancy is the
+    same for every proxy — the (J, N) occupancy matrix repeats one row;
+    ``final_vlen`` reports the pooled bytes in use for every proxy.
+    """
+    J = len(params.allocations)
+    B = int(
+        params.physical_capacity
+        if params.physical_capacity is not None
+        else sum(params.allocations)
+    )
+    if B < 1:
+        raise ValueError("pooled variant needs positive capacity")
+    nxt = [NIL] * N
+    prv = [NIL] * N
+    head = tail = NIL
+    inlist = [False] * N
+    used = 0
+    res_since = [-1] * N
+    tot_time = [0] * N
+    t_start = 0
+    n_hit = n_miss = 0
+    hits_by_proxy = [0] * J
+    reqs_by_proxy = [0] * J
+    n = len(P)
+
+    t0 = time.perf_counter()
+    for idx in range(n):
+        if idx == warmup:
+            tot_time = [0] * N
+            t_start = idx
+        i = P[idx]
+        k = O[idx]
+        if inlist[k]:
+            n_hit += 1
+            if head != k:
+                p = prv[k]
+                nx = nxt[k]
+                if p == NIL:
+                    tail = nx
+                else:
+                    nxt[p] = nx
+                prv[nx] = p
+                nxt[head] = k
+                prv[k] = head
+                nxt[k] = NIL
+                head = k
+            if idx >= warmup:
+                reqs_by_proxy[i] += 1
+                hits_by_proxy[i] += 1
+            continue
+        n_miss += 1
+        inlist[k] = True
+        used += lengths[k]
+        if head == NIL:
+            tail = k
+        else:
+            nxt[head] = k
+        prv[k] = head
+        nxt[k] = NIL
+        head = k
+        res_since[k] = idx
+        while used > B:
+            v = tail
+            nv = nxt[v]
+            tail = nv
+            if nv == NIL:
+                head = NIL
+            else:
+                prv[nv] = NIL
+            inlist[v] = False
+            used -= lengths[v]
+            since = res_since[v]
+            if since >= 0:
+                tot_time[v] += idx - (since if since > t_start else t_start)
+                res_since[v] = -1
+        if idx >= warmup:
+            reqs_by_proxy[i] += 1
+    elapsed = time.perf_counter() - t0
+
+    for k in range(N):
+        since = res_since[k]
+        if since >= 0:
+            tot_time[k] += n - (since if since > t_start else t_start)
+    horizon = max(n - t_start, 1)
+    occ_row = np.asarray(tot_time, dtype=np.int64) / horizon
+    occ = np.repeat(occ_row[None, :], J, axis=0)
+    return SimResult(
+        occupancy=occ,
+        n_requests=n,
+        warmup=warmup,
+        n_hit_list=n_hit,
+        n_hit_cache=0,
+        n_miss=n_miss,
+        hits_by_proxy=np.asarray(hits_by_proxy, dtype=np.int64),
+        reqs_by_proxy=np.asarray(reqs_by_proxy, dtype=np.int64),
+        evictions_per_set=np.zeros(1, dtype=np.int64),
+        n_sets_recorded=0,
+        n_primary=0,
+        n_ripple=0,
+        n_batch_evictions=0,
+        final_vlen=np.full(J, float(used)),
+        elapsed_s=elapsed,
+        engine="flat",
     )

@@ -57,6 +57,55 @@ class IRMTrace:
         return zip(self.proxies.tolist(), self.objects.tolist())
 
 
+def _flat_cdf(lam: np.ndarray) -> np.ndarray:
+    """CDF over the flattened (proxy, object) cells of the rate matrix.
+
+    ``P(cell i*N+k) = lam[i,k] / lam.sum()`` factorizes as P(proxy) *
+    P(object | proxy), so one ``searchsorted`` over this CDF draws the
+    merged-trace pair in a single vectorized pass (no per-proxy loop).
+    """
+    flat = np.asarray(lam, dtype=np.float64).ravel()
+    if flat.size == 0 or np.any(flat < 0) or flat.sum() <= 0:
+        raise ValueError("rate matrix must be nonnegative with positive sum")
+    cdf = np.cumsum(flat)
+    cdf /= cdf[-1]
+    cdf[-1] = 1.0
+    return cdf
+
+
+def sample_trace_chunks(
+    lam: np.ndarray,
+    n_requests: int,
+    *,
+    chunk_size: int = 1_000_000,
+    seed: int = 0,
+) -> Iterator[IRMTrace]:
+    """Stream a merged IRM trace as :class:`IRMTrace` chunks.
+
+    Identical request stream to :func:`sample_trace` with the same seed
+    (successive uniform draws from one ``default_rng`` concatenate to the
+    one-shot draw), but peak memory is O(chunk_size) instead of
+    O(n_requests) — the ROADMAP Section VI-C memory item for N >> 1e6
+    catalogues where the full trace would not fit.
+    """
+    if chunk_size < 1:
+        raise ValueError("chunk_size must be positive")
+    lam = np.asarray(lam, dtype=np.float64)
+    J, N = lam.shape
+    cdf = _flat_cdf(lam)
+    rng = np.random.default_rng(seed)
+    done = 0
+    while done < n_requests:
+        m = min(chunk_size, n_requests - done)
+        idx = np.searchsorted(cdf, rng.random(m), side="right")
+        np.clip(idx, 0, J * N - 1, out=idx)
+        yield IRMTrace(
+            proxies=(idx // N).astype(np.int32),
+            objects=(idx % N).astype(np.int64),
+        )
+        done += m
+
+
 def sample_trace(
     lam: np.ndarray,
     n_requests: int,
@@ -65,27 +114,22 @@ def sample_trace(
     """Sample a merged IRM trace of ``n_requests`` from rate matrix ``lam``.
 
     Poisson-merged: each request comes from proxy i w.p. proportional to
-    its total rate, then the object is drawn from proxy i's popularity.
-    Inverse-CDF sampling keeps this O(M log N) and vectorized.
+    its total rate, then the object is drawn from proxy i's popularity —
+    drawn jointly via one inverse-CDF ``searchsorted`` over the flattened
+    (proxy, object) cells: O(M log(J*N)), fully vectorized, no per-proxy
+    Python loop. Use :func:`sample_trace_chunks` to stream the same trace
+    without materializing all M requests at once.
     """
     lam = np.asarray(lam, dtype=np.float64)
     J, N = lam.shape
+    cdf = _flat_cdf(lam)
     rng = np.random.default_rng(seed)
-    totals = lam.sum(axis=1)
-    proxies = rng.choice(J, size=n_requests, p=totals / totals.sum()).astype(
-        np.int32
+    idx = np.searchsorted(cdf, rng.random(n_requests), side="right")
+    np.clip(idx, 0, J * N - 1, out=idx)
+    return IRMTrace(
+        proxies=(idx // N).astype(np.int32),
+        objects=(idx % N).astype(np.int64),
     )
-    objects = np.empty(n_requests, dtype=np.int64)
-    u = rng.random(n_requests)
-    for i in range(J):
-        mask = proxies == i
-        if not mask.any():
-            continue
-        cdf = np.cumsum(lam[i] / totals[i])
-        cdf[-1] = 1.0
-        objects[mask] = np.searchsorted(cdf, u[mask], side="right")
-    np.clip(objects, 0, N - 1, out=objects)
-    return IRMTrace(proxies=proxies, objects=objects)
 
 
 class PopularityEstimator:

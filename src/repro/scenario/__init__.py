@@ -1,0 +1,48 @@
+"""``repro.scenario`` — one declarative entry point over workloads,
+systems, and estimators.
+
+The paper's pipeline is "pick a workload -> pick a sharing policy ->
+estimate hit probabilities (Monte-Carlo or working-set) -> feed
+admission control". This package turns that into a single serializable
+object::
+
+    from repro.scenario import get_preset
+
+    sc = get_preset("table1", b=(64, 64, 8)).scaled(requests=0.1)
+    sim = sc.run()                                   # Monte-Carlo Report
+    ws = sc.with_estimator("working_set").run()      # same Report type
+
+Axes
+----
+* :class:`Workload` — stationary IRM/Zipf (per-proxy heterogeneous
+  alphas), shot-noise/non-stationary popularity churn, explicit trace
+  replay; object-size distributions via :class:`LengthSpec`.
+* :class:`System` — flat shared LRU, S-LRU, not-shared, pooled; ghost
+  retention, RRE slack/batch config; backend selection across the
+  reference ``SharedLRUCache`` and the fastsim Python/C/XLA drivers.
+* :class:`Estimator` — ``monte_carlo`` vs ``working_set`` (L1 / Lstar /
+  L2 / full attribution), both returning one :class:`Report`.
+
+Named presets cover every paper experiment (``list_presets()``); the
+older entry points (``SimParams``/``simulate_trace``,
+``solve_workingset``, ``MCDOSServer.run_trace``) remain supported as the
+low-level layer this package drives.
+"""
+
+from .report import Report  # noqa: F401
+from .scenario import Scenario  # noqa: F401
+from .system import Estimator, System  # noqa: F401
+from .workload import LengthSpec, Workload  # noqa: F401
+from .presets import PRESETS, get_preset, list_presets  # noqa: F401
+
+__all__ = [
+    "Estimator",
+    "LengthSpec",
+    "PRESETS",
+    "Report",
+    "Scenario",
+    "System",
+    "Workload",
+    "get_preset",
+    "list_presets",
+]

@@ -1,0 +1,113 @@
+"""The unified result type every scenario run returns.
+
+Whether hit probabilities come from a Monte-Carlo trajectory or from the
+working-set fixed point, downstream code (benchmarks, tests, the
+EXPERIMENTS.md generator) consumes one :class:`Report`: per-proxy and
+per-object hit probabilities, demand-weighted hit rates, ripple/eviction
+statistics (simulation only), and throughput. Reports serialize to plain
+JSON dicts — that is what ``benchmarks/artifacts/`` records.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+import numpy as np
+
+
+@dataclass
+class Report:
+    """Unified output of :meth:`repro.scenario.Scenario.run`."""
+
+    scenario: dict               # the spec that produced this report
+    estimator: str               # "monte_carlo" | "working_set"
+    backend: str                 # engine that ran ("c", "flat", ..., "jax-ws")
+    hit_prob: np.ndarray         # (J, N) per-proxy per-object hit probability
+    hit_rate: np.ndarray         # (J,) demand-weighted overall hit rate
+    overall_hit_rate: float      # request-rate-weighted across proxies
+    n_requests: int              # simulated requests (0 for working_set)
+    warmup: int
+    elapsed_s: float
+    throughput_rps: float        # requests/sec through the engine (MC only)
+    realized_hit_rate: Optional[np.ndarray] = None  # (J,) counted hits (MC)
+    ripple: Optional[dict] = None       # eviction statistics (MC only)
+    final_vlen: Optional[np.ndarray] = None
+    converged: Optional[bool] = None    # working_set only
+    extras: Dict[str, object] = field(default_factory=dict)
+
+    # ------------------------------------------------------------------
+    def hit_prob_at_ranks(self, proxy: int, ranks) -> list:
+        """Hit probabilities of rank-``r`` objects (1-based, paper style)."""
+        return [float(self.hit_prob[proxy, r - 1]) for r in ranks]
+
+    def to_dict(self) -> dict:
+        """JSON-serializable dict (numpy arrays become nested lists)."""
+        d = {
+            "scenario": self.scenario,
+            "estimator": self.estimator,
+            "backend": self.backend,
+            "hit_prob": self.hit_prob.tolist(),
+            "hit_rate": self.hit_rate.tolist(),
+            "overall_hit_rate": float(self.overall_hit_rate),
+            "n_requests": int(self.n_requests),
+            "warmup": int(self.warmup),
+            "elapsed_s": float(self.elapsed_s),
+            "throughput_rps": float(self.throughput_rps),
+            "realized_hit_rate": (
+                None
+                if self.realized_hit_rate is None
+                else self.realized_hit_rate.tolist()
+            ),
+            "ripple": self.ripple,
+            "final_vlen": (
+                None if self.final_vlen is None else self.final_vlen.tolist()
+            ),
+            "converged": self.converged,
+            "extras": self.extras,
+        }
+        return d
+
+    @staticmethod
+    def from_dict(d: dict) -> "Report":
+        def arr(x):
+            return None if x is None else np.asarray(x, dtype=np.float64)
+
+        return Report(
+            scenario=d["scenario"],
+            estimator=d["estimator"],
+            backend=d["backend"],
+            hit_prob=np.asarray(d["hit_prob"], dtype=np.float64),
+            hit_rate=np.asarray(d["hit_rate"], dtype=np.float64),
+            overall_hit_rate=float(d["overall_hit_rate"]),
+            n_requests=int(d["n_requests"]),
+            warmup=int(d["warmup"]),
+            elapsed_s=float(d["elapsed_s"]),
+            throughput_rps=float(d["throughput_rps"]),
+            realized_hit_rate=arr(d.get("realized_hit_rate")),
+            ripple=d.get("ripple"),
+            final_vlen=arr(d.get("final_vlen")),
+            converged=d.get("converged"),
+            extras=d.get("extras") or {},
+        )
+
+    def same_estimates(self, other: "Report") -> bool:
+        """True when the two reports carry identical estimates — the
+        round-trip guarantee (timing fields are excluded: wall clock is
+        not part of a result's identity)."""
+        if self.estimator != other.estimator:
+            return False
+        if not np.array_equal(self.hit_prob, other.hit_prob):
+            return False
+        if not np.array_equal(self.hit_rate, other.hit_rate):
+            return False
+        if self.realized_hit_rate is not None or other.realized_hit_rate is not None:
+            if (
+                self.realized_hit_rate is None
+                or other.realized_hit_rate is None
+                or not np.array_equal(
+                    self.realized_hit_rate, other.realized_hit_rate
+                )
+            ):
+                return False
+        return self.ripple == other.ripple

@@ -1,0 +1,308 @@
+"""Execution layer behind :meth:`Scenario.run`.
+
+Dispatches on the estimator:
+
+* ``monte_carlo`` — samples the workload's trace and drives it through
+  :func:`repro.core.fastsim.simulate_trace` (C / inlined-Python / XLA
+  backends) or, with ``System(backend="reference")``, through the
+  hookable executable-spec caches of :mod:`repro.core.shared_lru` /
+  :mod:`repro.core.slru` (event-equivalent, orders of magnitude slower —
+  small runs and debugging).
+* ``working_set`` — solves the paper's eq. (8) fixed point
+  (:func:`repro.core.workingset.solve_workingset`) on the workload's
+  (time-average) rate matrix. No trace is sampled.
+
+Both paths return the same :class:`~repro.scenario.report.Report`, so
+simulation and analytics are interchangeable downstream.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.core.fastsim import HIST_BUCKETS, SimResult, default_warmup, simulate_trace
+from repro.core.irm import IRMTrace
+from repro.core.metrics import OccupancyRecorder
+from repro.core.shared_lru import GetResult, SharedLRUCache
+from repro.core.slru import SegmentedSharedLRUCache
+from repro.core.workingset import solve_workingset
+
+from .report import Report
+from .scenario import Scenario
+
+
+def run_scenario(sc: Scenario) -> Report:
+    if sc.estimator.kind == "working_set":
+        return _run_working_set(sc)
+    return _run_monte_carlo(sc)
+
+
+# ---------------------------------------------------------------------------
+# Shared helpers
+# ---------------------------------------------------------------------------
+def _demand_weights(lam: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-proxy object weights and proxy traffic shares from a rate
+    matrix (guarded against all-zero rows)."""
+    totals = lam.sum(axis=1)
+    w = lam / np.maximum(totals, 1e-300)[:, None]
+    shares = totals / max(totals.sum(), 1e-300)
+    return w, shares
+
+
+def _rates_for(sc: Scenario) -> np.ndarray:
+    n = sc.n_requests or (
+        len(sc.workload.trace_proxies) if sc.workload.kind == "trace" else 0
+    )
+    return sc.workload.mean_rates(max(n, 1))
+
+
+def _hit_rates(hit_prob: np.ndarray, lam: np.ndarray):
+    w, shares = _demand_weights(lam)
+    per_proxy = (w * hit_prob).sum(axis=1)
+    return per_proxy, float((shares * per_proxy).sum())
+
+
+# ---------------------------------------------------------------------------
+# Working-set estimator
+# ---------------------------------------------------------------------------
+def _run_working_set(sc: Scenario) -> Report:
+    est, system = sc.estimator, sc.system
+    if system.variant == "slru":
+        raise ValueError(
+            "working_set estimator has no S-LRU model; use monte_carlo "
+            "for variant='slru'"
+        )
+    lam = _rates_for(sc)
+    lengths = sc.workload.object_lengths(sc.seed).astype(np.float64)
+    kw = dict(
+        n_quad=est.n_quad,
+        n_outer=est.n_outer,
+        n_bisect=est.n_bisect,
+        damping=est.damping,
+        tol=est.tol,
+    )
+    t0 = time.perf_counter()
+    if system.variant == "pooled":
+        # One collective LRU: single-list classical working set on the
+        # merged demand; every proxy sees the same per-object hit prob.
+        attribution = "full"
+        lam_pool = lam.sum(axis=0, keepdims=True)
+        sol = solve_workingset(
+            lam_pool,
+            lengths,
+            np.array([float(system.capacity())]),
+            attribution=attribution,
+            **kw,
+        )
+        hit_prob = np.repeat(sol.h, system.n_proxies, axis=0)
+    else:
+        # noshare has no sharing term: the classical ("full") attribution
+        # is the only applicable model, whatever the estimator asked for.
+        attribution = (
+            "full" if system.variant == "noshare" else est.attribution
+        )
+        sol = solve_workingset(
+            lam,
+            lengths,
+            np.asarray(system.allocations, dtype=np.float64),
+            attribution=attribution,
+            **kw,
+        )
+        hit_prob = sol.h
+    elapsed = time.perf_counter() - t0
+    per_proxy, overall = _hit_rates(hit_prob, lam)
+    return Report(
+        scenario=sc.to_dict(),
+        estimator="working_set",
+        backend="jax-ws",
+        hit_prob=hit_prob,
+        hit_rate=per_proxy,
+        overall_hit_rate=overall,
+        n_requests=0,
+        warmup=0,
+        elapsed_s=elapsed,
+        throughput_rps=0.0,
+        converged=sol.converged,
+        extras={
+            "effective_attribution": attribution,
+            "characteristic_times": sol.t.tolist(),
+            "iterations": sol.iterations,
+            "max_abs_residual": float(np.max(np.abs(sol.residual))),
+        },
+    )
+
+
+# ---------------------------------------------------------------------------
+# Monte-Carlo estimator
+# ---------------------------------------------------------------------------
+def _run_monte_carlo(sc: Scenario) -> Report:
+    system = sc.system
+    n = sc.n_requests
+    if sc.workload.kind == "trace" and n < 1:
+        n = len(sc.workload.trace_proxies)
+    trace = sc.workload.sample(n, sc.seed)
+    lengths = sc.workload.object_lengths(sc.seed)
+    warmup = (
+        sc.warmup
+        if sc.warmup is not None
+        else default_warmup(n, system.allocations)
+    )
+    warmup = min(warmup, n)
+    if system.backend == "reference":
+        res = _run_reference(sc, trace, lengths, warmup)
+        backend = "reference"
+    else:
+        res = simulate_trace(
+            system.to_sim_params(),
+            trace,
+            sc.workload.n_objects,
+            lengths=lengths,
+            warmup=warmup,
+            ripple_from=sc.ripple_from,
+            engine=system.backend,
+        )
+        # SimResult records the backend that actually ran (under "auto"
+        # the C path can silently fall back to the Python loop).
+        backend = res.engine
+    lam = _rates_for(sc)
+    per_proxy, overall = _hit_rates(res.occupancy, lam)
+    ripple = None
+    if system.variant in ("lru", "slru"):
+        ripple = {
+            "evictions_per_set": {
+                str(k): int(c)
+                for k, c in enumerate(res.evictions_per_set)
+                if c
+            },
+            "n_sets_recorded": int(res.n_sets_recorded),
+            "n_primary": int(res.n_primary),
+            "n_ripple": int(res.n_ripple),
+            "n_batch_evictions": int(res.n_batch_evictions),
+            "frac_multi_eviction": float(res.frac_multi_eviction),
+            "mean_evictions": float(res.mean_evictions),
+        }
+    return Report(
+        scenario=sc.to_dict(),
+        estimator="monte_carlo",
+        backend=backend,
+        hit_prob=res.occupancy,
+        hit_rate=per_proxy,
+        overall_hit_rate=overall,
+        n_requests=res.n_requests,
+        warmup=res.warmup,
+        elapsed_s=res.elapsed_s,
+        throughput_rps=res.requests_per_sec,
+        realized_hit_rate=res.hit_rate_by_proxy,
+        ripple=ripple,
+        final_vlen=np.asarray(res.final_vlen, dtype=np.float64),
+        extras={
+            "n_hit_list": int(res.n_hit_list),
+            "n_hit_cache": int(res.n_hit_cache),
+            "n_miss": int(res.n_miss),
+        },
+    )
+
+
+def _run_reference(
+    sc: Scenario, trace: IRMTrace, lengths: np.ndarray, warmup: int
+) -> SimResult:
+    """Drive the hookable reference caches per-operation (slow path).
+
+    Event-equivalent to the fastsim backends (``tests/test_fastsim.py``
+    proves it for the engines; ``tests/test_scenario.py`` closes the loop
+    through this driver), so a scenario can be spot-checked against the
+    executable spec on a small trace.
+    """
+    system = sc.system
+    if system.variant not in ("lru", "slru"):
+        raise ValueError(
+            "backend='reference' supports variants 'lru' and 'slru' only"
+        )
+    params = system.to_sim_params()
+    common = dict(
+        physical_capacity=params.physical_capacity,
+        ghost_retention=params.ghost_retention,
+        ripple_allocations=(
+            list(params.ripple_allocations)
+            if params.ripple_allocations is not None
+            else None
+        ),
+    )
+    if system.variant == "slru":
+        cache = SegmentedSharedLRUCache(
+            list(params.allocations),
+            hot_frac=params.hot_frac,
+            warm_frac=params.warm_frac,
+            **common,
+        )
+    else:
+        cache = SharedLRUCache(list(params.allocations), **common)
+    J, N = system.n_proxies, sc.workload.n_objects
+    rec = OccupancyRecorder(J, N).attach_to(cache)
+    lengths_l = [int(x) for x in lengths]
+    P, O = trace.proxies.tolist(), trace.objects.tolist()
+    n = len(P)
+    ripple_from = sc.ripple_from if sc.ripple_from is not None else warmup
+    hist = [0] * HIST_BUCKETS
+    hits_by_proxy = [0] * J
+    reqs_by_proxy = [0] * J
+    n_sets = n_primary = n_ripple = n_batch = 0
+    n_hit_list = n_hit_cache = n_miss = 0
+    sets_since_batch = 0
+
+    t0 = time.perf_counter()
+    for idx in range(n):
+        rec.now = idx
+        if idx == warmup:
+            rec.reset_window()
+        i, k = P[idx], O[idx]
+        st = cache.get(i, k)
+        if st.result is GetResult.MISS:
+            n_miss += 1
+            st = cache.set(i, k, lengths_l[k])
+            if params.batch_interval > 0:
+                sets_since_batch += 1
+                if sets_since_batch >= params.batch_interval:
+                    sets_since_batch = 0
+                    n_batch += len(cache.enforce())
+            if idx >= ripple_from:
+                n_sets += 1
+                ne = len(st.evictions)
+                hist[min(ne, HIST_BUCKETS - 1)] += 1
+                nr = sum(1 for e in st.evictions if e.ripple)
+                n_ripple += nr
+                n_primary += ne - nr
+        elif st.result is GetResult.HIT_LIST:
+            n_hit_list += 1
+        else:
+            n_hit_cache += 1
+        if idx >= warmup:
+            reqs_by_proxy[i] += 1
+            if st.result is GetResult.HIT_LIST:
+                hits_by_proxy[i] += 1
+    elapsed = time.perf_counter() - t0
+    rec.now = n
+    rec.finalize()
+
+    from repro.core.fastsim import _ripple_finish
+
+    return SimResult(
+        occupancy=rec.occupancy(),
+        n_requests=n,
+        warmup=warmup,
+        n_hit_list=n_hit_list,
+        n_hit_cache=n_hit_cache,
+        n_miss=n_miss,
+        hits_by_proxy=np.asarray(hits_by_proxy, dtype=np.int64),
+        reqs_by_proxy=np.asarray(reqs_by_proxy, dtype=np.int64),
+        evictions_per_set=_ripple_finish(hist),
+        n_sets_recorded=n_sets,
+        n_primary=n_primary,
+        n_ripple=n_ripple,
+        n_batch_evictions=n_batch,
+        final_vlen=np.asarray([cache.vlen(i) for i in range(J)]),
+        elapsed_s=elapsed,
+    )

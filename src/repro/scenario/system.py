@@ -1,0 +1,163 @@
+"""The System and Estimator axes of a :class:`repro.scenario.Scenario`.
+
+:class:`System` declares the cache under test — sharing variant, virtual
+allocations, RRE configuration, ghost retention, and which execution
+backend runs it. :class:`Estimator` declares how hit probabilities are
+obtained: Monte-Carlo simulation or the working-set fixed point of paper
+Section IV. Both are plain frozen dataclasses that round-trip through
+JSON, so an experiment is reproducible from its artifact alone.
+"""
+
+from __future__ import annotations
+
+from dataclasses import asdict, dataclass, replace
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.core.fastsim import SimParams
+from repro.core.workingset import ATTRIBUTIONS
+
+VARIANTS = ("lru", "slru", "noshare", "pooled")
+# "auto" lets fastsim pick (C loop when a compiler exists, else the
+# inlined Python loop); "reference" drives the hookable executable-spec
+# classes (slow — small runs and debugging only).
+BACKENDS = ("auto", "c", "flat", "generic", "xla", "reference")
+ESTIMATORS = ("monte_carlo", "working_set")
+
+
+@dataclass(frozen=True)
+class System:
+    """Declarative cache-system configuration.
+
+    ``slack_frac`` > 0 derives RRE ripple allocations
+    ``b_hat = ceil(b * (1 + slack_frac))`` (paper Section IV-D) unless an
+    explicit ``ripple_allocations`` overrides it; ``batch_interval`` adds
+    the delayed-batch-eviction mechanism. ``physical_capacity`` defaults
+    to ``sum(allocations)`` (or ``sum(b_hat)`` when slack is configured,
+    so the slack is actually backed by memory).
+    """
+
+    variant: str = "lru"
+    allocations: Tuple[int, ...] = ()
+    physical_capacity: Optional[int] = None
+    ghost_retention: bool = True
+    slack_frac: float = 0.0
+    ripple_allocations: Optional[Tuple[int, ...]] = None
+    batch_interval: int = 0
+    hot_frac: float = 0.32
+    warm_frac: float = 0.32
+    backend: str = "auto"
+
+    def __post_init__(self) -> None:
+        if self.variant not in VARIANTS:
+            raise ValueError(
+                f"unknown variant {self.variant!r}; options: {VARIANTS}"
+            )
+        if self.backend not in BACKENDS:
+            raise ValueError(
+                f"unknown backend {self.backend!r}; options: {BACKENDS}"
+            )
+        if not self.allocations:
+            raise ValueError("system needs per-proxy allocations")
+        if self.slack_frac < 0:
+            raise ValueError("slack_frac must be nonnegative")
+
+    @property
+    def n_proxies(self) -> int:
+        return len(self.allocations)
+
+    def b_hat(self) -> Optional[Tuple[int, ...]]:
+        """Effective RRE ripple allocations (None = no slack)."""
+        if self.ripple_allocations is not None:
+            return tuple(int(x) for x in self.ripple_allocations)
+        if self.slack_frac > 0:
+            return tuple(
+                int(np.ceil(b * (1.0 + self.slack_frac)))
+                for b in self.allocations
+            )
+        return None
+
+    def capacity(self) -> int:
+        if self.physical_capacity is not None:
+            return int(self.physical_capacity)
+        b_hat = self.b_hat()
+        return sum(b_hat) if b_hat is not None else sum(self.allocations)
+
+    def to_sim_params(self) -> SimParams:
+        return SimParams(
+            allocations=tuple(int(x) for x in self.allocations),
+            physical_capacity=self.capacity(),
+            ghost_retention=self.ghost_retention,
+            ripple_allocations=self.b_hat(),
+            variant=self.variant,
+            hot_frac=self.hot_frac,
+            warm_frac=self.warm_frac,
+            batch_interval=self.batch_interval,
+        )
+
+    def scaled(self, catalogue: float) -> "System":
+        if catalogue == 1.0:
+            return self
+        kw = {
+            "allocations": tuple(
+                max(1, round(b * catalogue)) for b in self.allocations
+            )
+        }
+        if self.physical_capacity is not None:
+            kw["physical_capacity"] = max(
+                1, round(self.physical_capacity * catalogue)
+            )
+        if self.ripple_allocations is not None:
+            kw["ripple_allocations"] = tuple(
+                max(1, round(b * catalogue)) for b in self.ripple_allocations
+            )
+        return replace(self, **kw)
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+    @staticmethod
+    def from_dict(d: dict) -> "System":
+        d = dict(d)
+        for key in ("allocations", "ripple_allocations"):
+            if d.get(key) is not None:
+                d[key] = tuple(d[key])
+        return System(**d)
+
+
+@dataclass(frozen=True)
+class Estimator:
+    """How hit probabilities are produced.
+
+    ``monte_carlo`` simulates the system trajectory (exact semantics,
+    PASTA residence-time occupancy estimator); ``working_set`` solves the
+    paper's eq. (8) fixed point under the selected length-attribution
+    model — no trace, milliseconds instead of minutes, approximate.
+    """
+
+    kind: str = "monte_carlo"
+    attribution: str = "L1"  # working_set only
+    n_quad: Optional[int] = None
+    n_outer: int = 200
+    n_bisect: int = 90
+    damping: float = 0.7
+    tol: float = 1e-7
+
+    def __post_init__(self) -> None:
+        if self.kind not in ESTIMATORS:
+            raise ValueError(
+                f"unknown estimator {self.kind!r}; options: {ESTIMATORS}"
+            )
+        if self.attribution not in ATTRIBUTIONS:
+            raise ValueError(
+                f"unknown attribution {self.attribution!r}; "
+                f"options: {ATTRIBUTIONS}"
+            )
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+    @staticmethod
+    def from_dict(d: dict) -> "Estimator":
+        return Estimator(**d)

@@ -3,62 +3,52 @@ around it: reproduces the paper's qualitative claims at test scale and
 exercises the full serve path (admission -> sharing -> ripple ->
 eviction -> pool reuse)."""
 
+import dataclasses
+
 import numpy as np
 import pytest
 
-from repro.core import (
-    GetResult,
-    MCDOSServer,
-    MCDServer,
-    SimParams,
-    consistent_route,
-    rate_matrix,
-    sample_trace,
-    simulate_trace,
-    solve_workingset,
-)
-
-
-def _simulate(params, trace, n_objects, warmup_frac=0.1):
-    """Whole-trace occupancy via the array engine (fastsim)."""
-    n = len(trace)
-    return simulate_trace(
-        params, trace, n_objects, warmup=int(n * warmup_frac)
-    ).occupancy
+from repro.core import GetResult, MCDOSServer, MCDServer, consistent_route, rate_matrix, sample_trace
+from repro.scenario import Estimator, Scenario, System, Workload
 
 
 def test_sharing_beats_not_shared_hit_rates():
-    """Prop 3.1 end to end, measured (not just the coupling invariant)."""
-    N = 300
-    lam = rate_matrix(N, [0.8, 0.9, 1.0])
-    trace = sample_trace(lam, 150_000, seed=5)
-    h_sh = _simulate(
-        SimParams(allocations=(16, 16, 16), physical_capacity=N), trace, N
-    )
-    ns = simulate_trace(
-        SimParams(allocations=(16, 16, 16), variant="noshare"),
-        trace,
-        N,
+    """Prop 3.1 end to end, measured (not just the coupling invariant) —
+    one scenario, two values of the system axis, identical trace."""
+    sh_sc = Scenario(
+        name="prop31",
+        workload=Workload(n_objects=300, alphas=(0.8, 0.9, 1.0)),
+        system=System(allocations=(16, 16, 16), physical_capacity=300),
+        n_requests=150_000,
         warmup=15_000,
+        seed=5,
     )
-    h_ns = ns.hit_rate_by_proxy
-    # weighted hit rate per proxy must improve under sharing
-    w = lam / lam.sum(axis=1, keepdims=True)
-    hr_sh = (w * h_sh).sum(axis=1)
-    assert np.all(hr_sh >= h_ns - 0.01)
+    ns_sc = dataclasses.replace(
+        sh_sc, system=System(variant="noshare", allocations=(16, 16, 16))
+    )
+    sh = sh_sc.run()
+    ns = ns_sc.run()
+    # demand-weighted hit rate per proxy must improve under sharing
+    assert np.all(sh.hit_rate >= ns.realized_hit_rate - 0.01)
 
 
 def test_workingset_predicts_simulation():
-    N = 400
-    lam = rate_matrix(N, [0.7, 1.0])
-    trace = sample_trace(lam, 200_000, seed=9)
-    h_sim = _simulate(
-        SimParams(allocations=(24, 24), physical_capacity=N), trace, N
+    """Estimator interchangeability: swap monte_carlo for working_set on
+    the same scenario and the head-rank predictions line up."""
+    sc = Scenario(
+        name="ws_vs_sim",
+        workload=Workload(n_objects=400, alphas=(0.7, 1.0)),
+        system=System(allocations=(24, 24), physical_capacity=400),
+        estimator=Estimator("monte_carlo"),
+        n_requests=200_000,
+        warmup=20_000,
+        seed=9,
     )
-    sol = solve_workingset(lam, np.ones(N), np.array([24.0, 24.0]))
+    sim = sc.run()
+    ws = sc.with_estimator("working_set").run()
     head = slice(0, 50)
-    rel = np.abs(sol.h[:, head] - h_sim[:, head]) / np.maximum(
-        h_sim[:, head], 0.02
+    rel = np.abs(ws.hit_prob[:, head] - sim.hit_prob[:, head]) / np.maximum(
+        sim.hit_prob[:, head], 0.02
     )
     assert float(np.median(rel)) < 0.15
 
