@@ -23,7 +23,9 @@ def main() -> dict:
 
     with Timer() as tm:
         sim = sc.run()
-    h_sim = sim.hit_prob
+    # densify: at REPRO_FULL the run auto-streams (sparse occupancy) and
+    # the head-rank bias below slices the (J, N) matrix (N=1000)
+    h_sim = sim.dense_hit_prob()
 
     sols = {
         kind: sc.with_estimator("working_set", attribution=kind).run()

@@ -14,18 +14,55 @@ equivalent event for event to the reference cache, see
 
 from __future__ import annotations
 
+import dataclasses
+
 from repro.scenario import get_preset
 
 from .common import (
     B_GRID,
     RANKS,
     TABLE1,
+    PeakRSS,
     Timer,
     csv_row,
     mean_rel_err,
     save_artifact,
     section5_scale,
 )
+
+
+def _peak_rss_compare(scale) -> dict:
+    """Streaming vs dense peak RSS on one combo (the ISSUE-3 artifact).
+
+    At REPRO_FULL scale the dense path materializes the 10M-request
+    trace (plus its sampling transients) while the streaming estimator
+    feeds 250k-request chunks through the chunk-fed engine — the
+    recorded ratio is the acceptance criterion (>= 10x at full scale).
+    Each mode gets a freshly built scenario (and streaming runs first),
+    so the dense run's memoized trace cannot sit in the streaming
+    run's baseline.
+    """
+    modes = {}
+    for mode in ("streaming", "dense"):
+        sc = get_preset("table1", b=(64, 64, 64)).scaled(*scale)
+        sc = dataclasses.replace(
+            sc,
+            estimator=dataclasses.replace(
+                sc.estimator, streaming=(mode == "streaming")
+            ),
+        )
+        with PeakRSS() as pr:
+            rep = sc.run()
+        modes[mode] = {
+            "peak_rss_delta_mb": round(pr.delta_mb, 2),
+            "backend": rep.backend,
+            "streaming": bool(rep.extras.get("streaming")),
+            "supported": pr.supported,
+        }
+    modes["dense_over_streaming"] = modes["dense"]["peak_rss_delta_mb"] / max(
+        modes["streaming"]["peak_rss_delta_mb"], 1e-9
+    )
+    return modes
 
 
 def main() -> dict:
@@ -51,6 +88,7 @@ def main() -> dict:
             all_pred += pred
             all_ref += ref
     err = mean_rel_err(all_pred, all_ref)
+    peak_rss = _peak_rss_compare(scale)
     payload = {
         "preset": "table1",
         "scenarios": scenarios,
@@ -59,6 +97,7 @@ def main() -> dict:
         "mean_rel_err_vs_paper": err,
         "engine": rep.backend,
         "engine_requests_per_sec": n_total / max(engine_us / 1e6, 1e-9),
+        "peak_rss": peak_rss,
     }
     save_artifact("table1_sim", payload)
 
@@ -73,6 +112,12 @@ def main() -> dict:
     print(
         f"# engine throughput: {payload['engine_requests_per_sec']:,.0f} req/s "
         f"(drive loop only, {len(B_GRID)} combos x {n_requests} requests)"
+    )
+    print(
+        f"# peak RSS (one combo): streaming "
+        f"{peak_rss['streaming']['peak_rss_delta_mb']:.1f} MB vs dense "
+        f"{peak_rss['dense']['peak_rss_delta_mb']:.1f} MB — "
+        f"{peak_rss['dense_over_streaming']:.1f}x"
     )
     csv_row(
         "table1_sim",

@@ -35,7 +35,9 @@ def main() -> dict:
     with Timer() as tm:
         ns = ns_sc.run()
         sh = sh_sc.run()
-    h_ns, h_sh = ns.hit_prob, sh.hit_prob
+    # densify: at REPRO_FULL the runs auto-stream and carry sparse
+    # occupancy; the Prop-3.1 check needs elementwise (J, N) math (N=1000)
+    h_ns, h_sh = ns.dense_hit_prob(), sh.dense_hit_prob()
 
     rows, all_pred, all_ref = {}, [], []
     for i in range(3):

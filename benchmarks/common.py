@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import json
 import os
+import threading
 import time
 from pathlib import Path
 from typing import Dict, Iterable, List, Sequence, Tuple
@@ -141,6 +142,63 @@ class Timer:
     def __exit__(self, *exc):
         self.seconds = time.perf_counter() - self.t0
         return False
+
+
+class PeakRSS:
+    """Peak resident-set-size sampler over a code block.
+
+    A background thread polls ``/proc/self/statm`` every few
+    milliseconds; ``delta_mb`` reports the peak RSS *above the entry
+    baseline*, so successive blocks in one process measure their own
+    allocations rather than the process high-water mark (which only
+    ever grows). Sustained allocations — a materialized trace, dense
+    accumulators — are what the streaming-vs-dense comparison cares
+    about, and those are held for whole run phases, far longer than the
+    sampling interval. On platforms without /proc, ``supported`` is
+    False and the deltas read 0.
+    """
+
+    def __init__(self, interval_s: float = 0.002) -> None:
+        self.interval_s = interval_s
+        self.supported = True
+        try:
+            self._page_mb = os.sysconf("SC_PAGE_SIZE") / 1e6
+            self._read()
+        except (OSError, ValueError, AttributeError):
+            self.supported = False
+        self.baseline_mb = 0.0
+        self.peak_mb = 0.0
+
+    def _read(self) -> float:
+        with open("/proc/self/statm") as f:
+            return int(f.read().split()[1]) * self._page_mb
+
+    def _run(self) -> None:
+        while not self._stop.is_set():
+            try:
+                self.peak_mb = max(self.peak_mb, self._read())
+            except OSError:  # pragma: no cover
+                break
+            self._stop.wait(self.interval_s)
+
+    def __enter__(self) -> "PeakRSS":
+        if self.supported:
+            self.baseline_mb = self.peak_mb = self._read()
+            self._stop = threading.Event()
+            self._thread = threading.Thread(target=self._run, daemon=True)
+            self._thread.start()
+        return self
+
+    def __exit__(self, *exc):
+        if self.supported:
+            self.peak_mb = max(self.peak_mb, self._read())
+            self._stop.set()
+            self._thread.join()
+        return False
+
+    @property
+    def delta_mb(self) -> float:
+        return max(self.peak_mb - self.baseline_mb, 0.0)
 
 
 def rel_err(pred: float, ref: float, floor: float = 1e-9) -> float:

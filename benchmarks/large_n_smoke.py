@@ -1,0 +1,101 @@
+"""Large-N streaming smoke: prove the sparse/chunked estimator engages.
+
+Runs a scenario sized so the runner's *auto* streaming selection must
+trigger (``n_requests * J`` crosses the request-cell threshold) and
+enforces two hard assertions:
+
+* the report says the streaming path ran (``extras['streaming']`` True,
+  sparse hit-probability representation) — failing this means the dense
+  path was silently used;
+* peak RSS above the pre-run baseline stays under ``RSS_BUDGET_MB``.
+  The one-shot dense path cannot pass this: materializing the
+  6M-request trace alone costs ~72 MB (plus ~160 MB of sampling
+  transients), while the streaming path holds one 250k-request chunk
+  plus the touched-set engine state.
+
+Used by the CI ``large-n-smoke`` job (and runnable standalone:
+``PYTHONPATH=src python -m benchmarks.large_n_smoke``).
+"""
+
+from __future__ import annotations
+
+from repro.scenario import Estimator, Scenario, System, Workload
+
+from .common import PeakRSS, Timer, csv_row, save_artifact
+
+N_OBJECTS = 200_000
+N_REQUESTS = 6_000_000  # x J=3 proxies = 18M request cells: auto-streams
+RSS_BUDGET_MB = 96.0
+
+
+def scenario() -> Scenario:
+    return Scenario(
+        name="large_n_smoke",
+        description=(
+            "Large-N streaming smoke: Section-V-shaped workload scaled to "
+            f"N={N_OBJECTS:,} objects x {N_REQUESTS:,} requests, auto "
+            "streaming + sparse occupancy, enforced peak-RSS budget."
+        ),
+        workload=Workload(
+            kind="irm", n_objects=N_OBJECTS, alphas=(0.75, 0.5, 1.0)
+        ),
+        system=System(
+            variant="lru", allocations=(600, 600, 600), physical_capacity=2000
+        ),
+        estimator=Estimator("monte_carlo"),  # streaming=None -> auto
+        n_requests=N_REQUESTS,
+        seed=17,
+    )
+
+
+def main() -> dict:
+    sc = scenario()
+    with PeakRSS() as pr, Timer() as tm:
+        rep = sc.run()
+
+    streaming = bool(rep.extras.get("streaming"))
+    if not streaming or not rep.hit_prob_is_sparse:
+        raise RuntimeError(
+            "large-N scenario did not take the streaming/sparse path "
+            f"(streaming={streaming}, sparse={rep.hit_prob_is_sparse}) — "
+            "the dense path was silently used"
+        )
+    if pr.supported and pr.delta_mb > RSS_BUDGET_MB:
+        raise RuntimeError(
+            f"peak RSS {pr.delta_mb:.1f} MB above baseline exceeds the "
+            f"{RSS_BUDGET_MB:.0f} MB streaming budget — dense-path "
+            "memory behaviour detected"
+        )
+
+    payload = {
+        "scenario": sc.to_dict(),
+        "backend": rep.backend,
+        "streaming": streaming,
+        "chunk_size": rep.extras.get("chunk_size"),
+        "sparse_hit_prob": rep.hit_prob_is_sparse,
+        "touched_objects": int(rep.hit_prob.nnz),
+        "n_objects": N_OBJECTS,
+        "overall_hit_rate": float(rep.overall_hit_rate),
+        "peak_rss_delta_mb": round(pr.delta_mb, 2),
+        "rss_budget_mb": RSS_BUDGET_MB,
+        "rss_supported": pr.supported,
+        "engine_requests_per_sec": float(rep.throughput_rps),
+        "wall_seconds": round(tm.seconds, 3),
+    }
+    save_artifact("large_n_smoke", payload)
+    print(
+        f"# large-N smoke: backend={rep.backend} streaming={streaming} "
+        f"touched={payload['touched_objects']:,}/{N_OBJECTS:,} objects, "
+        f"peak RSS +{pr.delta_mb:.1f} MB (budget {RSS_BUDGET_MB:.0f} MB), "
+        f"{rep.throughput_rps:,.0f} req/s"
+    )
+    csv_row(
+        "large_n_smoke",
+        tm.seconds * 1e6 / max(N_REQUESTS, 1),
+        f"peak_rss_mb={pr.delta_mb:.1f};streaming={streaming}",
+    )
+    return payload
+
+
+if __name__ == "__main__":
+    main()

@@ -76,6 +76,17 @@ def render_table1_sim(d: dict) -> List[str]:
         f"{d.get('engine_requests_per_sec', 0):,.0f} req/s).",
         "",
     ]
+    rss = d.get("peak_rss")
+    if rss:
+        out += [
+            f"Peak RSS (one combo): streaming estimator "
+            f"**{rss['streaming']['peak_rss_delta_mb']:.1f} MB** vs one-shot "
+            f"dense **{rss['dense']['peak_rss_delta_mb']:.1f} MB** — "
+            f"**{rss['dense_over_streaming']:.1f}x** lower "
+            f"(chunk-fed `{rss['streaming']['backend']}` drive loop + sparse "
+            "touched-set occupancy; bit-identical results).",
+            "",
+        ]
     out += _ranks_table(d["rows"], "sim")
     return out
 

@@ -27,6 +27,7 @@ BENCHES = [
     ("rre", "benchmarks.bench_rre"),
     ("slru", "benchmarks.bench_slru"),
     ("simthroughput", "benchmarks.bench_simthroughput"),  # engine speedup
+    ("large_n_smoke", "benchmarks.large_n_smoke"),        # streaming + RSS guard
     ("admission", "benchmarks.bench_admission"),
     ("serving", "benchmarks.bench_serving"),
     ("roofline", "benchmarks.bench_roofline"),

@@ -37,6 +37,8 @@ from .fastsim import (  # noqa: F401
     FastSharedLRU,
     SimParams,
     SimResult,
+    SparseOccupancy,
+    simulate_chunks,
     simulate_trace,
 )
 from .baselines import NotSharedSystem, PooledLRU, SimpleLRU  # noqa: F401

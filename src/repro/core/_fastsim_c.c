@@ -4,9 +4,21 @@
  * repro/core/fastsim.py — which are themselves proven equivalent,
  * event for event, to the reference SharedLRUCache by
  * tests/test_fastsim.py. Same struct-of-arrays layout: intrusive
- * doubly-linked lists in flat int64 vectors, holder bitmasks, exact
- * lcm-scaled virtual lengths, ghost list, inline residence-time (PASTA)
- * occupancy accumulation.
+ * doubly-linked lists, holder bitmasks, exact lcm-scaled virtual
+ * lengths, ghost list, inline residence-time (PASTA) occupancy
+ * accumulation.
+ *
+ * Streaming + sparse layout (Section VI-C scale): the per-(proxy,
+ * object) vectors (list pointers and occupancy accumulators) are NOT
+ * dense (J, N) arrays. Objects get a slot in a touched-set the first
+ * time they enter any list; per-slot state is indexed slot*J + proxy.
+ * Untouched objects cost nothing beyond the N-sized id->slot map and
+ * contribute exactly zero occupancy. drive_chunk() consumes one chunk
+ * of the request stream and keeps all engine state resident across
+ * calls (counters live in the in/out scalar block), so a trace can be
+ * streamed through without ever being materialized; it returns early
+ * when the slot capacity is exhausted so the caller can grow the slot
+ * arrays and resume mid-chunk.
  *
  * Built on demand by repro/core/fastsim_c.py with the system C compiler
  * (cc -O2 -shared -fPIC); if that fails the Python loops take over.
@@ -17,7 +29,7 @@
 
 #define NIL (-1)
 
-/* out_scalars layout (in/out) */
+/* out_scalars layout (in/out) — must match fastsim_c.py */
 enum {
     SC_PHYS = 0,
     SC_GHEAD,
@@ -31,6 +43,8 @@ enum {
     SC_NPRIM,
     SC_NRIP,
     SC_NBATCH,
+    SC_NSLOTS,
+    SC_SETSSINCE,
     SC_COUNT
 };
 
@@ -42,10 +56,11 @@ enum {
  * the number with worst != trig (ignored when NULL). Static + few call
  * sites, so the compiler inlines it back into the drive loop. */
 static int64_t trim_loop(
-    int64_t J, int64_t N, int64_t trig,
+    int64_t J, int64_t trig,
     const int64_t *b_scaled, const int64_t *lim_other,
     const int64_t *share, int64_t ghost_retention,
     int64_t now, int64_t t_start,
+    const int64_t *slot,
     int64_t *nxt, int64_t *prv, int64_t *head, int64_t *tail,
     uint64_t *hmask, int64_t *length, int64_t *vlen,
     int64_t *gnxt, int64_t *gprv, uint8_t *isghost,
@@ -61,11 +76,10 @@ static int64_t trim_loop(
             if (over > worst_over) { worst = j; worst_over = over; }
         }
         if (worst < 0) break;
-        int64_t wbase = worst * N;
-        int64_t v = tail[worst], wv = wbase + v;
+        int64_t v = tail[worst], wv = slot[v] * J + worst;
         int64_t nv = nxt[wv];
         tail[worst] = nv;
-        if (nv == NIL) head[worst] = NIL; else prv[wbase + nv] = NIL;
+        if (nv == NIL) head[worst] = NIL; else prv[slot[nv] * J + worst] = NIL;
         int64_t since = res_since[wv];
         if (since >= 0) {
             tot_time[wv] += now - (since > t_start ? since : t_start);
@@ -97,24 +111,37 @@ static int64_t trim_loop(
     return n_ev;
 }
 
-int64_t simulate_flat(
-    int64_t n, int64_t J, int64_t N,
-    const int32_t *P, const int64_t *O,
+/* Drive one chunk [idx0, idx0 + n_chunk) of the request stream through
+ * the flat shared-LRU engine. All state (dense N-sized vectors, the
+ * slot map, per-slot vectors, counters in sc) is caller-owned and
+ * persists across calls. Returns the number of requests consumed:
+ * == n_chunk normally, less when a new object needs a slot and
+ * slot_cap is exhausted (the caller grows the slot arrays and calls
+ * again with idx0 advanced). Finalization of open residence intervals
+ * is the caller's job (vectorized numpy) once the stream ends. */
+int64_t drive_chunk(
+    int64_t idx0, int64_t n_chunk,
+    int64_t J, int64_t N,
+    const int32_t *P, const int64_t *O,   /* (n_chunk) request chunk   */
     const int64_t *lengths,       /* (N)   l_k                         */
     const int64_t *b_scaled,      /* (J)   primary allocations * M     */
     const int64_t *bhat_scaled,   /* (J)   RRE ripple allocations * M  */
     const int64_t *share,         /* (J+2) [0, M/1, ..., M/J, 0]       */
     int64_t scale, int64_t B, int64_t ghost_retention,
     int64_t warmup, int64_t ripple_from, int64_t batch_interval,
-    /* state, preallocated and initialised by the caller: */
-    int64_t *nxt, int64_t *prv,           /* (J*N) */
+    /* dense per-object state, preallocated + initialised by caller: */
     int64_t *head, int64_t *tail,         /* (J)   */
     uint64_t *hmask,                      /* (N)   */
     int64_t *length,                      /* (N)   */
     int64_t *vlen,                        /* (J)   */
     int64_t *gnxt, int64_t *gprv,         /* (N)   */
     uint8_t *isghost,                     /* (N)   */
-    int64_t *res_since, int64_t *tot_time,/* (J*N) */
+    /* sparse touched-set state: */
+    int64_t *slot,                        /* (N) object -> slot, -1    */
+    int64_t *slot_key,                    /* (slot_cap) slot -> object */
+    int64_t slot_cap,
+    int64_t *nxt, int64_t *prv,           /* (slot_cap*J), slot-major  */
+    int64_t *res_since, int64_t *tot_time,/* (slot_cap*J), slot-major  */
     /* outputs: */
     int64_t *sc,                          /* (SC_COUNT) scalars, in/out */
     int64_t *hits_p, int64_t *reqs_p,     /* (J) post-warmup counters   */
@@ -122,28 +149,42 @@ int64_t simulate_flat(
 {
     int64_t phys = sc[SC_PHYS], ghead = sc[SC_GHEAD], gtail = sc[SC_GTAIL];
     int64_t n_ghosts = sc[SC_NGHOSTS], t_start = sc[SC_TSTART];
-    int64_t n_hit_list = 0, n_hit_cache = 0, n_miss = 0;
-    int64_t n_sets = 0, n_prim = 0, n_rip = 0, n_batch = 0;
-    int64_t sets_since_batch = 0;
+    int64_t n_hit_list = sc[SC_NHITLIST], n_hit_cache = sc[SC_NHITCACHE];
+    int64_t n_miss = sc[SC_NMISS];
+    int64_t n_sets = sc[SC_NSETS], n_prim = sc[SC_NPRIM];
+    int64_t n_rip = sc[SC_NRIP], n_batch = sc[SC_NBATCH];
+    int64_t n_slots = sc[SC_NSLOTS], sets_since_batch = sc[SC_SETSSINCE];
 
-    for (int64_t idx = 0; idx < n; idx++) {
+#define FLUSH_SCALARS() do { \
+        sc[SC_PHYS] = phys; sc[SC_GHEAD] = ghead; sc[SC_GTAIL] = gtail; \
+        sc[SC_NGHOSTS] = n_ghosts; sc[SC_TSTART] = t_start; \
+        sc[SC_NHITLIST] = n_hit_list; sc[SC_NHITCACHE] = n_hit_cache; \
+        sc[SC_NMISS] = n_miss; \
+        sc[SC_NSETS] = n_sets; sc[SC_NPRIM] = n_prim; sc[SC_NRIP] = n_rip; \
+        sc[SC_NBATCH] = n_batch; sc[SC_NSLOTS] = n_slots; \
+        sc[SC_SETSSINCE] = sets_since_batch; \
+    } while (0)
+
+    for (int64_t off = 0; off < n_chunk; off++) {
+        int64_t idx = idx0 + off;
         if (idx == warmup) {
-            memset(tot_time, 0, (size_t)(J * N) * sizeof(int64_t));
+            memset(tot_time, 0, (size_t)(n_slots * J) * sizeof(int64_t));
             t_start = idx;
         }
-        int64_t i = (int64_t)P[idx];
-        int64_t k = O[idx];
-        int64_t base = i * N, ik = base + k;
+        int64_t i = (int64_t)P[off];
+        int64_t k = O[off];
         uint64_t m = hmask[k];
         if ((m >> i) & 1u) {
             /* ---- HIT_LIST: promote to head of list i ---- */
             n_hit_list++;
             if (head[i] != k) {
+                int64_t ik = slot[k] * J + i;
                 int64_t p = prv[ik], nx = nxt[ik];
-                if (p == NIL) tail[i] = nx; else nxt[base + p] = nx;
-                prv[base + nx] = p;   /* nx != NIL: k is not the head */
+                if (p == NIL) tail[i] = nx; else nxt[slot[p] * J + i] = nx;
+                prv[slot[nx] * J + i] = p;   /* nx != NIL: k is not the head */
                 int64_t h = head[i];
-                nxt[base + h] = k; prv[ik] = h; nxt[ik] = NIL; head[i] = k;
+                nxt[slot[h] * J + i] = k;
+                prv[ik] = h; nxt[ik] = NIL; head[i] = k;
             }
             if (idx >= warmup) { reqs_p[i]++; hits_p[i]++; }
             continue;
@@ -151,7 +192,8 @@ int64_t simulate_flat(
         int64_t l = length[k];
         int64_t is_set;
         if (l > 0) {
-            /* ---- HIT_CACHE: attach to list i ---- */
+            /* ---- HIT_CACHE: attach to list i (slot exists: k entered
+             * some list when it was first set) ---- */
             n_hit_cache++;
             if (m) {
                 int64_t p_old = (int64_t)__builtin_popcountll(m);
@@ -175,6 +217,16 @@ int64_t simulate_flat(
             is_set = 0;
         } else {
             /* ---- MISS -> fetch + set(k, l_k) ---- */
+            if (slot[k] < 0) {
+                if (n_slots == slot_cap) {
+                    /* out of touched-set capacity: hand back to the
+                     * caller BEFORE mutating anything for this request */
+                    FLUSH_SCALARS();
+                    return off;
+                }
+                slot[k] = n_slots;
+                slot_key[n_slots++] = k;
+            }
             n_miss++;
             l = lengths[k];
             while (phys + l > B && ghead != NIL) {
@@ -191,16 +243,17 @@ int64_t simulate_flat(
         }
         /* link k at head of list i (+ occupancy attach) */
         {
+            int64_t ik = slot[k] * J + i;
             int64_t h = head[i];
-            if (h == NIL) tail[i] = k; else nxt[base + h] = k;
+            if (h == NIL) tail[i] = k; else nxt[slot[h] * J + i] = k;
             prv[ik] = h; nxt[ik] = NIL; head[i] = k;
             res_since[ik] = idx;
         }
         /* ---- eviction loop (RRE thresholds; trigger = i) ---- */
         int64_t n_rp;
         int64_t n_ev = trim_loop(
-            J, N, i, b_scaled, bhat_scaled, share, ghost_retention,
-            idx, t_start, nxt, prv, head, tail, hmask, length, vlen,
+            J, i, b_scaled, bhat_scaled, share, ghost_retention,
+            idx, t_start, slot, nxt, prv, head, tail, hmask, length, vlen,
             gnxt, gprv, isghost, res_since, tot_time,
             &phys, &ghead, &gtail, &n_ghosts, &n_rp);
         if (is_set) {
@@ -216,9 +269,9 @@ int64_t simulate_flat(
                 /* delayed batch trim to primary allocations (RRE) */
                 sets_since_batch = 0;
                 n_batch += trim_loop(
-                    J, N, -1, b_scaled, b_scaled, share, ghost_retention,
-                    idx, t_start, nxt, prv, head, tail, hmask, length, vlen,
-                    gnxt, gprv, isghost, res_since, tot_time,
+                    J, -1, b_scaled, b_scaled, share, ghost_retention,
+                    idx, t_start, slot, nxt, prv, head, tail, hmask,
+                    length, vlen, gnxt, gprv, isghost, res_since, tot_time,
                     &phys, &ghead, &gtail, &n_ghosts, (int64_t *)0);
             }
             if (idx >= ripple_from) {
@@ -231,28 +284,20 @@ int64_t simulate_flat(
         if (idx >= warmup) reqs_p[i]++;
     }
 
-    /* finalize open residence intervals at t = n */
-    for (int64_t ik = 0; ik < J * N; ik++) {
-        int64_t since = res_since[ik];
-        if (since >= 0) {
-            tot_time[ik] += n - (since > t_start ? since : t_start);
-            res_since[ik] = n;
-        }
-    }
-
-    sc[SC_PHYS] = phys; sc[SC_GHEAD] = ghead; sc[SC_GTAIL] = gtail;
-    sc[SC_NGHOSTS] = n_ghosts; sc[SC_TSTART] = t_start;
-    sc[SC_NHITLIST] = n_hit_list; sc[SC_NHITCACHE] = n_hit_cache;
-    sc[SC_NMISS] = n_miss;
-    sc[SC_NSETS] = n_sets; sc[SC_NPRIM] = n_prim; sc[SC_NRIP] = n_rip;
-    sc[SC_NBATCH] = n_batch;
-    return 0;
+    FLUSH_SCALARS();
+#undef FLUSH_SCALARS
+    return n_chunk;
 }
 
 /* J independent full-length-charging LRUs (the Table-III "not shared"
- * baseline), driven with get_autofetch semantics. */
-int64_t simulate_noshare(
-    int64_t n, int64_t J, int64_t N,
+ * baseline), driven with get_autofetch semantics. Chunk-fed like
+ * drive_chunk (state persists across calls, counters in sc); the
+ * per-(proxy, object) state stays dense (J*N) — the baseline has no
+ * sharing mask to piggyback a touched-set on, and it is only run at
+ * Section-V scale. Caller finalizes open residence intervals. */
+int64_t noshare_chunk(
+    int64_t idx0, int64_t n_chunk,
+    int64_t J, int64_t N,
     const int32_t *P, const int64_t *O,
     const int64_t *lengths, const int64_t *b,
     int64_t warmup,
@@ -261,17 +306,18 @@ int64_t simulate_noshare(
     uint8_t *inlist,                      /* (J*N) */
     int64_t *used,                        /* (J)   */
     int64_t *res_since, int64_t *tot_time,/* (J*N) */
-    int64_t *sc,                          /* [t_start, n_hit, n_miss] */
+    int64_t *sc,                          /* [t_start, n_hit, n_miss] in/out */
     int64_t *hits_p, int64_t *reqs_p)     /* (J) */
 {
-    int64_t t_start = sc[0], n_hit = 0, n_miss = 0;
-    for (int64_t idx = 0; idx < n; idx++) {
+    int64_t t_start = sc[0], n_hit = sc[1], n_miss = sc[2];
+    for (int64_t off = 0; off < n_chunk; off++) {
+        int64_t idx = idx0 + off;
         if (idx == warmup) {
             memset(tot_time, 0, (size_t)(J * N) * sizeof(int64_t));
             t_start = idx;
         }
-        int64_t i = (int64_t)P[idx];
-        int64_t k = O[idx];
+        int64_t i = (int64_t)P[off];
+        int64_t k = O[off];
         int64_t base = i * N, ik = base + k;
         if (inlist[ik]) {
             n_hit++;
@@ -307,13 +353,6 @@ int64_t simulate_noshare(
         }
         if (idx >= warmup) reqs_p[i]++;
     }
-    for (int64_t ik = 0; ik < J * N; ik++) {
-        int64_t since = res_since[ik];
-        if (since >= 0) {
-            tot_time[ik] += n - (since > t_start ? since : t_start);
-            res_since[ik] = n;
-        }
-    }
     sc[0] = t_start; sc[1] = n_hit; sc[2] = n_miss;
-    return 0;
+    return n_chunk;
 }

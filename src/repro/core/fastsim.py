@@ -39,6 +39,22 @@ which is where the throughput comes from: the batch driver
 eviction-loop into one allocation-free interpreter loop over these
 vectors, and only the (J, N) estimator outputs are numpy.
 
+Streaming + sparse occupancy (Section VI-C scale)
+-------------------------------------------------
+The whole-trace drivers do NOT allocate the dense ``(J, N)``
+per-(proxy, object) vectors above: the Python and C drive loops index
+list pointers and occupancy accumulators through a sparse touched-set
+(``slot[k] * J + i``) where objects earn a slot on first entry into any
+list, so engine state scales with the touched catalogue and untouched
+objects contribute exactly zero occupancy. :func:`simulate_chunks`
+feeds the request stream chunk by chunk (``Workload.iter_chunks`` /
+:func:`~repro.core.irm.sample_trace_chunks`) with engine state resident
+across chunks in every backend — the trace is never materialized — and
+returns occupancy as a :class:`SparseOccupancy` (indices, values) pair.
+Chunked + sparse runs are bit-identical to one-shot dense runs
+(``tests/test_streaming.py``); the XLA driver carries dense int32 state
+between chunks (fixed-shape buffers) but produces the same outputs.
+
 Which engine to use
 -------------------
 * ``SharedLRUCache`` / ``SegmentedSharedLRUCache`` — the readable
@@ -728,11 +744,58 @@ class SimParams:
         raise ValueError(f"unknown variant {self.variant!r}")
 
 
+@dataclass(frozen=True)
+class SparseOccupancy:
+    """Touched-set occupancy: ``(indices, values)`` over ``n_objects``.
+
+    The streaming estimator's output representation: ``indices`` holds
+    the (sorted, unique) ids of objects with nonzero time-average
+    occupancy in at least one list, ``values[i, t]`` the occupancy of
+    object ``indices[t]`` in list ``i``. Every object not listed has
+    exactly zero occupancy — densifying scatters ``values`` into a
+    zero ``(J, N)`` matrix, bit-identical to the dense accumulator
+    output of the one-shot path (enforced by ``tests/test_streaming``).
+    """
+
+    n_objects: int
+    indices: np.ndarray  # (T,) int64, sorted ascending
+    values: np.ndarray   # (J, T) float64
+
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return (self.values.shape[0], self.n_objects)
+
+    @property
+    def nnz(self) -> int:
+        return int(self.indices.size)
+
+    def densify(self) -> np.ndarray:
+        """Materialize the full ``(J, N)`` matrix (small N only)."""
+        out = np.zeros(
+            (self.values.shape[0], self.n_objects), dtype=np.float64
+        )
+        out[:, self.indices] = self.values
+        return out
+
+    def lookup(self, proxy: int, objs) -> np.ndarray:
+        """Occupancy of ``objs`` in list ``proxy`` (0 for untouched)."""
+        objs = np.atleast_1d(np.asarray(objs, dtype=np.int64))
+        out = np.zeros(objs.shape, dtype=np.float64)
+        if self.indices.size:
+            pos = np.searchsorted(self.indices, objs)
+            pos = np.clip(pos, 0, self.indices.size - 1)
+            hit = self.indices[pos] == objs
+            out[hit] = self.values[proxy, pos[hit]]
+        return out
+
+
 @dataclass
 class SimResult:
-    """Outputs of :func:`simulate_trace`."""
+    """Outputs of :func:`simulate_trace` / :func:`simulate_chunks`."""
 
-    occupancy: np.ndarray  # (J, N) time-average occupancy == IRM hit prob
+    # (J, N) time-average occupancy == IRM hit prob; a SparseOccupancy
+    # (indices, values) pair when the run was sparse/streaming.
+    occupancy: "np.ndarray | SparseOccupancy"
     n_requests: int
     warmup: int
     n_hit_list: int
@@ -754,8 +817,25 @@ class SimResult:
         return self.n_requests / self.elapsed_s if self.elapsed_s > 0 else float("inf")
 
     @property
+    def occupancy_is_sparse(self) -> bool:
+        return isinstance(self.occupancy, SparseOccupancy)
+
+    def dense_occupancy(self) -> np.ndarray:
+        """The full ``(J, N)`` occupancy matrix, whatever the run mode
+        produced (materializes — use only when N is small)."""
+        if isinstance(self.occupancy, SparseOccupancy):
+            return self.occupancy.densify()
+        return self.occupancy
+
+    @property
     def hit_rate_by_proxy(self) -> np.ndarray:
-        return self.hits_by_proxy / np.maximum(self.reqs_by_proxy, 1)
+        """Post-warmup realized hit rate per proxy; NaN for proxies that
+        issued no post-warmup requests (short runs with skewed rates)."""
+        reqs = self.reqs_by_proxy
+        with np.errstate(invalid="ignore"):
+            return np.where(
+                reqs > 0, self.hits_by_proxy / np.maximum(reqs, 1), np.nan
+            )
 
     @property
     def frac_multi_eviction(self) -> float:
@@ -789,6 +869,7 @@ def simulate_trace(
     warmup: Optional[int] = None,
     ripple_from: Optional[int] = None,
     engine: str = "auto",
+    sparse: bool = False,
 ) -> SimResult:
     """Drive a whole IRM trace through the array engine in one call.
 
@@ -807,6 +888,57 @@ def simulate_trace(
     each other; the XLA driver is the accelerator-portable expression —
     on CPU its conditional state copies make it slower than the C loop,
     so it never wins "auto").
+
+    ``sparse=True`` returns occupancy as a :class:`SparseOccupancy`
+    (indices, values) pair instead of the dense ``(J, N)`` matrix; the
+    densified result is bit-identical. This is a single-chunk call of
+    :func:`simulate_chunks` — use that directly to stream a trace that
+    should never be materialized in full.
+    """
+    return simulate_chunks(
+        params,
+        (trace,),
+        n_objects,
+        len(trace),
+        lengths=lengths,
+        warmup=warmup,
+        ripple_from=ripple_from,
+        engine=engine,
+        sparse=sparse,
+    )
+
+
+def simulate_chunks(
+    params: SimParams,
+    chunks,
+    n_objects: int,
+    n_requests: int,
+    *,
+    lengths: Optional[np.ndarray] = None,
+    warmup: Optional[int] = None,
+    ripple_from: Optional[int] = None,
+    engine: str = "auto",
+    sparse: bool = True,
+) -> SimResult:
+    """Drive a *streamed* request trace through the array engine.
+
+    ``chunks`` is any iterable of :class:`~repro.core.irm.IRMTrace`
+    pieces (e.g. ``Workload.iter_chunks`` or
+    :func:`~repro.core.irm.sample_trace_chunks`) whose concatenation is
+    the full trace of ``n_requests`` requests; it is consumed lazily, so
+    peak memory is O(chunk + engine state) — the Section VI-C scaling
+    path for huge catalogues. Engine state stays resident between chunks
+    in every backend (the C backend via its incremental ``drive_chunk``
+    entry point, the XLA driver via carried state), and the per-(proxy,
+    object) accumulators of the flat shared-LRU drivers are a sparse
+    touched-set: only objects that ever enter a list get slots, so state
+    scales with the touched catalogue, not ``J * N``. Results are
+    bit-identical to :func:`simulate_trace` on the one-shot trace
+    regardless of chunk boundaries (enforced by ``tests/test_streaming``).
+
+    ``n_requests`` must equal the total chunk length (it fixes the
+    default warmup before the stream is consumed). With ``sparse=True``
+    (default) occupancy comes back as :class:`SparseOccupancy`.
     """
     if engine not in ("auto", "c", "flat", "generic", "xla"):
         raise ValueError(
@@ -819,73 +951,85 @@ def simulate_trace(
             f"engine {engine!r} does not support variant {params.variant!r}; "
             f"options: auto, {', '.join(allowed)}"
         )
-    n = len(trace)
+    n = int(n_requests)
+    N = int(n_objects)
     if warmup is None:
         warmup = default_warmup(n, params.allocations)
     warmup = min(warmup, n)
     if ripple_from is None:
         ripple_from = warmup
     if lengths is None:
-        lengths_l = [1] * n_objects
+        lengths_a = np.ones(N, dtype=np.int64)
     else:
-        lengths_l = [int(x) for x in np.asarray(lengths)]
-        if len(lengths_l) != n_objects:
+        lengths_a = np.ascontiguousarray(np.asarray(lengths), dtype=np.int64)
+        if lengths_a.ndim != 1 or len(lengths_a) != N:
             raise ValueError("lengths must have one entry per object")
-        if any(x <= 0 for x in lengths_l):
+        if (lengths_a <= 0).any():
             raise ValueError("object lengths must be positive")
 
     J = len(params.allocations)
     scale = _lcm_1_to(J)
+    driver = None
+    engine_name = "?"
+    vlen_scale = scale
 
     if params.variant == "noshare":
+        vlen_scale = 1
         if engine in ("auto", "c"):
-            got = _try_c_noshare(params, n_objects, trace, lengths_l, warmup)
-            if got is not None:
-                return _assemble(got[0], got[1], n, warmup, J, n_objects, 1, "c")
-            if engine == "c":
+            driver = _make_c_noshare(params, N, lengths_a, warmup)
+            engine_name = "c"
+            if driver is None and engine == "c":
                 raise RuntimeError(
                     "engine='c' requested but the C backend is unavailable"
                 )
-        P = trace.proxies.tolist()
-        O = trace.objects.tolist()
-        return _run_noshare(params, n_objects, P, O, lengths_l, warmup)
-
-    if params.variant == "pooled":
-        P = trace.proxies.tolist()
-        O = trace.objects.tolist()
-        return _run_pooled(params, n_objects, P, O, lengths_l, warmup)
-
-    if params.variant == "lru":
+        if driver is None:
+            driver = _NoshareDriver(params, N, lengths_a, warmup)
+            engine_name = "flat"
+    elif params.variant == "pooled":
+        vlen_scale = 1
+        driver = _PooledDriver(params, N, lengths_a, warmup)
+        engine_name = "flat"
+    elif params.variant == "slru":
+        driver = _GenericDriver(params, N, lengths_a, warmup, ripple_from)
+        engine_name = "generic"
+    else:  # flat shared LRU
         if engine in ("auto", "c"):
-            got = _try_c_flat(
-                params, n_objects, trace, lengths_l, warmup, ripple_from, scale
-            )
-            if got is not None:
-                return _assemble(got[0], got[1], n, warmup, J, n_objects, scale, "c")
-            if engine == "c":
+            driver = _make_c_flat(params, N, lengths_a, warmup, ripple_from, scale)
+            engine_name = "c"
+            if driver is None and engine == "c":
                 raise RuntimeError(
                     "engine='c' requested but the C backend is unavailable"
                 )
-        if engine == "xla":
+        if driver is None and engine == "xla":
             if params.batch_interval == 0 and _xla_applicable(
-                n, n_objects, lengths_l, params
+                n, N, lengths_a, params
             ):
-                res = _run_xla(
-                    params, n_objects, trace, lengths_l, warmup, ripple_from
+                driver = _make_xla(params, N, lengths_a, warmup, ripple_from, scale)
+                engine_name = "xla"
+            if driver is None:
+                raise RuntimeError(
+                    "engine='xla' requested but the XLA driver is not applicable "
+                    "(jax missing, batch_interval > 0, or int32 range exceeded)"
                 )
-                if res is not None:
-                    return res
-            raise RuntimeError(
-                "engine='xla' requested but the XLA driver is not applicable "
-                "(jax missing, batch_interval > 0, or int32 range exceeded)"
-            )
+        if driver is None and engine == "generic":
+            driver = _GenericDriver(params, N, lengths_a, warmup, ripple_from)
+            engine_name = "generic"
+        if driver is None:
+            driver = _FlatDriver(params, N, lengths_a, warmup, ripple_from)
+            engine_name = "flat"
 
-    P = trace.proxies.tolist()
-    O = trace.objects.tolist()
-    eng = params.make_engine(n_objects)
-    if engine in ("auto", "flat") and params.variant == "lru":
-        return _run_flat(eng, params, P, O, lengths_l, warmup, ripple_from)
-    return _run_generic(eng, params, P, O, lengths_l, warmup, ripple_from)
+    consumed = 0
+    for chunk in chunks:
+        driver.feed(chunk.proxies, chunk.objects)
+        consumed += len(chunk.proxies)
+    if consumed != n:
+        raise ValueError(
+            f"chunk stream supplied {consumed} requests but n_requests={n}"
+        )
+    out = driver.finish(n)
+    return _assemble(
+        out, driver.elapsed, n, warmup, J, N, vlen_scale, engine_name, sparse
+    )
 
 
 # Backends that can honour a forced-engine request, per variant.
@@ -933,38 +1077,58 @@ def _validate_params(params: SimParams) -> None:
             raise ValueError("hot_frac + warm_frac must be < 1")
 
 
-def _try_c_flat(params, n_objects, trace, lengths, warmup, ripple_from, scale):
+def _make_c_flat(params, n_objects, lengths, warmup, ripple_from, scale):
     try:
         from . import fastsim_c
 
-        return fastsim_c.run_trace_c(
-            params,
-            n_objects,
-            trace.proxies,
-            trace.objects,
-            lengths,
-            warmup,
-            ripple_from,
-            scale,
+        return fastsim_c.make_flat_runner(
+            params, n_objects, lengths, warmup, ripple_from, scale
         )
     except Exception:
         return None
 
 
-def _try_c_noshare(params, n_objects, trace, lengths, warmup):
+def _make_c_noshare(params, n_objects, lengths, warmup):
     try:
         from . import fastsim_c
 
-        return fastsim_c.run_noshare_c(
-            params.allocations,
-            n_objects,
-            trace.proxies,
-            trace.objects,
-            lengths,
-            warmup,
+        return fastsim_c.make_noshare_runner(
+            params.allocations, n_objects, lengths, warmup
         )
     except Exception:
         return None
+
+
+def _make_xla(params, n_objects, lengths, warmup, ripple_from, scale):
+    try:
+        from . import fastsim_jax
+
+        return fastsim_jax.XLAChunkRunner(
+            params, n_objects, lengths, warmup, ripple_from, scale
+        )
+    except Exception:
+        return None
+
+
+def _xla_applicable(
+    n: int, n_objects: int, lengths: np.ndarray, params: SimParams
+) -> bool:
+    """int32-exactness envelope of the compiled driver."""
+    J = len(params.allocations)
+    scale = _lcm_1_to(J)
+    # vlen is bounded by the *ripple* allocation (plus one transient
+    # attach), so b_hat — not b — sets the envelope.
+    b_hat = (
+        params.ripple_allocations
+        if params.ripple_allocations is not None
+        else params.allocations
+    )
+    return (
+        n < 2**31
+        and J * n_objects < 2**31
+        and int(np.max(lengths)) * scale * (J + 1) < 2**31
+        and max(b_hat, default=0) * scale < 2**30
+    )
 
 
 def _assemble(
@@ -976,10 +1140,36 @@ def _assemble(
     N: int,
     scale: int,
     engine: str,
+    sparse: bool,
 ) -> SimResult:
-    """Build a SimResult from a backend's raw output dict."""
+    """Build a SimResult from a backend's raw output dict.
+
+    Slot-sparse backends report accumulators as ``tot_time_slots`` (slot
+    major, ``(T*J,)``) + ``slot_keys``; dense backends report
+    ``tot_time`` as a flat ``(J*N,)`` vector. Either way the occupancy
+    comes out dense or as a canonical :class:`SparseOccupancy` (sorted
+    indices, zero columns dropped) per ``sparse``.
+    """
     horizon = max(int(out["horizon"]), 1)
-    occ = np.asarray(out["tot_time"], dtype=np.int64).reshape(J, N) / horizon
+    if "slot_keys" in out:
+        keys = np.asarray(out["slot_keys"], dtype=np.int64)
+        vals = np.asarray(out["tot_time_slots"], dtype=np.int64).reshape(-1, J).T
+        if sparse:
+            order = np.argsort(keys, kind="stable")
+            keys, vals = keys[order], vals[:, order]
+            nz = vals.any(axis=0) if vals.size else np.zeros(0, dtype=bool)
+            occ = SparseOccupancy(N, keys[nz], vals[:, nz] / horizon)
+        else:
+            dense = np.zeros((J, N), dtype=np.int64)
+            dense[:, keys] = vals
+            occ = dense / horizon
+    else:
+        tt = np.asarray(out["tot_time"], dtype=np.int64).reshape(J, N)
+        if sparse:
+            idxs = np.flatnonzero(tt.any(axis=0))
+            occ = SparseOccupancy(N, idxs, tt[:, idxs] / horizon)
+        else:
+            occ = tt / horizon
     return SimResult(
         occupancy=occ,
         n_requests=n,
@@ -1002,54 +1192,6 @@ def _assemble(
     )
 
 
-def _xla_applicable(
-    n: int, n_objects: int, lengths: List[int], params: SimParams
-) -> bool:
-    """int32-exactness envelope of the compiled driver."""
-    J = len(params.allocations)
-    scale = _lcm_1_to(J)
-    # vlen is bounded by the *ripple* allocation (plus one transient
-    # attach), so b_hat — not b — sets the envelope.
-    b_hat = (
-        params.ripple_allocations
-        if params.ripple_allocations is not None
-        else params.allocations
-    )
-    return (
-        n < 2**31
-        and J * n_objects < 2**31
-        and max(lengths) * scale * (J + 1) < 2**31
-        and max(b_hat, default=0) * scale < 2**30
-    )
-
-
-def _run_xla(
-    params: SimParams,
-    n_objects: int,
-    trace: IRMTrace,
-    lengths: List[int],
-    warmup: int,
-    ripple_from: int,
-) -> Optional[SimResult]:
-    try:
-        from . import fastsim_jax
-    except Exception:  # jax not available: fall back to the Python loop
-        return None
-    J = len(params.allocations)
-    scale = _lcm_1_to(J)
-    out, elapsed = fastsim_jax.run_trace_xla(
-        params,
-        n_objects,
-        trace.proxies,
-        trace.objects,
-        lengths,
-        warmup,
-        ripple_from,
-        scale,
-    )
-    return _assemble(out, elapsed, len(trace), warmup, J, n_objects, scale, "xla")
-
-
 def _ripple_finish(hist: List[int]) -> np.ndarray:
     last = 0
     for idx, c in enumerate(hist):
@@ -1058,245 +1200,373 @@ def _ripple_finish(hist: List[int]) -> np.ndarray:
     return np.asarray(hist[: last + 1], dtype=np.int64)
 
 
-def _run_generic(
-    eng: FastSharedLRU,
-    params: SimParams,
-    P: List[int],
-    O: List[int],
-    lengths: List[int],
-    warmup: int,
-    ripple_from: int,
-) -> SimResult:
-    """Per-operation driver: works for every engine variant."""
-    J = eng.J
-    hits_by_proxy = [0] * J
-    reqs_by_proxy = [0] * J
-    hist = [0] * HIST_BUCKETS
-    n_sets_rec = n_primary = n_ripple = n_batch = 0
-    batch_interval = params.batch_interval
-    sets_since_batch = 0
-    n = len(P)
+# ---------------------------------------------------------------------------
+# Chunk-fed drivers (Python backends)
+# ---------------------------------------------------------------------------
+class _FlatDriver:
+    """Chunk-fed, slot-sparse pure-Python drive loop (flat shared LRU).
 
-    t0 = time.perf_counter()
-    for idx in range(n):
-        eng.now = idx
-        if idx == warmup:
-            eng.reset_window()
-        i, k = P[idx], O[idx]
-        res, events = eng.get(i, k)
-        if res is GetResult.MISS:
-            _, events = eng.set(i, k, lengths[k])
-            if batch_interval > 0:
-                sets_since_batch += 1
-                if sets_since_batch >= batch_interval:
-                    sets_since_batch = 0
-                    n_batch += len(eng.enforce())
-            if idx >= ripple_from:
-                n_sets_rec += 1
-                ne = len(events)
-                hist[ne if ne < HIST_BUCKETS else HIST_BUCKETS - 1] += 1
-                nr = sum(1 for e in events if e[2])
-                n_ripple += nr
-                n_primary += ne - nr
-        if idx >= warmup:
-            reqs_by_proxy[i] += 1
-            if res is GetResult.HIT_LIST:
-                hits_by_proxy[i] += 1
-    elapsed = time.perf_counter() - t0
-
-    eng.now = n
-    eng.finalize()
-    return SimResult(
-        occupancy=eng.occupancy(),
-        n_requests=n,
-        warmup=warmup,
-        n_hit_list=eng.n_hit_list,
-        n_hit_cache=eng.n_hit_cache,
-        n_miss=eng.n_miss,
-        hits_by_proxy=np.asarray(hits_by_proxy, dtype=np.int64),
-        reqs_by_proxy=np.asarray(reqs_by_proxy, dtype=np.int64),
-        evictions_per_set=_ripple_finish(hist),
-        n_sets_recorded=n_sets_rec,
-        n_primary=n_primary,
-        n_ripple=n_ripple,
-        n_batch_evictions=n_batch,
-        final_vlen=np.asarray([eng.vlen(i) for i in range(J)]),
-        elapsed_s=elapsed,
-        engine="generic",
-    )
-
-
-def _run_flat(
-    eng: FastSharedLRU,
-    params: SimParams,
-    P: List[int],
-    O: List[int],
-    lengths: List[int],
-    warmup: int,
-    ripple_from: int,
-) -> SimResult:
-    """Fully-inlined hot loop for the flat shared-LRU variant.
-
-    One interpreter loop, no per-request allocation: get / set / attach /
-    detach / eviction-loop / ghost handling / occupancy accumulation all
-    operate directly on the flat SoA vectors. Equivalence with the
-    per-operation path (and with the reference ``SharedLRUCache``) is
-    enforced by ``tests/test_fastsim.py``.
+    One fully-inlined interpreter loop per chunk, no per-request
+    allocation: get / set / attach / detach / eviction-loop / ghost
+    handling / occupancy accumulation all operate directly on flat
+    CPython lists. This is the Python twin of the C ``drive_chunk``
+    kernel: the per-(proxy, object) vectors (list pointers + occupancy
+    accumulators) are indexed ``slot[k] * J + i`` through the sparse
+    touched-set map, so memory scales with the touched catalogue, not
+    ``J * N``. Equivalence with the per-operation path (and with the
+    reference ``SharedLRUCache``) is enforced by ``tests/test_fastsim``
+    and ``tests/test_streaming``.
     """
-    J, N = eng.J, eng.N
-    scale = eng._scale
-    share = eng.share
-    b_scaled = eng.b_scaled
-    bhat_scaled = eng.b_hat_scaled
-    B = eng.B
-    ghost_retention = eng.ghost_retention
-    rng_J = range(J)
 
-    nxt, prv = eng.nxt, eng.prv
-    head, tail = eng.head, eng.tail
-    hmask, length = eng.hmask, eng.length
-    vlen = eng.vlen_scaled
-    gnxt, gprv, isghost = eng.gnxt, eng.gprv, eng.isghost
-    ghead, gtail = eng.ghead, eng.gtail
-    n_ghosts = eng.n_ghosts
-    phys_used = eng.phys_used
-    res_since, tot_time = eng.res_since, eng.tot_time
-    t_start = eng.t_start
+    def __init__(
+        self,
+        params: SimParams,
+        n_objects: int,
+        lengths: np.ndarray,
+        warmup: int,
+        ripple_from: int,
+    ) -> None:
+        J = len(params.allocations)
+        N = int(n_objects)
+        self.J, self.N = J, N
+        scale = _lcm_1_to(J)
+        self.scale = scale
+        b = [int(x) for x in params.allocations]
+        b_hat = (
+            [int(x) for x in params.ripple_allocations]
+            if params.ripple_allocations is not None
+            else list(b)
+        )
+        self.b_scaled = [x * scale for x in b]
+        self.bhat_scaled = [x * scale for x in b_hat]
+        self.B = int(
+            params.physical_capacity
+            if params.physical_capacity is not None
+            else sum(b)
+        )
+        self.ghost_retention = bool(params.ghost_retention)
+        self.batch_interval = int(params.batch_interval)
+        self.warmup = int(warmup)
+        self.ripple_from = int(ripple_from)
+        self.share = [0] + [scale // p for p in range(1, J + 1)] + [0]
+        self.lengths = [int(x) for x in lengths]
 
-    n_hit_list = n_hit_cache = n_miss = n_set = 0
-    hits_by_proxy = [0] * J
-    reqs_by_proxy = [0] * J
-    hist = [0] * HIST_BUCKETS
-    hist_cap = HIST_BUCKETS - 1
-    n_sets_rec = n_primary = n_ripple = n_batch = 0
-    batch_interval = params.batch_interval
-    sets_since_batch = 0
-    n = len(P)
+        # Dense per-object state (N-sized).
+        self.head = [NIL] * J
+        self.tail = [NIL] * J
+        self.hmask = [0] * N
+        self.length = [0] * N
+        self.vlen = [0] * J
+        self.gnxt = [NIL] * N
+        self.gprv = [NIL] * N
+        self.isghost = [False] * N
+        self.ghead = NIL
+        self.gtail = NIL
+        self.n_ghosts = 0
+        self.phys_used = 0
+        # Sparse touched-set state (grows by J entries per new slot).
+        self.slot = [NIL] * N
+        self.slot_key: List[int] = []
+        self.nxt: List[int] = []
+        self.prv: List[int] = []
+        self.res_since: List[int] = []
+        self.tot_time: List[int] = []
+        self.t_start = 0
 
-    t0 = time.perf_counter()
-    for idx in range(n):
-        if idx == warmup:
-            tot_time = [0] * (J * N)
-            t_start = idx
-        i = P[idx]
-        k = O[idx]
-        base = i * N
-        ik = base + k
-        if hmask[k] >> i & 1:
-            # ---- HIT_LIST: promote to head of list i --------------------
-            n_hit_list += 1
-            if head[i] != k:
-                p = prv[ik]
-                nx = nxt[ik]
-                if p == NIL:
-                    tail[i] = nx
+        self.n_hit_list = self.n_hit_cache = self.n_miss = 0
+        self.hits_by_proxy = [0] * J
+        self.reqs_by_proxy = [0] * J
+        self.hist = [0] * HIST_BUCKETS
+        self.n_sets_rec = self.n_primary = self.n_ripple = self.n_batch = 0
+        self.sets_since_batch = 0
+        self.idx = 0
+        self.elapsed = 0.0
+
+    def feed(self, proxies, objects) -> None:
+        P = np.asarray(proxies).tolist()
+        O = np.asarray(objects).tolist()
+        J = self.J
+        scale = self.scale
+        share = self.share
+        b_scaled = self.b_scaled
+        bhat_scaled = self.bhat_scaled
+        B = self.B
+        ghost_retention = self.ghost_retention
+        batch_interval = self.batch_interval
+        warmup = self.warmup
+        ripple_from = self.ripple_from
+        lengths = self.lengths
+        rng_J = range(J)
+
+        head, tail = self.head, self.tail
+        hmask, length = self.hmask, self.length
+        vlen = self.vlen
+        gnxt, gprv, isghost = self.gnxt, self.gprv, self.isghost
+        ghead, gtail = self.ghead, self.gtail
+        n_ghosts, phys_used = self.n_ghosts, self.phys_used
+        slot, slot_key = self.slot, self.slot_key
+        nxt, prv = self.nxt, self.prv
+        res_since, tot_time = self.res_since, self.tot_time
+        t_start = self.t_start
+
+        n_hit_list, n_hit_cache, n_miss = (
+            self.n_hit_list, self.n_hit_cache, self.n_miss
+        )
+        hits_by_proxy, reqs_by_proxy = self.hits_by_proxy, self.reqs_by_proxy
+        hist = self.hist
+        hist_cap = HIST_BUCKETS - 1
+        n_sets_rec, n_primary = self.n_sets_rec, self.n_primary
+        n_ripple, n_batch = self.n_ripple, self.n_batch
+        sets_since_batch = self.sets_since_batch
+        idx0 = self.idx
+        n = len(P)
+
+        t0 = time.perf_counter()
+        for off in range(n):
+            idx = idx0 + off
+            if idx == warmup:
+                tot_time = [0] * len(tot_time)
+                t_start = idx
+            i = P[off]
+            k = O[off]
+            if hmask[k] >> i & 1:
+                # ---- HIT_LIST: promote to head of list i ----------------
+                n_hit_list += 1
+                if head[i] != k:
+                    ik = slot[k] * J + i
+                    p = prv[ik]
+                    nx = nxt[ik]
+                    if p == NIL:
+                        tail[i] = nx
+                    else:
+                        nxt[slot[p] * J + i] = nx
+                    prv[slot[nx] * J + i] = p  # nx != NIL: k is not the head
+                    h = head[i]
+                    nxt[slot[h] * J + i] = k
+                    prv[ik] = h
+                    nxt[ik] = NIL
+                    head[i] = k
+                if idx >= warmup:
+                    reqs_by_proxy[i] += 1
+                    hits_by_proxy[i] += 1
+                continue
+
+            l = length[k]
+            if l > 0:
+                # ---- HIT_CACHE: attach to list i (slot exists) ----------
+                n_hit_cache += 1
+                m = hmask[k]
+                if m:
+                    p_old = m.bit_count()
+                    delta = l * share[p_old + 1] - l * share[p_old]
+                    mm = m
+                    while mm:
+                        j = (mm & -mm).bit_length() - 1
+                        vlen[j] += delta
+                        mm &= mm - 1
+                    hmask[k] = m | (1 << i)
+                    vlen[i] += l * share[p_old + 1]
                 else:
-                    nxt[base + p] = nx
-                prv[base + nx] = p  # nx != NIL since k is not the head
-                h = head[i]
-                nxt[base + h] = k
-                prv[ik] = h
-                nxt[ik] = NIL
-                head[i] = k
-            if idx >= warmup:
-                reqs_by_proxy[i] += 1
-                hits_by_proxy[i] += 1
-            continue
-
-        l = length[k]
-        if l > 0:
-            # ---- HIT_CACHE: attach to list i ----------------------------
-            n_hit_cache += 1
-            m = hmask[k]
-            if m:
-                p_old = m.bit_count()
-                delta = l * share[p_old + 1] - l * share[p_old]
-                mm = m
-                while mm:
-                    j = (mm & -mm).bit_length() - 1
-                    vlen[j] += delta
-                    mm &= mm - 1
-                hmask[k] = m | (1 << i)
-                vlen[i] += l * share[p_old + 1]
+                    # resurrected ghost
+                    hmask[k] = 1 << i
+                    vlen[i] += l * scale
+                    gp = gprv[k]
+                    gn = gnxt[k]
+                    if gp == NIL:
+                        ghead = gn
+                    else:
+                        gnxt[gp] = gn
+                    if gn == NIL:
+                        gtail = gp
+                    else:
+                        gprv[gn] = gp
+                    isghost[k] = False
+                    n_ghosts -= 1
+                is_set = False
             else:
-                # resurrected ghost
+                # ---- MISS -> fetch + set(k, l_k) ------------------------
+                n_miss += 1
+                if slot[k] < 0:
+                    slot[k] = len(slot_key)
+                    slot_key.append(k)
+                    nxt.extend([NIL] * J)
+                    prv.extend([NIL] * J)
+                    res_since.extend([-1] * J)
+                    tot_time.extend([0] * J)
+                l = lengths[k]
+                while phys_used + l > B and ghead != NIL:
+                    g = ghead
+                    ghead = gnxt[g]
+                    if ghead == NIL:
+                        gtail = NIL
+                    else:
+                        gprv[ghead] = NIL
+                    isghost[g] = False
+                    n_ghosts -= 1
+                    phys_used -= length[g]
+                    length[g] = 0
+                length[k] = l
+                phys_used += l
                 hmask[k] = 1 << i
                 vlen[i] += l * scale
-                gp = gprv[k]
-                gn = gnxt[k]
-                if gp == NIL:
-                    ghead = gn
-                else:
-                    gnxt[gp] = gn
-                if gn == NIL:
-                    gtail = gp
-                else:
-                    gprv[gn] = gp
-                isghost[k] = False
-                n_ghosts -= 1
-            is_set = False
-        else:
-            # ---- MISS -> fetch + set(k, l_k) ----------------------------
-            n_miss += 1
-            n_set += 1
-            l = lengths[k]
-            while phys_used + l > B and ghead != NIL:
-                g = ghead
-                ghead = gnxt[g]
-                if ghead == NIL:
-                    gtail = NIL
-                else:
-                    gprv[ghead] = NIL
-                isghost[g] = False
-                n_ghosts -= 1
-                phys_used -= length[g]
-                length[g] = 0
-            length[k] = l
-            phys_used += l
-            hmask[k] = 1 << i
-            vlen[i] += l * scale
-            is_set = True
+                is_set = True
 
-        # link k at head of list i (+ occupancy attach)
-        h = head[i]
-        if h == NIL:
-            tail[i] = k
-        else:
-            nxt[base + h] = k
-        prv[ik] = h
-        nxt[ik] = NIL
-        head[i] = k
-        res_since[ik] = idx
+            # link k at head of list i (+ occupancy attach)
+            ik = slot[k] * J + i
+            h = head[i]
+            if h == NIL:
+                tail[i] = k
+            else:
+                nxt[slot[h] * J + i] = k
+            prv[ik] = h
+            nxt[ik] = NIL
+            head[i] = k
+            res_since[ik] = idx
 
-        # ---- eviction loop (RRE thresholds; trigger = i) ----------------
-        n_evictions = 0
-        n_rip = 0
+            # ---- eviction loop (RRE thresholds; trigger = i) ------------
+            n_evictions = 0
+            n_rip = 0
+            while True:
+                worst = -1
+                worst_over = 0
+                for j in rng_J:
+                    over = vlen[j] - (b_scaled[j] if j == i else bhat_scaled[j])
+                    if over > worst_over:
+                        worst = j
+                        worst_over = over
+                if worst < 0:
+                    break
+                v = tail[worst]
+                wv = slot[v] * J + worst
+                # unlink victim from tail of list `worst`
+                nv = nxt[wv]
+                tail[worst] = nv
+                if nv == NIL:
+                    head[worst] = NIL
+                else:
+                    prv[slot[nv] * J + worst] = NIL
+                # occupancy detach
+                since = res_since[wv]
+                if since >= 0:
+                    tot_time[wv] += idx - (since if since > t_start else t_start)
+                    res_since[wv] = -1
+                # share re-apportionment
+                m = hmask[v]
+                lv = length[v]
+                p_old = m.bit_count()
+                m &= ~(1 << worst)
+                hmask[v] = m
+                vlen[worst] -= lv * share[p_old]
+                if m:
+                    delta = lv * share[p_old - 1] - lv * share[p_old]
+                    while m:
+                        j = (m & -m).bit_length() - 1
+                        vlen[j] += delta
+                        m &= m - 1
+                elif ghost_retention:
+                    if gtail == NIL:
+                        ghead = v
+                    else:
+                        gnxt[gtail] = v
+                    gprv[v] = gtail
+                    gnxt[v] = NIL
+                    gtail = v
+                    isghost[v] = True
+                    n_ghosts += 1
+                else:
+                    phys_used -= lv
+                    length[v] = 0
+                n_evictions += 1
+                if worst != i:
+                    n_rip += 1
+
+            if is_set:
+                # reconcile physical occupancy (transient overshoot)
+                while phys_used > B and ghead != NIL:
+                    g = ghead
+                    ghead = gnxt[g]
+                    if ghead == NIL:
+                        gtail = NIL
+                    else:
+                        gprv[ghead] = NIL
+                    isghost[g] = False
+                    n_ghosts -= 1
+                    phys_used -= length[g]
+                    length[g] = 0
+                if batch_interval > 0:
+                    sets_since_batch += 1
+                    if sets_since_batch >= batch_interval:
+                        sets_since_batch = 0
+                        # delayed batch trim: rare -> sync state, use method
+                        self.ghead, self.gtail = ghead, gtail
+                        self.n_ghosts, self.phys_used = n_ghosts, phys_used
+                        self.t_start, self.tot_time = t_start, tot_time
+                        n_batch += self._batch_trim(idx)
+                        ghead, gtail = self.ghead, self.gtail
+                        n_ghosts, phys_used = self.n_ghosts, self.phys_used
+                if idx >= ripple_from:
+                    n_sets_rec += 1
+                    hist[n_evictions if n_evictions < hist_cap else hist_cap] += 1
+                    n_ripple += n_rip
+                    n_primary += n_evictions - n_rip
+
+            if idx >= warmup:
+                reqs_by_proxy[i] += 1
+        self.elapsed += time.perf_counter() - t0
+
+        # write scalars (and rebound lists) back for the next chunk
+        self.ghead, self.gtail, self.n_ghosts = ghead, gtail, n_ghosts
+        self.phys_used = phys_used
+        self.tot_time, self.t_start = tot_time, t_start
+        self.n_hit_list, self.n_hit_cache, self.n_miss = (
+            n_hit_list, n_hit_cache, n_miss
+        )
+        self.n_sets_rec, self.n_primary = n_sets_rec, n_primary
+        self.n_ripple, self.n_batch = n_ripple, n_batch
+        self.sets_since_batch = sets_since_batch
+        self.idx = idx0 + n
+
+    def _batch_trim(self, now: int) -> int:
+        """RRE delayed batch trim: evict down to *primary* allocations
+        (the array twin of ``FastSharedLRU.enforce``). Returns the
+        eviction count; ripple/physical flags are not recorded (batch
+        evictions happen off the request path)."""
+        J = self.J
+        share = self.share
+        b_scaled = self.b_scaled
+        vlen = self.vlen
+        head, tail = self.head, self.tail
+        nxt, prv, slot = self.nxt, self.prv, self.slot
+        hmask, length = self.hmask, self.length
+        gnxt, gprv, isghost = self.gnxt, self.gprv, self.isghost
+        res_since, tot_time = self.res_since, self.tot_time
+        t_start = self.t_start
+        ghead, gtail = self.ghead, self.gtail
+        n_ghosts, phys_used = self.n_ghosts, self.phys_used
+        ghost_retention = self.ghost_retention
+        n_ev = 0
         while True:
             worst = -1
             worst_over = 0
-            for j in rng_J:
-                over = vlen[j] - (b_scaled[j] if j == i else bhat_scaled[j])
+            for j in range(J):
+                over = vlen[j] - b_scaled[j]
                 if over > worst_over:
                     worst = j
                     worst_over = over
             if worst < 0:
                 break
-            wbase = worst * N
             v = tail[worst]
-            wv = wbase + v
-            # unlink victim from tail of list `worst`
+            wv = slot[v] * J + worst
             nv = nxt[wv]
             tail[worst] = nv
             if nv == NIL:
                 head[worst] = NIL
             else:
-                prv[wbase + nv] = NIL
-            # occupancy detach
+                prv[slot[nv] * J + worst] = NIL
             since = res_since[wv]
             if since >= 0:
-                tot_time[wv] += idx - (since if since > t_start else t_start)
+                tot_time[wv] += now - (since if since > t_start else t_start)
                 res_since[wv] = -1
-            # share re-apportionment
             m = hmask[v]
             lv = length[v]
             p_old = m.bit_count()
@@ -1322,303 +1592,402 @@ def _run_flat(
             else:
                 phys_used -= lv
                 length[v] = 0
-            n_evictions += 1
-            if worst != i:
-                n_rip += 1
+            n_ev += 1
+        self.ghead, self.gtail = ghead, gtail
+        self.n_ghosts, self.phys_used = n_ghosts, phys_used
+        return n_ev
 
-        if is_set:
-            # reconcile physical occupancy (transient overshoot of one set)
-            while phys_used > B and ghead != NIL:
-                g = ghead
-                ghead = gnxt[g]
-                if ghead == NIL:
-                    gtail = NIL
-                else:
-                    gprv[ghead] = NIL
-                isghost[g] = False
-                n_ghosts -= 1
-                phys_used -= length[g]
-                length[g] = 0
-            if batch_interval > 0:
-                sets_since_batch += 1
-                if sets_since_batch >= batch_interval:
-                    sets_since_batch = 0
-                    # delayed batch trim: rare -> sync state, use method
-                    eng.ghead, eng.gtail = ghead, gtail
-                    eng.n_ghosts, eng.phys_used = n_ghosts, phys_used
-                    eng.now, eng.t_start, eng.tot_time = idx, t_start, tot_time
-                    n_batch += len(eng.enforce())
-                    ghead, gtail = eng.ghead, eng.gtail
-                    n_ghosts, phys_used = eng.n_ghosts, eng.phys_used
-            if idx >= ripple_from:
-                n_sets_rec += 1
-                hist[n_evictions if n_evictions < hist_cap else hist_cap] += 1
-                n_ripple += n_rip
-                n_primary += n_evictions - n_rip
-
-        if idx >= warmup:
-            reqs_by_proxy[i] += 1
-    elapsed = time.perf_counter() - t0
-
-    # write scalars back so the engine object stays inspectable
-    eng.ghead, eng.gtail, eng.n_ghosts = ghead, gtail, n_ghosts
-    eng.phys_used = phys_used
-    eng.tot_time, eng.t_start = tot_time, t_start
-    eng.n_get = n
-    eng.n_set = n_set
-    eng.n_hit_list, eng.n_hit_cache, eng.n_miss = n_hit_list, n_hit_cache, n_miss
-    eng.now = n
-    eng.finalize()
-
-    return SimResult(
-        occupancy=eng.occupancy(),
-        n_requests=n,
-        warmup=warmup,
-        n_hit_list=n_hit_list,
-        n_hit_cache=n_hit_cache,
-        n_miss=n_miss,
-        hits_by_proxy=np.asarray(hits_by_proxy, dtype=np.int64),
-        reqs_by_proxy=np.asarray(reqs_by_proxy, dtype=np.int64),
-        evictions_per_set=_ripple_finish(hist),
-        n_sets_recorded=n_sets_rec,
-        n_primary=n_primary,
-        n_ripple=n_ripple,
-        n_batch_evictions=n_batch,
-        final_vlen=np.asarray([eng.vlen(i) for i in rng_J]),
-        elapsed_s=elapsed,
-        engine="flat",
-    )
+    def finish(self, n_total: int) -> dict:
+        rs = np.asarray(self.res_since, dtype=np.int64)
+        tt = np.asarray(self.tot_time, dtype=np.int64)
+        open_m = rs >= 0
+        tt[open_m] += n_total - np.maximum(rs[open_m], self.t_start)
+        return {
+            "tot_time_slots": tt,
+            "slot_keys": np.asarray(self.slot_key, dtype=np.int64),
+            "horizon": max(n_total - self.t_start, 1),
+            "vlen": np.asarray(self.vlen, dtype=np.int64),
+            "n_hit_list": self.n_hit_list,
+            "n_hit_cache": self.n_hit_cache,
+            "n_miss": self.n_miss,
+            "hits_p": np.asarray(self.hits_by_proxy, dtype=np.int64),
+            "reqs_p": np.asarray(self.reqs_by_proxy, dtype=np.int64),
+            "hist": np.asarray(self.hist, dtype=np.int64),
+            "n_sets": self.n_sets_rec,
+            "n_prim": self.n_primary,
+            "n_rip": self.n_ripple,
+            "n_batch": self.n_batch,
+        }
 
 
-def _run_noshare(
-    params: SimParams,
-    N: int,
-    P: List[int],
-    O: List[int],
-    lengths: List[int],
-    warmup: int,
-) -> SimResult:
-    """J independent full-length-charging LRUs (Table-III baseline).
+class _GenericDriver:
+    """Chunk-fed per-operation driver: works for every engine variant
+    (the only backend for the segmented S-LRU lists, whose per-(proxy,
+    object) state stays dense — segment metadata has no touched-set)."""
+
+    def __init__(
+        self,
+        params: SimParams,
+        n_objects: int,
+        lengths: np.ndarray,
+        warmup: int,
+        ripple_from: int,
+    ) -> None:
+        self.eng = params.make_engine(n_objects)
+        self.batch_interval = int(params.batch_interval)
+        self.warmup = int(warmup)
+        self.ripple_from = int(ripple_from)
+        self.lengths = [int(x) for x in lengths]
+        J = self.eng.J
+        self.hits_by_proxy = [0] * J
+        self.reqs_by_proxy = [0] * J
+        self.hist = [0] * HIST_BUCKETS
+        self.n_sets_rec = self.n_primary = self.n_ripple = self.n_batch = 0
+        self.sets_since_batch = 0
+        self.idx = 0
+        self.elapsed = 0.0
+
+    def feed(self, proxies, objects) -> None:
+        P = np.asarray(proxies).tolist()
+        O = np.asarray(objects).tolist()
+        eng = self.eng
+        lengths = self.lengths
+        warmup, ripple_from = self.warmup, self.ripple_from
+        batch_interval = self.batch_interval
+        hits_by_proxy, reqs_by_proxy = self.hits_by_proxy, self.reqs_by_proxy
+        hist = self.hist
+        n_sets_rec, n_primary = self.n_sets_rec, self.n_primary
+        n_ripple, n_batch = self.n_ripple, self.n_batch
+        sets_since_batch = self.sets_since_batch
+        idx0 = self.idx
+        n = len(P)
+
+        t0 = time.perf_counter()
+        for off in range(n):
+            idx = idx0 + off
+            eng.now = idx
+            if idx == warmup:
+                eng.reset_window()
+            i, k = P[off], O[off]
+            res, events = eng.get(i, k)
+            if res is GetResult.MISS:
+                _, events = eng.set(i, k, lengths[k])
+                if batch_interval > 0:
+                    sets_since_batch += 1
+                    if sets_since_batch >= batch_interval:
+                        sets_since_batch = 0
+                        n_batch += len(eng.enforce())
+                if idx >= ripple_from:
+                    n_sets_rec += 1
+                    ne = len(events)
+                    hist[ne if ne < HIST_BUCKETS else HIST_BUCKETS - 1] += 1
+                    nr = sum(1 for e in events if e[2])
+                    n_ripple += nr
+                    n_primary += ne - nr
+            if idx >= warmup:
+                reqs_by_proxy[i] += 1
+                if res is GetResult.HIT_LIST:
+                    hits_by_proxy[i] += 1
+        self.elapsed += time.perf_counter() - t0
+
+        self.n_sets_rec, self.n_primary = n_sets_rec, n_primary
+        self.n_ripple, self.n_batch = n_ripple, n_batch
+        self.sets_since_batch = sets_since_batch
+        self.idx = idx0 + n
+
+    def finish(self, n_total: int) -> dict:
+        eng = self.eng
+        eng.now = n_total
+        eng.finalize()
+        return {
+            "tot_time": np.asarray(eng.tot_time, dtype=np.int64),
+            "horizon": max(n_total - eng.t_start, 1),
+            "vlen": np.asarray(eng.vlen_scaled, dtype=np.int64),
+            "n_hit_list": eng.n_hit_list,
+            "n_hit_cache": eng.n_hit_cache,
+            "n_miss": eng.n_miss,
+            "hits_p": np.asarray(self.hits_by_proxy, dtype=np.int64),
+            "reqs_p": np.asarray(self.reqs_by_proxy, dtype=np.int64),
+            "hist": np.asarray(self.hist, dtype=np.int64),
+            "n_sets": self.n_sets_rec,
+            "n_prim": self.n_primary,
+            "n_rip": self.n_ripple,
+            "n_batch": self.n_batch,
+        }
+
+
+class _NoshareDriver:
+    """Chunk-fed J-independent-LRUs loop (Table-III baseline).
 
     Mirrors :class:`repro.core.baselines.NotSharedSystem` driven with
     ``get_autofetch``: hit -> promote; miss -> insert at head, then evict
     from this list's own tail while it exceeds its allocation.
     """
-    b = [int(x) for x in params.allocations]
-    J = len(b)
-    nxt = [NIL] * (J * N)
-    prv = [NIL] * (J * N)
-    head = [NIL] * J
-    tail = [NIL] * J
-    inlist = [False] * (J * N)
-    used = [0] * J
-    res_since = [-1] * (J * N)
-    tot_time = [0] * (J * N)
-    t_start = 0
-    n_hit = n_miss = 0
-    hits_by_proxy = [0] * J
-    reqs_by_proxy = [0] * J
-    n = len(P)
 
-    t0 = time.perf_counter()
-    for idx in range(n):
-        if idx == warmup:
-            tot_time = [0] * (J * N)
-            t_start = idx
-        i = P[idx]
-        k = O[idx]
-        base = i * N
-        ik = base + k
-        if inlist[ik]:
-            n_hit += 1
-            if head[i] != k:
-                p = prv[ik]
-                nx = nxt[ik]
-                if p == NIL:
-                    tail[i] = nx
-                else:
-                    nxt[base + p] = nx
-                prv[base + nx] = p
-                h = head[i]
+    def __init__(
+        self, params: SimParams, n_objects: int, lengths: np.ndarray, warmup: int
+    ) -> None:
+        b = [int(x) for x in params.allocations]
+        J, N = len(b), int(n_objects)
+        self.J, self.N, self.b = J, N, b
+        self.warmup = int(warmup)
+        self.lengths = [int(x) for x in lengths]
+        self.nxt = [NIL] * (J * N)
+        self.prv = [NIL] * (J * N)
+        self.head = [NIL] * J
+        self.tail = [NIL] * J
+        self.inlist = [False] * (J * N)
+        self.used = [0] * J
+        self.res_since = [-1] * (J * N)
+        self.tot_time = [0] * (J * N)
+        self.t_start = 0
+        self.n_hit = self.n_miss = 0
+        self.hits_by_proxy = [0] * J
+        self.reqs_by_proxy = [0] * J
+        self.idx = 0
+        self.elapsed = 0.0
+
+    def feed(self, proxies, objects) -> None:
+        P = np.asarray(proxies).tolist()
+        O = np.asarray(objects).tolist()
+        J, N = self.J, self.N
+        b = self.b
+        warmup = self.warmup
+        lengths = self.lengths
+        nxt, prv = self.nxt, self.prv
+        head, tail = self.head, self.tail
+        inlist, used = self.inlist, self.used
+        res_since, tot_time = self.res_since, self.tot_time
+        t_start = self.t_start
+        n_hit, n_miss = self.n_hit, self.n_miss
+        hits_by_proxy, reqs_by_proxy = self.hits_by_proxy, self.reqs_by_proxy
+        idx0 = self.idx
+        n = len(P)
+
+        t0 = time.perf_counter()
+        for off in range(n):
+            idx = idx0 + off
+            if idx == warmup:
+                tot_time = [0] * (J * N)
+                t_start = idx
+            i = P[off]
+            k = O[off]
+            base = i * N
+            ik = base + k
+            if inlist[ik]:
+                n_hit += 1
+                if head[i] != k:
+                    p = prv[ik]
+                    nx = nxt[ik]
+                    if p == NIL:
+                        tail[i] = nx
+                    else:
+                        nxt[base + p] = nx
+                    prv[base + nx] = p
+                    h = head[i]
+                    nxt[base + h] = k
+                    prv[ik] = h
+                    nxt[ik] = NIL
+                    head[i] = k
+                if idx >= warmup:
+                    reqs_by_proxy[i] += 1
+                    hits_by_proxy[i] += 1
+                continue
+            n_miss += 1
+            inlist[ik] = True
+            used[i] += lengths[k]
+            h = head[i]
+            if h == NIL:
+                tail[i] = k
+            else:
                 nxt[base + h] = k
-                prv[ik] = h
-                nxt[ik] = NIL
-                head[i] = k
+            prv[ik] = h
+            nxt[ik] = NIL
+            head[i] = k
+            res_since[ik] = idx
+            cap = b[i]
+            while used[i] > cap:
+                v = tail[i]
+                iv = base + v
+                nv = nxt[iv]
+                tail[i] = nv
+                if nv == NIL:
+                    head[i] = NIL
+                else:
+                    prv[base + nv] = NIL
+                inlist[iv] = False
+                used[i] -= lengths[v]
+                since = res_since[iv]
+                if since >= 0:
+                    tot_time[iv] += idx - (since if since > t_start else t_start)
+                    res_since[iv] = -1
             if idx >= warmup:
                 reqs_by_proxy[i] += 1
-                hits_by_proxy[i] += 1
-            continue
-        n_miss += 1
-        inlist[ik] = True
-        used[i] += lengths[k]
-        h = head[i]
-        if h == NIL:
-            tail[i] = k
-        else:
-            nxt[base + h] = k
-        prv[ik] = h
-        nxt[ik] = NIL
-        head[i] = k
-        res_since[ik] = idx
-        cap = b[i]
-        while used[i] > cap:
-            v = tail[i]
-            iv = base + v
-            nv = nxt[iv]
-            tail[i] = nv
-            if nv == NIL:
-                head[i] = NIL
-            else:
-                prv[base + nv] = NIL
-            inlist[iv] = False
-            used[i] -= lengths[v]
-            since = res_since[iv]
-            if since >= 0:
-                tot_time[iv] += idx - (since if since > t_start else t_start)
-                res_since[iv] = -1
-        if idx >= warmup:
-            reqs_by_proxy[i] += 1
-    elapsed = time.perf_counter() - t0
+        self.elapsed += time.perf_counter() - t0
 
-    for ik in range(J * N):
-        since = res_since[ik]
-        if since >= 0:
-            tot_time[ik] += n - (since if since > t_start else t_start)
-    horizon = max(n - t_start, 1)
-    occ = np.asarray(tot_time, dtype=np.int64).reshape(J, N) / horizon
-    return SimResult(
-        occupancy=occ,
-        n_requests=n,
-        warmup=warmup,
-        n_hit_list=n_hit,
-        n_hit_cache=0,
-        n_miss=n_miss,
-        hits_by_proxy=np.asarray(hits_by_proxy, dtype=np.int64),
-        reqs_by_proxy=np.asarray(reqs_by_proxy, dtype=np.int64),
-        evictions_per_set=np.zeros(1, dtype=np.int64),
-        n_sets_recorded=0,
-        n_primary=0,
-        n_ripple=0,
-        n_batch_evictions=0,
-        final_vlen=np.asarray(used, dtype=np.float64),
-        elapsed_s=elapsed,
-        engine="flat",
-    )
+        self.tot_time, self.t_start = tot_time, t_start
+        self.n_hit, self.n_miss = n_hit, n_miss
+        self.idx = idx0 + n
+
+    def finish(self, n_total: int) -> dict:
+        rs = np.asarray(self.res_since, dtype=np.int64)
+        tt = np.asarray(self.tot_time, dtype=np.int64)
+        open_m = rs >= 0
+        tt[open_m] += n_total - np.maximum(rs[open_m], self.t_start)
+        return {
+            "tot_time": tt,
+            "horizon": max(n_total - self.t_start, 1),
+            "vlen": np.asarray(self.used, dtype=np.int64),
+            "n_hit_list": self.n_hit,
+            "n_hit_cache": 0,
+            "n_miss": self.n_miss,
+            "hits_p": np.asarray(self.hits_by_proxy, dtype=np.int64),
+            "reqs_p": np.asarray(self.reqs_by_proxy, dtype=np.int64),
+            "hist": np.zeros(1, dtype=np.int64),
+            "n_sets": 0,
+            "n_prim": 0,
+            "n_rip": 0,
+            "n_batch": 0,
+        }
 
 
-def _run_pooled(
-    params: SimParams,
-    N: int,
-    P: List[int],
-    O: List[int],
-    lengths: List[int],
-    warmup: int,
-) -> SimResult:
-    """One collective LRU over all proxies (no isolation, no sharing
+class _PooledDriver:
+    """Chunk-fed collective-LRU loop (no isolation, no sharing
     accounting): capacity ``physical_capacity`` (default ``sum(b)``),
     hits/requests attributed to the issuing proxy. This is the
     no-partitioning envelope the paper's multi-list system sits between
-    (cf. the pooled MCD baseline of Table V). Per-object occupancy is the
-    same for every proxy — the (J, N) occupancy matrix repeats one row;
-    ``final_vlen`` reports the pooled bytes in use for every proxy.
+    (cf. the pooled MCD baseline of Table V). Per-object occupancy is
+    the same for every proxy — the (J, N) occupancy matrix repeats one
+    row; ``final_vlen`` reports the pooled units in use for every proxy.
     """
-    J = len(params.allocations)
-    B = int(
-        params.physical_capacity
-        if params.physical_capacity is not None
-        else sum(params.allocations)
-    )
-    if B < 1:
-        raise ValueError("pooled variant needs positive capacity")
-    nxt = [NIL] * N
-    prv = [NIL] * N
-    head = tail = NIL
-    inlist = [False] * N
-    used = 0
-    res_since = [-1] * N
-    tot_time = [0] * N
-    t_start = 0
-    n_hit = n_miss = 0
-    hits_by_proxy = [0] * J
-    reqs_by_proxy = [0] * J
-    n = len(P)
 
-    t0 = time.perf_counter()
-    for idx in range(n):
-        if idx == warmup:
-            tot_time = [0] * N
-            t_start = idx
-        i = P[idx]
-        k = O[idx]
-        if inlist[k]:
-            n_hit += 1
-            if head != k:
-                p = prv[k]
-                nx = nxt[k]
-                if p == NIL:
-                    tail = nx
-                else:
-                    nxt[p] = nx
-                prv[nx] = p
+    def __init__(
+        self, params: SimParams, n_objects: int, lengths: np.ndarray, warmup: int
+    ) -> None:
+        J = len(params.allocations)
+        N = int(n_objects)
+        self.J, self.N = J, N
+        self.B = int(
+            params.physical_capacity
+            if params.physical_capacity is not None
+            else sum(params.allocations)
+        )
+        if self.B < 1:
+            raise ValueError("pooled variant needs positive capacity")
+        self.warmup = int(warmup)
+        self.lengths = [int(x) for x in lengths]
+        self.nxt = [NIL] * N
+        self.prv = [NIL] * N
+        self.head = NIL
+        self.tail = NIL
+        self.inlist = [False] * N
+        self.used = 0
+        self.res_since = [-1] * N
+        self.tot_time = [0] * N
+        self.t_start = 0
+        self.n_hit = self.n_miss = 0
+        self.hits_by_proxy = [0] * J
+        self.reqs_by_proxy = [0] * J
+        self.idx = 0
+        self.elapsed = 0.0
+
+    def feed(self, proxies, objects) -> None:
+        P = np.asarray(proxies).tolist()
+        O = np.asarray(objects).tolist()
+        N = self.N
+        B = self.B
+        warmup = self.warmup
+        lengths = self.lengths
+        nxt, prv = self.nxt, self.prv
+        head, tail = self.head, self.tail
+        inlist = self.inlist
+        used = self.used
+        res_since, tot_time = self.res_since, self.tot_time
+        t_start = self.t_start
+        n_hit, n_miss = self.n_hit, self.n_miss
+        hits_by_proxy, reqs_by_proxy = self.hits_by_proxy, self.reqs_by_proxy
+        idx0 = self.idx
+        n = len(P)
+
+        t0 = time.perf_counter()
+        for off in range(n):
+            idx = idx0 + off
+            if idx == warmup:
+                tot_time = [0] * N
+                t_start = idx
+            i = P[off]
+            k = O[off]
+            if inlist[k]:
+                n_hit += 1
+                if head != k:
+                    p = prv[k]
+                    nx = nxt[k]
+                    if p == NIL:
+                        tail = nx
+                    else:
+                        nxt[p] = nx
+                    prv[nx] = p
+                    nxt[head] = k
+                    prv[k] = head
+                    nxt[k] = NIL
+                    head = k
+                if idx >= warmup:
+                    reqs_by_proxy[i] += 1
+                    hits_by_proxy[i] += 1
+                continue
+            n_miss += 1
+            inlist[k] = True
+            used += lengths[k]
+            if head == NIL:
+                tail = k
+            else:
                 nxt[head] = k
-                prv[k] = head
-                nxt[k] = NIL
-                head = k
+            prv[k] = head
+            nxt[k] = NIL
+            head = k
+            res_since[k] = idx
+            while used > B:
+                v = tail
+                nv = nxt[v]
+                tail = nv
+                if nv == NIL:
+                    head = NIL
+                else:
+                    prv[nv] = NIL
+                inlist[v] = False
+                used -= lengths[v]
+                since = res_since[v]
+                if since >= 0:
+                    tot_time[v] += idx - (since if since > t_start else t_start)
+                    res_since[v] = -1
             if idx >= warmup:
                 reqs_by_proxy[i] += 1
-                hits_by_proxy[i] += 1
-            continue
-        n_miss += 1
-        inlist[k] = True
-        used += lengths[k]
-        if head == NIL:
-            tail = k
-        else:
-            nxt[head] = k
-        prv[k] = head
-        nxt[k] = NIL
-        head = k
-        res_since[k] = idx
-        while used > B:
-            v = tail
-            nv = nxt[v]
-            tail = nv
-            if nv == NIL:
-                head = NIL
-            else:
-                prv[nv] = NIL
-            inlist[v] = False
-            used -= lengths[v]
-            since = res_since[v]
-            if since >= 0:
-                tot_time[v] += idx - (since if since > t_start else t_start)
-                res_since[v] = -1
-        if idx >= warmup:
-            reqs_by_proxy[i] += 1
-    elapsed = time.perf_counter() - t0
+        self.elapsed += time.perf_counter() - t0
 
-    for k in range(N):
-        since = res_since[k]
-        if since >= 0:
-            tot_time[k] += n - (since if since > t_start else t_start)
-    horizon = max(n - t_start, 1)
-    occ_row = np.asarray(tot_time, dtype=np.int64) / horizon
-    occ = np.repeat(occ_row[None, :], J, axis=0)
-    return SimResult(
-        occupancy=occ,
-        n_requests=n,
-        warmup=warmup,
-        n_hit_list=n_hit,
-        n_hit_cache=0,
-        n_miss=n_miss,
-        hits_by_proxy=np.asarray(hits_by_proxy, dtype=np.int64),
-        reqs_by_proxy=np.asarray(reqs_by_proxy, dtype=np.int64),
-        evictions_per_set=np.zeros(1, dtype=np.int64),
-        n_sets_recorded=0,
-        n_primary=0,
-        n_ripple=0,
-        n_batch_evictions=0,
-        final_vlen=np.full(J, float(used)),
-        elapsed_s=elapsed,
-        engine="flat",
-    )
+        self.head, self.tail = head, tail
+        self.used = used
+        self.tot_time, self.t_start = tot_time, t_start
+        self.n_hit, self.n_miss = n_hit, n_miss
+        self.idx = idx0 + n
+
+    def finish(self, n_total: int) -> dict:
+        rs = np.asarray(self.res_since, dtype=np.int64)
+        tt = np.asarray(self.tot_time, dtype=np.int64)
+        open_m = rs >= 0
+        tt[open_m] += n_total - np.maximum(rs[open_m], self.t_start)
+        return {
+            # every proxy sees the same pooled occupancy row
+            "tot_time": np.tile(tt, self.J),
+            "horizon": max(n_total - self.t_start, 1),
+            "vlen": np.full(self.J, self.used, dtype=np.int64),
+            "n_hit_list": self.n_hit,
+            "n_hit_cache": 0,
+            "n_miss": self.n_miss,
+            "hits_p": np.asarray(self.hits_by_proxy, dtype=np.int64),
+            "reqs_p": np.asarray(self.reqs_by_proxy, dtype=np.int64),
+            "hist": np.zeros(1, dtype=np.int64),
+            "n_sets": 0,
+            "n_prim": 0,
+            "n_rip": 0,
+            "n_batch": 0,
+        }

@@ -4,8 +4,21 @@
 :mod:`repro.core.fastsim`) is compiled on first use with the system C
 compiler into a content-addressed shared object under
 ``src/repro/core/_cbuild/`` (falling back to a temp dir, then — if no
-compiler is available — to the pure-Python loops). No third-party
-packages involved: numpy buffers go straight through ctypes pointers.
+compiler is available — to the pure-Python loops). The build is
+concurrency-safe: each builder compiles to a unique temp name and
+atomically ``os.replace``s it into place, so parallel processes (e.g.
+pytest-xdist workers or simultaneous benchmark runs) race harmlessly —
+whoever finishes first wins and everyone loads a complete ``.so``. No
+third-party packages involved: numpy buffers go straight through ctypes
+pointers.
+
+The native entry points are *chunk drivers*: :class:`FlatChunkRunner`
+and :class:`NoshareChunkRunner` keep all engine state resident across
+``feed(proxies, objects)`` calls, so a request stream can be consumed
+chunk by chunk without ever materializing the full trace (the Section
+VI-C streaming path). The flat runner's per-(proxy, object) state is a
+sparse touched-set — objects get accumulator slots on first entry into
+any list, and the slot arrays grow geometrically on demand.
 """
 
 from __future__ import annotations
@@ -16,8 +29,9 @@ import os
 import subprocess
 import tempfile
 import time
+import uuid
 from pathlib import Path
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import numpy as np
 
@@ -34,10 +48,15 @@ _U8P = ctypes.POINTER(ctypes.c_uint8)
 SC_PHYS, SC_GHEAD, SC_GTAIL, SC_NGHOSTS, SC_TSTART = 0, 1, 2, 3, 4
 SC_NHITLIST, SC_NHITCACHE, SC_NMISS = 5, 6, 7
 SC_NSETS, SC_NPRIM, SC_NRIP, SC_NBATCH = 8, 9, 10, 11
-SC_COUNT = 12
+SC_NSLOTS, SC_SETSSINCE = 12, 13
+SC_COUNT = 14
 
 # Must match fastsim.HIST_BUCKETS (identical clamping across backends).
 HIST_LEN = 1024
+
+# Initial touched-set capacity of the flat runner (grows x2 on demand,
+# capped at N).
+INITIAL_SLOT_CAP = 1 << 16
 
 
 def _compiler() -> Optional[str]:
@@ -52,6 +71,40 @@ def _compiler() -> Optional[str]:
         except Exception:
             continue
     return None
+
+
+def _build_so(cc: str, src: Path, dest_dir: Path, name: str) -> Path:
+    """Compile ``src`` into ``dest_dir/name``, safely under concurrency.
+
+    The object is compiled to a unique temp name (pid + random suffix —
+    two builders never share a temp file) and atomically renamed into
+    place, so a concurrent loader either sees no file or a complete one.
+    If this builder loses the race (or its compile fails after a winner
+    appeared), the winner's artifact is returned.
+    """
+    dest_dir.mkdir(parents=True, exist_ok=True)
+    so = dest_dir / name
+    if so.exists():
+        return so
+    tmp = dest_dir / f".{name}.{os.getpid()}.{uuid.uuid4().hex[:8]}.tmp"
+    try:
+        subprocess.run(
+            [cc, "-O2", "-shared", "-fPIC", "-o", str(tmp), str(src)],
+            capture_output=True,
+            check=True,
+            timeout=120,
+        )
+        os.replace(tmp, so)  # atomic: concurrent builders race safely
+    except BaseException:
+        if so.exists():  # someone else won while we were compiling
+            return so
+        raise
+    finally:
+        try:
+            tmp.unlink()
+        except OSError:
+            pass
+    return so
 
 
 def _load() -> Optional[ctypes.CDLL]:
@@ -82,17 +135,8 @@ def _load() -> Optional[ctypes.CDLL]:
     if cc is None:
         return None
     for d in cand_dirs:
-        so = d / name
         try:
-            d.mkdir(parents=True, exist_ok=True)
-            tmp = d / f".{name}.{os.getpid()}.tmp"
-            subprocess.run(
-                [cc, "-O2", "-shared", "-fPIC", "-o", str(tmp), str(_SRC)],
-                capture_output=True,
-                check=True,
-                timeout=120,
-            )
-            os.replace(tmp, so)  # atomic: concurrent builders race safely
+            so = _build_so(cc, _SRC, d, name)
             _lib = ctypes.CDLL(str(so))
             _configure(_lib)
             return _lib
@@ -102,23 +146,26 @@ def _load() -> Optional[ctypes.CDLL]:
 
 
 def _configure(lib: ctypes.CDLL) -> None:
-    lib.simulate_flat.restype = ctypes.c_int64
-    lib.simulate_flat.argtypes = [
-        ctypes.c_int64, ctypes.c_int64, ctypes.c_int64,  # n, J, N
+    lib.drive_chunk.restype = ctypes.c_int64
+    lib.drive_chunk.argtypes = [
+        ctypes.c_int64, ctypes.c_int64,                  # idx0, n_chunk
+        ctypes.c_int64, ctypes.c_int64,                  # J, N
         _I32P, _I64P,                                    # P, O
         _I64P, _I64P, _I64P, _I64P,                      # lengths, b, bhat, share
         ctypes.c_int64, ctypes.c_int64, ctypes.c_int64,  # scale, B, ghost
         ctypes.c_int64, ctypes.c_int64, ctypes.c_int64,  # warmup, ripple_from, batch
-        _I64P, _I64P, _I64P, _I64P,                      # nxt, prv, head, tail
+        _I64P, _I64P,                                    # head, tail
         _U64P, _I64P, _I64P,                             # hmask, length, vlen
         _I64P, _I64P, _U8P,                              # gnxt, gprv, isghost
-        _I64P, _I64P,                                    # res_since, tot_time
+        _I64P, _I64P, ctypes.c_int64,                    # slot, slot_key, slot_cap
+        _I64P, _I64P, _I64P, _I64P,                      # nxt, prv, res_since, tot_time
         _I64P, _I64P, _I64P,                             # sc, hits_p, reqs_p
         _I64P, ctypes.c_int64,                           # hist, hist_len
     ]
-    lib.simulate_noshare.restype = ctypes.c_int64
-    lib.simulate_noshare.argtypes = [
-        ctypes.c_int64, ctypes.c_int64, ctypes.c_int64,  # n, J, N
+    lib.noshare_chunk.restype = ctypes.c_int64
+    lib.noshare_chunk.argtypes = [
+        ctypes.c_int64, ctypes.c_int64,                  # idx0, n_chunk
+        ctypes.c_int64, ctypes.c_int64,                  # J, N
         _I32P, _I64P,                                    # P, O
         _I64P, _I64P,                                    # lengths, b
         ctypes.c_int64,                                  # warmup
@@ -137,152 +184,253 @@ def _ptr(a: np.ndarray, ctype):
     return a.ctypes.data_as(ctype)
 
 
-def run_trace_c(
-    params,
-    n_objects: int,
-    proxies: np.ndarray,
-    objects: np.ndarray,
-    lengths,
-    warmup: int,
-    ripple_from: int,
-    scale: int,
-) -> Optional[Tuple[Dict[str, np.ndarray], float]]:
-    """Run the flat shared-LRU drive loop natively. None if unavailable."""
+class FlatChunkRunner:
+    """Incremental native driver for the flat shared-LRU variant.
+
+    ``feed(proxies, objects)`` consumes one chunk of the request stream
+    (engine state stays resident in the caller-owned numpy buffers
+    between calls); ``finish(n_total)`` closes open residence intervals
+    and returns the raw output dict ``fastsim._assemble`` consumes.
+    ``elapsed`` accumulates native drive-loop seconds only.
+    """
+
+    def __init__(
+        self,
+        lib: ctypes.CDLL,
+        params,
+        n_objects: int,
+        lengths: np.ndarray,
+        warmup: int,
+        ripple_from: int,
+        scale: int,
+    ) -> None:
+        self.lib = lib
+        J = len(params.allocations)
+        N = int(n_objects)
+        self.J, self.N = J, N
+        b = [int(x) for x in params.allocations]
+        b_hat = (
+            [int(x) for x in params.ripple_allocations]
+            if params.ripple_allocations is not None
+            else list(b)
+        )
+        B = (
+            params.physical_capacity
+            if params.physical_capacity is not None
+            else sum(b)
+        )
+        self.scale = int(scale)
+        self.B = int(B)
+        self.ghost = int(bool(params.ghost_retention))
+        self.warmup = int(warmup)
+        self.ripple_from = int(ripple_from)
+        self.batch_interval = int(params.batch_interval)
+
+        self.lengths = np.ascontiguousarray(lengths, dtype=np.int64)
+        self.b_a = np.asarray([x * scale for x in b], dtype=np.int64)
+        self.bhat_a = np.asarray([x * scale for x in b_hat], dtype=np.int64)
+        self.share = np.asarray(
+            [0] + [scale // p for p in range(1, J + 1)] + [0], dtype=np.int64
+        )
+
+        self.head = np.full(J, -1, dtype=np.int64)
+        self.tail = np.full(J, -1, dtype=np.int64)
+        self.hmask = np.zeros(N, dtype=np.uint64)
+        self.length = np.zeros(N, dtype=np.int64)
+        self.vlen = np.zeros(J, dtype=np.int64)
+        self.gnxt = np.full(N, -1, dtype=np.int64)
+        self.gprv = np.full(N, -1, dtype=np.int64)
+        self.isghost = np.zeros(N, dtype=np.uint8)
+        self.slot = np.full(N, -1, dtype=np.int64)
+        self.cap = min(N, INITIAL_SLOT_CAP)
+        self.slot_key = np.zeros(self.cap, dtype=np.int64)
+        self.nxt = np.full(self.cap * J, -1, dtype=np.int64)
+        self.prv = np.full(self.cap * J, -1, dtype=np.int64)
+        self.res_since = np.full(self.cap * J, -1, dtype=np.int64)
+        self.tot_time = np.zeros(self.cap * J, dtype=np.int64)
+        self.sc = np.zeros(SC_COUNT, dtype=np.int64)
+        self.sc[SC_GHEAD] = self.sc[SC_GTAIL] = -1
+        self.hits_p = np.zeros(J, dtype=np.int64)
+        self.reqs_p = np.zeros(J, dtype=np.int64)
+        self.hist = np.zeros(HIST_LEN, dtype=np.int64)
+        self.idx = 0
+        self.elapsed = 0.0
+
+    def _grow(self) -> None:
+        J = self.J
+        new_cap = min(self.N, max(self.cap * 2, 1))
+        if new_cap == self.cap:  # pragma: no cover - slots are <= N
+            raise RuntimeError("touched-set capacity exhausted at N slots")
+
+        def grown(a: np.ndarray, per: int, fill) -> np.ndarray:
+            b = np.full(new_cap * per, fill, dtype=a.dtype)
+            b[: self.cap * per] = a
+            return b
+
+        self.slot_key = grown(self.slot_key, 1, 0)
+        self.nxt = grown(self.nxt, J, -1)
+        self.prv = grown(self.prv, J, -1)
+        self.res_since = grown(self.res_since, J, -1)
+        self.tot_time = grown(self.tot_time, J, 0)
+        self.cap = new_cap
+
+    def feed(self, proxies: np.ndarray, objects: np.ndarray) -> None:
+        P = np.ascontiguousarray(proxies, dtype=np.int32)
+        O = np.ascontiguousarray(objects, dtype=np.int64)
+        n = len(P)
+        off = 0
+        while off < n:
+            Pv, Ov = P[off:], O[off:]
+            t0 = time.perf_counter()
+            consumed = self.lib.drive_chunk(
+                self.idx, n - off,
+                self.J, self.N,
+                _ptr(Pv, _I32P), _ptr(Ov, _I64P),
+                _ptr(self.lengths, _I64P), _ptr(self.b_a, _I64P),
+                _ptr(self.bhat_a, _I64P), _ptr(self.share, _I64P),
+                self.scale, self.B, self.ghost,
+                self.warmup, self.ripple_from, self.batch_interval,
+                _ptr(self.head, _I64P), _ptr(self.tail, _I64P),
+                _ptr(self.hmask, _U64P), _ptr(self.length, _I64P),
+                _ptr(self.vlen, _I64P),
+                _ptr(self.gnxt, _I64P), _ptr(self.gprv, _I64P),
+                _ptr(self.isghost, _U8P),
+                _ptr(self.slot, _I64P), _ptr(self.slot_key, _I64P), self.cap,
+                _ptr(self.nxt, _I64P), _ptr(self.prv, _I64P),
+                _ptr(self.res_since, _I64P), _ptr(self.tot_time, _I64P),
+                _ptr(self.sc, _I64P), _ptr(self.hits_p, _I64P),
+                _ptr(self.reqs_p, _I64P),
+                _ptr(self.hist, _I64P), HIST_LEN,
+            )
+            self.elapsed += time.perf_counter() - t0
+            if consumed < 0:  # pragma: no cover - no failure paths today
+                raise RuntimeError(f"drive_chunk failed with rc={consumed}")
+            self.idx += consumed
+            off += consumed
+            if off < n:  # touched-set capacity exhausted mid-chunk
+                self._grow()
+
+    def finish(self, n_total: int) -> Dict[str, np.ndarray]:
+        n_slots = int(self.sc[SC_NSLOTS])
+        t_start = int(self.sc[SC_TSTART])
+        rs = self.res_since[: n_slots * self.J]
+        tt = self.tot_time[: n_slots * self.J]
+        open_m = rs >= 0
+        tt[open_m] += n_total - np.maximum(rs[open_m], t_start)
+        rs[open_m] = n_total
+        return {
+            "tot_time_slots": tt,
+            "slot_keys": self.slot_key[:n_slots],
+            "horizon": max(n_total - t_start, 1),
+            "vlen": self.vlen,
+            "n_hit_list": int(self.sc[SC_NHITLIST]),
+            "n_hit_cache": int(self.sc[SC_NHITCACHE]),
+            "n_miss": int(self.sc[SC_NMISS]),
+            "hits_p": self.hits_p,
+            "reqs_p": self.reqs_p,
+            "hist": self.hist,
+            "n_sets": int(self.sc[SC_NSETS]),
+            "n_prim": int(self.sc[SC_NPRIM]),
+            "n_rip": int(self.sc[SC_NRIP]),
+            "n_batch": int(self.sc[SC_NBATCH]),
+        }
+
+
+class NoshareChunkRunner:
+    """Incremental native driver for the not-shared (Table-III) baseline."""
+
+    def __init__(
+        self,
+        lib: ctypes.CDLL,
+        allocations,
+        n_objects: int,
+        lengths: np.ndarray,
+        warmup: int,
+    ) -> None:
+        self.lib = lib
+        J = len(allocations)
+        N = int(n_objects)
+        self.J, self.N = J, N
+        self.warmup = int(warmup)
+        self.lengths = np.ascontiguousarray(lengths, dtype=np.int64)
+        self.b_a = np.asarray([int(x) for x in allocations], dtype=np.int64)
+        self.nxt = np.full(J * N, -1, dtype=np.int64)
+        self.prv = np.full(J * N, -1, dtype=np.int64)
+        self.head = np.full(J, -1, dtype=np.int64)
+        self.tail = np.full(J, -1, dtype=np.int64)
+        self.inlist = np.zeros(J * N, dtype=np.uint8)
+        self.used = np.zeros(J, dtype=np.int64)
+        self.res_since = np.full(J * N, -1, dtype=np.int64)
+        self.tot_time = np.zeros(J * N, dtype=np.int64)
+        self.sc = np.zeros(3, dtype=np.int64)
+        self.hits_p = np.zeros(J, dtype=np.int64)
+        self.reqs_p = np.zeros(J, dtype=np.int64)
+        self.idx = 0
+        self.elapsed = 0.0
+
+    def feed(self, proxies: np.ndarray, objects: np.ndarray) -> None:
+        P = np.ascontiguousarray(proxies, dtype=np.int32)
+        O = np.ascontiguousarray(objects, dtype=np.int64)
+        n = len(P)
+        t0 = time.perf_counter()
+        rc = self.lib.noshare_chunk(
+            self.idx, n,
+            self.J, self.N,
+            _ptr(P, _I32P), _ptr(O, _I64P),
+            _ptr(self.lengths, _I64P), _ptr(self.b_a, _I64P),
+            self.warmup,
+            _ptr(self.nxt, _I64P), _ptr(self.prv, _I64P),
+            _ptr(self.head, _I64P), _ptr(self.tail, _I64P),
+            _ptr(self.inlist, _U8P), _ptr(self.used, _I64P),
+            _ptr(self.res_since, _I64P), _ptr(self.tot_time, _I64P),
+            _ptr(self.sc, _I64P), _ptr(self.hits_p, _I64P),
+            _ptr(self.reqs_p, _I64P),
+        )
+        self.elapsed += time.perf_counter() - t0
+        if rc < 0:  # pragma: no cover
+            raise RuntimeError(f"noshare_chunk failed with rc={rc}")
+        self.idx += n
+
+    def finish(self, n_total: int) -> Dict[str, np.ndarray]:
+        t_start = int(self.sc[0])
+        open_m = self.res_since >= 0
+        self.tot_time[open_m] += n_total - np.maximum(
+            self.res_since[open_m], t_start
+        )
+        self.res_since[open_m] = n_total
+        return {
+            "tot_time": self.tot_time,
+            "horizon": max(n_total - t_start, 1),
+            "vlen": self.used,
+            "n_hit_list": int(self.sc[1]),
+            "n_hit_cache": 0,
+            "n_miss": int(self.sc[2]),
+            "hits_p": self.hits_p,
+            "reqs_p": self.reqs_p,
+            "hist": np.zeros(1, dtype=np.int64),
+            "n_sets": 0,
+            "n_prim": 0,
+            "n_rip": 0,
+            "n_batch": 0,
+        }
+
+
+def make_flat_runner(
+    params, n_objects: int, lengths, warmup: int, ripple_from: int, scale: int
+) -> Optional[FlatChunkRunner]:
+    """A native flat-LRU chunk runner, or None when no C backend exists."""
     lib = _load()
     if lib is None:
         return None
-    J = len(params.allocations)
-    N = int(n_objects)
-    b = [int(x) for x in params.allocations]
-    b_hat = (
-        [int(x) for x in params.ripple_allocations]
-        if params.ripple_allocations is not None
-        else list(b)
-    )
-    B = params.physical_capacity if params.physical_capacity is not None else sum(b)
-
-    P = np.ascontiguousarray(proxies, dtype=np.int32)
-    O = np.ascontiguousarray(objects, dtype=np.int64)
-    n = len(P)
-    lengths_a = np.ascontiguousarray(lengths, dtype=np.int64)
-    b_a = np.asarray([x * scale for x in b], dtype=np.int64)
-    bhat_a = np.asarray([x * scale for x in b_hat], dtype=np.int64)
-    share = np.asarray(
-        [0] + [scale // p for p in range(1, J + 1)] + [0], dtype=np.int64
+    return FlatChunkRunner(
+        lib, params, n_objects, lengths, warmup, ripple_from, scale
     )
 
-    nxt = np.full(J * N, -1, dtype=np.int64)
-    prv = np.full(J * N, -1, dtype=np.int64)
-    head = np.full(J, -1, dtype=np.int64)
-    tail = np.full(J, -1, dtype=np.int64)
-    hmask = np.zeros(N, dtype=np.uint64)
-    length = np.zeros(N, dtype=np.int64)
-    vlen = np.zeros(J, dtype=np.int64)
-    gnxt = np.full(N, -1, dtype=np.int64)
-    gprv = np.full(N, -1, dtype=np.int64)
-    isghost = np.zeros(N, dtype=np.uint8)
-    res_since = np.full(J * N, -1, dtype=np.int64)
-    tot_time = np.zeros(J * N, dtype=np.int64)
-    sc = np.zeros(SC_COUNT, dtype=np.int64)
-    sc[SC_GHEAD] = sc[SC_GTAIL] = -1
-    hits_p = np.zeros(J, dtype=np.int64)
-    reqs_p = np.zeros(J, dtype=np.int64)
-    hist = np.zeros(HIST_LEN, dtype=np.int64)
 
-    t0 = time.perf_counter()
-    rc = lib.simulate_flat(
-        n, J, N,
-        _ptr(P, _I32P), _ptr(O, _I64P),
-        _ptr(lengths_a, _I64P), _ptr(b_a, _I64P), _ptr(bhat_a, _I64P),
-        _ptr(share, _I64P),
-        scale, int(B), int(bool(params.ghost_retention)),
-        int(warmup), int(ripple_from), int(params.batch_interval),
-        _ptr(nxt, _I64P), _ptr(prv, _I64P), _ptr(head, _I64P), _ptr(tail, _I64P),
-        _ptr(hmask, _U64P), _ptr(length, _I64P), _ptr(vlen, _I64P),
-        _ptr(gnxt, _I64P), _ptr(gprv, _I64P), _ptr(isghost, _U8P),
-        _ptr(res_since, _I64P), _ptr(tot_time, _I64P),
-        _ptr(sc, _I64P), _ptr(hits_p, _I64P), _ptr(reqs_p, _I64P),
-        _ptr(hist, _I64P), HIST_LEN,
-    )
-    elapsed = time.perf_counter() - t0
-    if rc != 0:  # pragma: no cover - no failure paths today
-        return None
-    out = {
-        "tot_time": tot_time,
-        "horizon": max(n - int(sc[SC_TSTART]), 1),
-        "vlen": vlen,
-        "n_hit_list": int(sc[SC_NHITLIST]),
-        "n_hit_cache": int(sc[SC_NHITCACHE]),
-        "n_miss": int(sc[SC_NMISS]),
-        "hits_p": hits_p,
-        "reqs_p": reqs_p,
-        "hist": hist,
-        "n_sets": int(sc[SC_NSETS]),
-        "n_prim": int(sc[SC_NPRIM]),
-        "n_rip": int(sc[SC_NRIP]),
-        "n_batch": int(sc[SC_NBATCH]),
-    }
-    return out, elapsed
-
-
-def run_noshare_c(
-    allocations,
-    n_objects: int,
-    proxies: np.ndarray,
-    objects: np.ndarray,
-    lengths,
-    warmup: int,
-) -> Optional[Tuple[Dict[str, np.ndarray], float]]:
+def make_noshare_runner(
+    allocations, n_objects: int, lengths, warmup: int
+) -> Optional[NoshareChunkRunner]:
     lib = _load()
     if lib is None:
         return None
-    J = len(allocations)
-    N = int(n_objects)
-    P = np.ascontiguousarray(proxies, dtype=np.int32)
-    O = np.ascontiguousarray(objects, dtype=np.int64)
-    n = len(P)
-    lengths_a = np.ascontiguousarray(lengths, dtype=np.int64)
-    b_a = np.asarray([int(x) for x in allocations], dtype=np.int64)
-
-    nxt = np.full(J * N, -1, dtype=np.int64)
-    prv = np.full(J * N, -1, dtype=np.int64)
-    head = np.full(J, -1, dtype=np.int64)
-    tail = np.full(J, -1, dtype=np.int64)
-    inlist = np.zeros(J * N, dtype=np.uint8)
-    used = np.zeros(J, dtype=np.int64)
-    res_since = np.full(J * N, -1, dtype=np.int64)
-    tot_time = np.zeros(J * N, dtype=np.int64)
-    sc = np.zeros(3, dtype=np.int64)
-    hits_p = np.zeros(J, dtype=np.int64)
-    reqs_p = np.zeros(J, dtype=np.int64)
-
-    t0 = time.perf_counter()
-    rc = lib.simulate_noshare(
-        n, J, N,
-        _ptr(P, _I32P), _ptr(O, _I64P),
-        _ptr(lengths_a, _I64P), _ptr(b_a, _I64P),
-        int(warmup),
-        _ptr(nxt, _I64P), _ptr(prv, _I64P), _ptr(head, _I64P), _ptr(tail, _I64P),
-        _ptr(inlist, _U8P), _ptr(used, _I64P),
-        _ptr(res_since, _I64P), _ptr(tot_time, _I64P),
-        _ptr(sc, _I64P), _ptr(hits_p, _I64P), _ptr(reqs_p, _I64P),
-    )
-    elapsed = time.perf_counter() - t0
-    if rc != 0:  # pragma: no cover
-        return None
-    out = {
-        "tot_time": tot_time,
-        "horizon": max(n - int(sc[0]), 1),
-        "vlen": used * 1,  # unscaled physical usage per proxy
-        "n_hit_list": int(sc[1]),
-        "n_hit_cache": 0,
-        "n_miss": int(sc[2]),
-        "hits_p": hits_p,
-        "reqs_p": reqs_p,
-        "hist": np.zeros(1, dtype=np.int64),
-        "n_sets": 0,
-        "n_prim": 0,
-        "n_rip": 0,
-        "n_batch": 0,
-    }
-    return out, elapsed
+    return NoshareChunkRunner(lib, allocations, n_objects, lengths, warmup)

@@ -1,7 +1,6 @@
 """XLA-compiled whole-trace driver for the shared-LRU array engine.
 
-This is the fastest path of :func:`repro.core.fastsim.simulate_trace`:
-the same struct-of-arrays state as :class:`~repro.core.fastsim.
+The same struct-of-arrays state as :class:`~repro.core.fastsim.
 FastSharedLRU` — intrusive doubly-linked lists in flat int32 vectors,
 holder indicator matrix, exact lcm-scaled virtual lengths, ghost list,
 inline residence-time (PASTA) occupancy — stepped by one
@@ -10,12 +9,23 @@ eviction/ghost loops inside. XLA compiles the step to native code, so a
 request costs ~100 machine ops instead of ~100 CPython bytecode
 dispatches: 10-30x over the reference ``SharedLRUCache`` drive loop.
 
+Streaming: the jitted :func:`_drive` kernel consumes one chunk of the
+request stream and returns the carried state dict, so
+:class:`XLAChunkRunner` can feed a trace chunk by chunk without ever
+materializing it — bit-identical to the one-shot call because the
+per-request program is unchanged (the loop index is simply offset by
+the chunk start). State stays dense ``(J * N)`` int32 on this backend
+(XLA buffers are fixed-shape, so the touched-set slot growth of the
+Python/C drivers does not apply); the *output* is still compacted to a
+sparse (indices, values) pair when the caller asks for it.
+
 All arithmetic is int32 (exact): requires ``n_requests < 2**31`` and
 ``max_length * lcm(1..J) * J < 2**31`` — both hold with orders of
 magnitude to spare at the paper's Section VI-C scale. Equivalence with
 the pure-Python engines (and hence with the reference spec) is asserted
-by ``tests/test_fastsim.py`` as exact equality of occupancy integers,
-counters, virtual lengths, and ripple histograms.
+by ``tests/test_fastsim.py`` / ``tests/test_streaming.py`` as exact
+equality of occupancy integers, counters, virtual lengths, and ripple
+histograms.
 
 Supports the flat shared-LRU variant with ghost retention on/off and RRE
 slack thresholds (``b_hat``); the S-LRU, not-shared, and delayed-batch
@@ -26,7 +36,7 @@ from __future__ import annotations
 
 import functools
 import time
-from typing import Dict, Tuple
+from typing import Dict
 
 import numpy as np
 
@@ -46,28 +56,10 @@ def _upd(vec, idx, val, pred):
     return vec.at[safe].set(jnp.where(pred, val, vec[safe]))
 
 
-@functools.partial(jax.jit, static_argnames=("ghost_retention", "n_objects"))
-def _simulate(
-    P,  # (n,) int32 proxies
-    O,  # (n,) int32 objects
-    lengths,  # (N,) int32
-    b_scaled,  # (J,) int32
-    bhat_scaled,  # (J,) int32
-    share_arr,  # (J+2,) int32: [0, M//1, ..., M//J, 0]
-    B,  # () int32
-    warmup,  # () int32
-    ripple_from,  # () int32
-    *,
-    ghost_retention: bool,
-    n_objects: int,
-):
-    n = P.shape[0]
-    J = b_scaled.shape[0]
-    N = n_objects
+def _init_state(J: int, N: int) -> Dict[str, jnp.ndarray]:
+    """Fresh carried state for :func:`_drive` (one cold engine)."""
     I32 = jnp.int32
-    rowbase = jnp.arange(J, dtype=I32) * N  # for holder-column gathers
-
-    st0 = {
+    return {
         "nxt": jnp.full((J * N,), -1, I32),
         "prv": jnp.full((J * N,), -1, I32),
         "head": jnp.full((J,), -1, I32),
@@ -95,6 +87,30 @@ def _simulate(
         "n_prim": jnp.int32(0),
         "n_rip": jnp.int32(0),
     }
+
+
+@functools.partial(jax.jit, static_argnames=("ghost_retention", "n_objects"))
+def _drive(
+    st,  # carried state dict (see _init_state)
+    P,  # (n,) int32 proxies of this chunk
+    O,  # (n,) int32 objects of this chunk
+    idx0,  # () int32 absolute index of the chunk's first request
+    lengths,  # (N,) int32
+    b_scaled,  # (J,) int32
+    bhat_scaled,  # (J,) int32
+    share_arr,  # (J+2,) int32: [0, M//1, ..., M//J, 0]
+    B,  # () int32
+    warmup,  # () int32
+    ripple_from,  # () int32
+    *,
+    ghost_retention: bool,
+    n_objects: int,
+):
+    n = P.shape[0]
+    J = b_scaled.shape[0]
+    N = n_objects
+    I32 = jnp.int32
+    rowbase = jnp.arange(J, dtype=I32) * N  # for holder-column gathers
 
     def list_insert_head(st, i, k):
         base = i * N
@@ -194,11 +210,11 @@ def _simulate(
         )
         return st, n_ev, n_rip
 
-    def step(idx, st):
+    def step(local, st):
         st = dict(st)
-        idx = jnp.int32(idx)
-        i = P[idx]
-        k = O[idx]
+        idx = idx0 + jnp.int32(local)
+        i = P[local]
+        k = O[local]
         # occupancy window reset at warmup
         st["tot_time"] = lax.cond(
             idx == warmup, lambda t: jnp.zeros_like(t), lambda t: t, st["tot_time"]
@@ -274,72 +290,94 @@ def _simulate(
         st["reqs_p"] = st["reqs_p"].at[i].add(jnp.where(idx >= warmup, 1, 0))
         return st
 
-    st = lax.fori_loop(0, n, step, st0)
-
-    # finalize open residence intervals at t = n
-    open_add = jnp.int32(n) - jnp.maximum(st["res_since"], st["t_start"])
-    tot = st["tot_time"] + jnp.where(st["res_since"] >= 0, open_add, 0)
-    horizon = jnp.maximum(jnp.int32(n) - st["t_start"], 1)
-    return {
-        "tot_time": tot,
-        "horizon": horizon,
-        "vlen": st["vlen"],
-        "n_hit_list": st["n_hit_list"],
-        "n_hit_cache": st["n_hit_cache"],
-        "n_miss": st["n_miss"],
-        "hits_p": st["hits_p"],
-        "reqs_p": st["reqs_p"],
-        "hist": st["hist"],
-        "n_sets": st["n_sets"],
-        "n_prim": st["n_prim"],
-        "n_rip": st["n_rip"],
-    }
+    return lax.fori_loop(0, n, step, st)
 
 
-def run_trace_xla(
-    params,
-    n_objects: int,
-    proxies: np.ndarray,
-    objects: np.ndarray,
-    lengths,
-    warmup: int,
-    ripple_from: int,
-    scale: int,
-) -> Tuple[Dict[str, np.ndarray], float]:
-    """Execute the compiled driver; returns (outputs, wall seconds).
+class XLAChunkRunner:
+    """Chunk-fed XLA driver: state carried across :func:`_drive` calls.
 
-    Wall-clock excludes compilation (the jitted executable is cached on
-    shapes + flags), so repeated benchmark calls measure steady-state
-    throughput.
+    Same ``feed`` / ``finish`` / ``elapsed`` interface as the C and
+    Python chunk drivers in :mod:`repro.core.fastsim` /
+    :mod:`repro.core.fastsim_c`. Wall-clock excludes compilation (each
+    new chunk shape is lowered + compiled outside the timed region, and
+    the jitted executable is cached on shapes + flags), so repeated
+    benchmark calls measure steady-state throughput.
     """
-    J = len(params.allocations)
-    b = [int(x) for x in params.allocations]
-    b_hat = (
-        [int(x) for x in params.ripple_allocations]
-        if params.ripple_allocations is not None
-        else list(b)
-    )
-    B = params.physical_capacity if params.physical_capacity is not None else sum(b)
-    share = [0] + [scale // p for p in range(1, J + 1)] + [0]
 
-    args = (
-        jnp.asarray(proxies, jnp.int32),
-        jnp.asarray(objects, jnp.int32),
-        jnp.asarray(lengths, jnp.int32),
-        jnp.asarray([x * scale for x in b], jnp.int32),
-        jnp.asarray([x * scale for x in b_hat], jnp.int32),
-        jnp.asarray(share, jnp.int32),
-        jnp.int32(B),
-        jnp.int32(warmup),
-        jnp.int32(ripple_from),
-    )
-    kwargs = dict(
-        ghost_retention=bool(params.ghost_retention), n_objects=int(n_objects)
-    )
-    # Compile outside the timed region (cached on shapes + static flags).
-    _simulate.lower(*args, **kwargs).compile()
-    t0 = time.perf_counter()
-    out = _simulate(*args, **kwargs)
-    out = {k: np.asarray(v) for k, v in out.items()}  # blocks until ready
-    elapsed = time.perf_counter() - t0
-    return out, elapsed
+    def __init__(
+        self,
+        params,
+        n_objects: int,
+        lengths,
+        warmup: int,
+        ripple_from: int,
+        scale: int,
+    ) -> None:
+        J = len(params.allocations)
+        b = [int(x) for x in params.allocations]
+        b_hat = (
+            [int(x) for x in params.ripple_allocations]
+            if params.ripple_allocations is not None
+            else list(b)
+        )
+        B = (
+            params.physical_capacity
+            if params.physical_capacity is not None
+            else sum(b)
+        )
+        share = [0] + [scale // p for p in range(1, J + 1)] + [0]
+        self.kw = dict(
+            ghost_retention=bool(params.ghost_retention),
+            n_objects=int(n_objects),
+        )
+        self.consts = (
+            jnp.asarray(np.asarray(lengths), jnp.int32),
+            jnp.asarray([x * scale for x in b], jnp.int32),
+            jnp.asarray([x * scale for x in b_hat], jnp.int32),
+            jnp.asarray(share, jnp.int32),
+            jnp.int32(B),
+            jnp.int32(warmup),
+            jnp.int32(ripple_from),
+        )
+        self.st = _init_state(J, int(n_objects))
+        self._seen_shapes = set()
+        self.idx = 0
+        self.elapsed = 0.0
+
+    def feed(self, proxies, objects) -> None:
+        P = jnp.asarray(np.asarray(proxies), jnp.int32)
+        O = jnp.asarray(np.asarray(objects), jnp.int32)
+        args = (self.st, P, O, jnp.int32(self.idx)) + self.consts
+        if int(P.shape[0]) not in self._seen_shapes:
+            # Compile outside the timed region (cached on shapes + flags).
+            _drive.lower(*args, **self.kw).compile()
+            self._seen_shapes.add(int(P.shape[0]))
+        t0 = time.perf_counter()
+        st = _drive(*args, **self.kw)
+        for leaf in jax.tree_util.tree_leaves(st):
+            leaf.block_until_ready()
+        self.elapsed += time.perf_counter() - t0
+        self.st = st
+        self.idx += int(P.shape[0])
+
+    def finish(self, n_total: int) -> Dict[str, np.ndarray]:
+        st = {k: np.asarray(v) for k, v in self.st.items()}
+        t_start = int(st["t_start"])
+        res = st["res_since"].astype(np.int64)
+        tot = st["tot_time"].astype(np.int64)
+        open_m = res >= 0
+        tot[open_m] += n_total - np.maximum(res[open_m], t_start)
+        return {
+            "tot_time": tot,
+            "horizon": max(n_total - t_start, 1),
+            "vlen": st["vlen"],
+            "n_hit_list": int(st["n_hit_list"]),
+            "n_hit_cache": int(st["n_hit_cache"]),
+            "n_miss": int(st["n_miss"]),
+            "hits_p": st["hits_p"],
+            "reqs_p": st["reqs_p"],
+            "hist": st["hist"],
+            "n_sets": int(st["n_sets"]),
+            "n_prim": int(st["n_prim"]),
+            "n_rip": int(st["n_rip"]),
+        }

@@ -37,8 +37,13 @@ class HitRecorder:
         return float(self.hit[proxy, obj] / r) if r else float("nan")
 
     def hit_prob_matrix(self) -> np.ndarray:
+        """(J, N) hit probabilities; NaN where an object was never
+        requested by a proxy (matching :meth:`hit_prob`), with no
+        divide-by-zero RuntimeWarning."""
         with np.errstate(invalid="ignore"):
-            return self.hit / np.maximum(self.req, 1)
+            return np.where(
+                self.req > 0, self.hit / np.maximum(self.req, 1), np.nan
+            )
 
     def overall_hit_rate(self, proxy: Optional[int] = None) -> float:
         if proxy is None:

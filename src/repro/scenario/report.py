@@ -15,6 +15,8 @@ from typing import Dict, Optional
 
 import numpy as np
 
+from repro.core.fastsim import SparseOccupancy
+
 
 @dataclass
 class Report:
@@ -23,7 +25,10 @@ class Report:
     scenario: dict               # the spec that produced this report
     estimator: str               # "monte_carlo" | "working_set"
     backend: str                 # engine that ran ("c", "flat", ..., "jax-ws")
-    hit_prob: np.ndarray         # (J, N) per-proxy per-object hit probability
+    # (J, N) per-proxy per-object hit probability; streaming Monte-Carlo
+    # runs carry a SparseOccupancy (indices, values) pair instead —
+    # densify with ``dense_hit_prob()`` when N is small.
+    hit_prob: "np.ndarray | SparseOccupancy"
     hit_rate: np.ndarray         # (J,) demand-weighted overall hit rate
     overall_hit_rate: float      # request-rate-weighted across proxies
     n_requests: int              # simulated requests (0 for working_set)
@@ -37,17 +42,42 @@ class Report:
     extras: Dict[str, object] = field(default_factory=dict)
 
     # ------------------------------------------------------------------
+    @property
+    def hit_prob_is_sparse(self) -> bool:
+        return isinstance(self.hit_prob, SparseOccupancy)
+
+    def dense_hit_prob(self) -> np.ndarray:
+        """The full ``(J, N)`` hit-probability matrix (materializes a
+        sparse streaming result — use only when N is small)."""
+        if isinstance(self.hit_prob, SparseOccupancy):
+            return self.hit_prob.densify()
+        return self.hit_prob
+
     def hit_prob_at_ranks(self, proxy: int, ranks) -> list:
         """Hit probabilities of rank-``r`` objects (1-based, paper style)."""
+        if isinstance(self.hit_prob, SparseOccupancy):
+            return [
+                float(x)
+                for x in self.hit_prob.lookup(proxy, [r - 1 for r in ranks])
+            ]
         return [float(self.hit_prob[proxy, r - 1]) for r in ranks]
 
     def to_dict(self) -> dict:
         """JSON-serializable dict (numpy arrays become nested lists)."""
+        if isinstance(self.hit_prob, SparseOccupancy):
+            hit_prob = {
+                "sparse": True,
+                "n_objects": int(self.hit_prob.n_objects),
+                "indices": self.hit_prob.indices.tolist(),
+                "values": self.hit_prob.values.tolist(),
+            }
+        else:
+            hit_prob = self.hit_prob.tolist()
         d = {
             "scenario": self.scenario,
             "estimator": self.estimator,
             "backend": self.backend,
-            "hit_prob": self.hit_prob.tolist(),
+            "hit_prob": hit_prob,
             "hit_rate": self.hit_rate.tolist(),
             "overall_hit_rate": float(self.overall_hit_rate),
             "n_requests": int(self.n_requests),
@@ -73,11 +103,20 @@ class Report:
         def arr(x):
             return None if x is None else np.asarray(x, dtype=np.float64)
 
+        hp = d["hit_prob"]
+        if isinstance(hp, dict):
+            hit_prob = SparseOccupancy(
+                n_objects=int(hp["n_objects"]),
+                indices=np.asarray(hp["indices"], dtype=np.int64),
+                values=np.asarray(hp["values"], dtype=np.float64),
+            )
+        else:
+            hit_prob = np.asarray(hp, dtype=np.float64)
         return Report(
             scenario=d["scenario"],
             estimator=d["estimator"],
             backend=d["backend"],
-            hit_prob=np.asarray(d["hit_prob"], dtype=np.float64),
+            hit_prob=hit_prob,
             hit_rate=np.asarray(d["hit_rate"], dtype=np.float64),
             overall_hit_rate=float(d["overall_hit_rate"]),
             n_requests=int(d["n_requests"]),
@@ -97,7 +136,23 @@ class Report:
         not part of a result's identity)."""
         if self.estimator != other.estimator:
             return False
-        if not np.array_equal(self.hit_prob, other.hit_prob):
+        a, b = self.hit_prob, other.hit_prob
+        if isinstance(a, SparseOccupancy) or isinstance(b, SparseOccupancy):
+            sparse = [x for x in (a, b) if isinstance(x, SparseOccupancy)]
+            if len(sparse) == 2:
+                if not (
+                    a.n_objects == b.n_objects
+                    and np.array_equal(a.indices, b.indices)
+                    and np.array_equal(a.values, b.values)
+                ):
+                    return False
+            else:
+                # mixed dense/sparse: compare through densification
+                da = a.densify() if isinstance(a, SparseOccupancy) else a
+                db = b.densify() if isinstance(b, SparseOccupancy) else b
+                if not np.array_equal(da, db):
+                    return False
+        elif not np.array_equal(a, b):
             return False
         if not np.array_equal(self.hit_rate, other.hit_rate):
             return False
@@ -105,8 +160,11 @@ class Report:
             if (
                 self.realized_hit_rate is None
                 or other.realized_hit_rate is None
+                # equal_nan: zero-request proxies report NaN by contract
                 or not np.array_equal(
-                    self.realized_hit_rate, other.realized_hit_rate
+                    self.realized_hit_rate,
+                    other.realized_hit_rate,
+                    equal_nan=True,
                 )
             ):
                 return False

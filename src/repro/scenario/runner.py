@@ -7,7 +7,13 @@ Dispatches on the estimator:
   backends) or, with ``System(backend="reference")``, through the
   hookable executable-spec caches of :mod:`repro.core.shared_lru` /
   :mod:`repro.core.slru` (event-equivalent, orders of magnitude slower —
-  small runs and debugging).
+  small runs and debugging). Large runs stream instead: past the
+  ``STREAMING_*`` thresholds (or with ``Estimator(streaming=True)``)
+  the trace is fed chunk by chunk through
+  :func:`repro.core.fastsim.simulate_chunks` and occupancy comes back
+  sparse — same results, O(chunk + touched-set) memory. The trace and
+  object-length draws use independent seed substreams derived from
+  ``Scenario.seed`` (:func:`derive_seeds`).
 * ``working_set`` — solves the paper's eq. (8) fixed point
   (:func:`repro.core.workingset.solve_workingset`) on the workload's
   (time-average) rate matrix. No trace is sampled.
@@ -23,7 +29,14 @@ from typing import Optional, Tuple
 
 import numpy as np
 
-from repro.core.fastsim import HIST_BUCKETS, SimResult, default_warmup, simulate_trace
+from repro.core.fastsim import (
+    HIST_BUCKETS,
+    SimResult,
+    SparseOccupancy,
+    default_warmup,
+    simulate_chunks,
+    simulate_trace,
+)
 from repro.core.irm import IRMTrace
 from repro.core.metrics import OccupancyRecorder
 from repro.core.shared_lru import GetResult, SharedLRUCache
@@ -32,6 +45,13 @@ from repro.core.workingset import solve_workingset
 
 from .report import Report
 from .scenario import Scenario
+
+# Auto-streaming thresholds (Estimator.streaming=None): switch the
+# Monte-Carlo path to chunked trace feeding + sparse occupancy once the
+# one-shot trace (n_requests * J request cells) or the per-(proxy,
+# object) state (J * n_objects cells) would dominate memory.
+STREAMING_REQUEST_CELLS = 12_000_000
+STREAMING_STATE_CELLS = 4_000_000
 
 
 def run_scenario(sc: Scenario) -> Report:
@@ -43,6 +63,20 @@ def run_scenario(sc: Scenario) -> Report:
 # ---------------------------------------------------------------------------
 # Shared helpers
 # ---------------------------------------------------------------------------
+def derive_seeds(seed: int) -> Tuple[int, int]:
+    """Independent (trace_seed, length_seed) substreams from one scenario
+    seed.
+
+    The trace draw and the object-length draw must not share an RNG
+    stream (feeding the same seed to both correlates the sampled trace
+    with the sampled sizes); spawning two ``SeedSequence`` children
+    keeps every preset rerun reproducible while decorrelating the
+    draws.
+    """
+    children = np.random.SeedSequence(int(seed)).spawn(2)
+    return tuple(int(c.generate_state(1)[0]) for c in children)
+
+
 def _demand_weights(lam: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
     """Per-proxy object weights and proxy traffic shares from a rate
     matrix (guarded against all-zero rows)."""
@@ -59,10 +93,34 @@ def _rates_for(sc: Scenario) -> np.ndarray:
     return sc.workload.mean_rates(max(n, 1))
 
 
-def _hit_rates(hit_prob: np.ndarray, lam: np.ndarray):
+def _hit_rates(hit_prob, lam: np.ndarray):
     w, shares = _demand_weights(lam)
-    per_proxy = (w * hit_prob).sum(axis=1)
+    if isinstance(hit_prob, SparseOccupancy):
+        # untouched objects have exactly zero occupancy: only the
+        # touched columns contribute to the demand-weighted rate.
+        per_proxy = (w[:, hit_prob.indices] * hit_prob.values).sum(axis=1)
+    else:
+        per_proxy = (w * hit_prob).sum(axis=1)
     return per_proxy, float((shares * per_proxy).sum())
+
+
+def use_streaming(sc: Scenario, n_requests: int) -> bool:
+    """Whether this Monte-Carlo run takes the chunked + sparse path."""
+    est, system = sc.estimator, sc.system
+    if system.backend == "reference":
+        if est.streaming:
+            raise ValueError(
+                "backend='reference' has no streaming driver; use one of "
+                "the fastsim backends for streaming scenarios"
+            )
+        return False
+    if est.streaming is not None:
+        return bool(est.streaming)
+    J = system.n_proxies
+    return (
+        n_requests * J >= STREAMING_REQUEST_CELLS
+        or J * sc.workload.n_objects >= STREAMING_STATE_CELLS
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -76,7 +134,8 @@ def _run_working_set(sc: Scenario) -> Report:
             "for variant='slru'"
         )
     lam = _rates_for(sc)
-    lengths = sc.workload.object_lengths(sc.seed).astype(np.float64)
+    _, length_seed = derive_seeds(sc.seed)
+    lengths = sc.workload.object_lengths(length_seed).astype(np.float64)
     kw = dict(
         n_quad=est.n_quad,
         n_outer=est.n_outer,
@@ -143,8 +202,9 @@ def _run_monte_carlo(sc: Scenario) -> Report:
     n = sc.n_requests
     if sc.workload.kind == "trace" and n < 1:
         n = len(sc.workload.trace_proxies)
-    trace = sc.workload.sample(n, sc.seed)
-    lengths = sc.workload.object_lengths(sc.seed)
+    trace_seed, length_seed = derive_seeds(sc.seed)
+    streaming = use_streaming(sc, n)
+    lengths = sc.workload.object_lengths(length_seed)
     warmup = (
         sc.warmup
         if sc.warmup is not None
@@ -152,9 +212,29 @@ def _run_monte_carlo(sc: Scenario) -> Report:
     )
     warmup = min(warmup, n)
     if system.backend == "reference":
+        trace = sc.workload.sample(n, trace_seed)
         res = _run_reference(sc, trace, lengths, warmup)
         backend = "reference"
+    elif streaming:
+        # Chunk-fed drive loop + sparse touched-set occupancy: the trace
+        # is never materialized in full, and the result is bit-identical
+        # to the one-shot dense path (tests/test_streaming.py).
+        res = simulate_chunks(
+            system.to_sim_params(),
+            sc.workload.iter_chunks(
+                n, trace_seed, chunk_size=sc.estimator.chunk_size
+            ),
+            sc.workload.n_objects,
+            n,
+            lengths=lengths,
+            warmup=warmup,
+            ripple_from=sc.ripple_from,
+            engine=system.backend,
+            sparse=True,
+        )
+        backend = res.engine
     else:
+        trace = sc.workload.sample(n, trace_seed)
         res = simulate_trace(
             system.to_sim_params(),
             trace,
@@ -202,6 +282,12 @@ def _run_monte_carlo(sc: Scenario) -> Report:
             "n_hit_list": int(res.n_hit_list),
             "n_hit_cache": int(res.n_hit_cache),
             "n_miss": int(res.n_miss),
+            "streaming": bool(streaming),
+            **(
+                {"chunk_size": int(sc.estimator.chunk_size)}
+                if streaming
+                else {}
+            ),
         },
     )
 

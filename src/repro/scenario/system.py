@@ -134,6 +134,17 @@ class Estimator:
     PASTA residence-time occupancy estimator); ``working_set`` solves the
     paper's eq. (8) fixed point under the selected length-attribution
     model — no trace, milliseconds instead of minutes, approximate.
+
+    ``streaming`` controls the Monte-Carlo memory mode: ``True`` feeds
+    the trace through the engine in ``chunk_size`` pieces
+    (``Workload.iter_chunks`` -> ``fastsim.simulate_chunks``) and
+    reports occupancy as a sparse touched-set, so peak memory is
+    O(chunk + engine state) instead of O(n_requests + J*N); ``False``
+    forces the one-shot dense path; ``None`` (default) picks streaming
+    automatically once ``n_requests * J`` or ``J * n_objects`` crosses
+    the runner's thresholds (the Section VI-C full-catalogue regime).
+    Results are bit-identical either way — streaming only changes the
+    memory footprint and the occupancy representation.
     """
 
     kind: str = "monte_carlo"
@@ -143,6 +154,8 @@ class Estimator:
     n_bisect: int = 90
     damping: float = 0.7
     tol: float = 1e-7
+    streaming: Optional[bool] = None  # monte_carlo only; None = auto by size
+    chunk_size: int = 250_000  # requests per streamed chunk
 
     def __post_init__(self) -> None:
         if self.kind not in ESTIMATORS:
@@ -154,6 +167,8 @@ class Estimator:
                 f"unknown attribution {self.attribution!r}; "
                 f"options: {ATTRIBUTIONS}"
             )
+        if self.chunk_size < 1:
+            raise ValueError("chunk_size must be positive")
 
     def to_dict(self) -> dict:
         return asdict(self)

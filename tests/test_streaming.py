@@ -1,0 +1,366 @@
+"""Streaming + sparse-occupancy differential tests (Section VI-C path).
+
+The chunk-fed drive loops (`fastsim.simulate_chunks` over the Python,
+C, and XLA backends) must be *bit-identical* to the one-shot dense path
+whatever the chunk boundaries — including chunk sizes that split
+mid-eviction-burst — and the sparse touched-set occupancy must densify
+to exactly the dense accumulator output. Also covers the satellites of
+the same PR: independent seed substreams in the scenario runner,
+NaN (not warning/crash) hit rates for zero-request proxies, and the
+concurrency-safe on-demand C build.
+"""
+
+import ctypes
+import dataclasses
+import threading
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    SimParams,
+    SparseOccupancy,
+    rate_matrix,
+    sample_trace,
+    sample_trace_chunks,
+    simulate_chunks,
+    simulate_trace,
+)
+from repro.core import fastsim_c
+from repro.scenario import (
+    Estimator,
+    LengthSpec,
+    Report,
+    Scenario,
+    System,
+    Workload,
+)
+from repro.scenario.runner import (
+    STREAMING_REQUEST_CELLS,
+    STREAMING_STATE_CELLS,
+    derive_seeds,
+    use_streaming,
+)
+
+N_OBJ = 300
+ALPHAS = [0.75, 0.5, 1.0]
+N_REQ = 60_000
+WARMUP = 4_000
+# 997 is prime and far below the mean eviction-burst spacing, so chunk
+# boundaries land inside bursts; 17_000 leaves a ragged final chunk.
+CHUNK_SIZES = (997, 17_000)
+
+
+@pytest.fixture(scope="module")
+def stream_setup():
+    lam = rate_matrix(N_OBJ, ALPHAS)
+    trace = sample_trace(lam, N_REQ, seed=11)
+    return lam, trace
+
+
+def _chunks(lam, chunk_size):
+    return sample_trace_chunks(lam, N_REQ, chunk_size=chunk_size, seed=11)
+
+
+def _assert_identical(chunked, oneshot):
+    dense = (
+        chunked.occupancy.densify()
+        if isinstance(chunked.occupancy, SparseOccupancy)
+        else chunked.occupancy
+    )
+    ref = (
+        oneshot.occupancy.densify()
+        if isinstance(oneshot.occupancy, SparseOccupancy)
+        else oneshot.occupancy
+    )
+    assert np.array_equal(dense, ref)
+    assert np.array_equal(chunked.evictions_per_set, oneshot.evictions_per_set)
+    assert np.array_equal(chunked.hits_by_proxy, oneshot.hits_by_proxy)
+    assert np.array_equal(chunked.reqs_by_proxy, oneshot.reqs_by_proxy)
+    assert np.array_equal(chunked.final_vlen, oneshot.final_vlen)
+    assert chunked.n_hit_list == oneshot.n_hit_list
+    assert chunked.n_hit_cache == oneshot.n_hit_cache
+    assert chunked.n_miss == oneshot.n_miss
+    assert chunked.n_ripple == oneshot.n_ripple
+    assert chunked.n_primary == oneshot.n_primary
+    assert chunked.n_batch_evictions == oneshot.n_batch_evictions
+    assert chunked.n_sets_recorded == oneshot.n_sets_recorded
+
+
+PARAM_GRID = [
+    dict(),
+    dict(ghost_retention=False),
+    dict(ripple_allocations=(12, 20, 12)),
+    dict(ripple_allocations=(10, 18, 10), batch_interval=50),
+]
+
+
+@pytest.mark.parametrize("kw", PARAM_GRID)
+def test_chunked_flat_bitidentical_to_oneshot(stream_setup, kw):
+    lam, trace = stream_setup
+    p = SimParams(allocations=(8, 16, 8), physical_capacity=300, **kw)
+    oneshot = simulate_trace(p, trace, N_OBJ, warmup=WARMUP, engine="flat")
+    for cs in CHUNK_SIZES:
+        chunked = simulate_chunks(
+            p, _chunks(lam, cs), N_OBJ, N_REQ, warmup=WARMUP, engine="flat"
+        )
+        assert isinstance(chunked.occupancy, SparseOccupancy)
+        _assert_identical(chunked, oneshot)
+
+
+@pytest.mark.skipif(not fastsim_c.available(), reason="no C compiler")
+@pytest.mark.parametrize("kw", PARAM_GRID)
+def test_chunked_c_bitidentical_to_oneshot(stream_setup, kw, monkeypatch):
+    lam, trace = stream_setup
+    # Tiny initial touched-set capacity: forces the mid-chunk
+    # grow-and-resume path of drive_chunk many times over.
+    monkeypatch.setattr(fastsim_c, "INITIAL_SLOT_CAP", 8)
+    p = SimParams(allocations=(8, 16, 8), physical_capacity=300, **kw)
+    oneshot = simulate_trace(p, trace, N_OBJ, warmup=WARMUP, engine="flat")
+    for cs in CHUNK_SIZES:
+        chunked = simulate_chunks(
+            p, _chunks(lam, cs), N_OBJ, N_REQ, warmup=WARMUP, engine="c"
+        )
+        _assert_identical(chunked, oneshot)
+
+
+def test_chunked_xla_bitidentical_to_oneshot():
+    pytest.importorskip("jax")
+    lam = rate_matrix(200, [0.8, 1.0])
+    trace = sample_trace(lam, 20_000, seed=3)
+    p = SimParams(allocations=(8, 8), physical_capacity=200)
+    oneshot = simulate_trace(p, trace, 200, warmup=2_000, engine="flat")
+    chunked = simulate_chunks(
+        p,
+        sample_trace_chunks(lam, 20_000, chunk_size=3_333, seed=3),
+        200,
+        20_000,
+        warmup=2_000,
+        engine="xla",
+    )
+    _assert_identical(chunked, oneshot)
+
+
+def test_chunked_other_variants_bitidentical(stream_setup):
+    lam, trace = stream_setup
+    variants = [
+        SimParams(allocations=(16, 24, 8), variant="noshare"),
+        SimParams(allocations=(12, 12, 12), variant="pooled"),
+        SimParams(allocations=(32, 32, 32), physical_capacity=300, variant="slru"),
+    ]
+    for p in variants:
+        oneshot = simulate_trace(p, trace, N_OBJ, warmup=WARMUP)
+        chunked = simulate_chunks(
+            p, _chunks(lam, 997), N_OBJ, N_REQ, warmup=WARMUP
+        )
+        _assert_identical(chunked, oneshot)
+
+
+def test_sparse_occupancy_densifies_exactly(stream_setup):
+    lam, trace = stream_setup
+    p = SimParams(allocations=(8, 16, 8), physical_capacity=300)
+    engines = ["flat"] + (["c"] if fastsim_c.available() else [])
+    dense_ref = None
+    for engine in engines:
+        dense = simulate_trace(
+            p, trace, N_OBJ, warmup=WARMUP, engine=engine, sparse=False
+        )
+        sp = simulate_trace(
+            p, trace, N_OBJ, warmup=WARMUP, engine=engine, sparse=True
+        )
+        occ = sp.occupancy
+        assert isinstance(occ, SparseOccupancy)
+        assert occ.shape == dense.occupancy.shape
+        # canonical representation: sorted unique indices, no zero columns
+        assert np.all(np.diff(occ.indices) > 0)
+        assert occ.values.any(axis=0).all()
+        assert np.array_equal(occ.densify(), dense.occupancy)
+        assert np.array_equal(sp.dense_occupancy(), dense.occupancy)
+        # untouched objects contribute exactly zero occupancy
+        untouched = np.setdiff1d(np.arange(N_OBJ), occ.indices)
+        assert np.all(dense.occupancy[:, untouched] == 0.0)
+        # point lookups match the dense matrix (touched and untouched)
+        probe = [0, 1, int(occ.indices[-1])] + untouched[:2].tolist()
+        for i in range(3):
+            assert np.array_equal(
+                occ.lookup(i, probe), dense.occupancy[i, probe]
+            )
+        if dense_ref is None:
+            dense_ref = dense.occupancy
+        else:
+            assert np.array_equal(dense.occupancy, dense_ref)
+
+
+def test_simulate_chunks_validates_stream_length(stream_setup):
+    lam, _ = stream_setup
+    p = SimParams(allocations=(8, 16, 8), physical_capacity=300)
+    with pytest.raises(ValueError, match="n_requests"):
+        simulate_chunks(
+            p, _chunks(lam, 10_000), N_OBJ, N_REQ + 5, warmup=WARMUP
+        )
+
+
+# ---------------------------------------------------------------------------
+# Scenario-layer streaming mode
+# ---------------------------------------------------------------------------
+def _small_scenario(**kw) -> Scenario:
+    defaults = dict(
+        name="stream-small",
+        workload=Workload(n_objects=200, alphas=(0.7, 1.0)),
+        system=System(allocations=(12, 12), physical_capacity=120),
+        estimator=Estimator("monte_carlo"),
+        n_requests=30_000,
+        seed=3,
+    )
+    defaults.update(kw)
+    return Scenario(**defaults)
+
+
+def test_streaming_scenario_matches_dense_scenario():
+    sc = _small_scenario(
+        system=System(
+            allocations=(12, 12),
+            physical_capacity=140,
+            slack_frac=0.25,
+            batch_interval=100,
+        ),
+        ripple_from=0,
+    )
+    dense = sc.run()
+    stream = dataclasses.replace(
+        sc, estimator=Estimator("monte_carlo", streaming=True, chunk_size=4_096)
+    ).run()
+    assert dense.extras["streaming"] is False
+    assert stream.extras["streaming"] is True
+    assert stream.extras["chunk_size"] == 4_096
+    assert stream.hit_prob_is_sparse and not dense.hit_prob_is_sparse
+    np.testing.assert_array_equal(stream.dense_hit_prob(), dense.hit_prob)
+    np.testing.assert_array_equal(
+        stream.realized_hit_rate, dense.realized_hit_rate
+    )
+    assert stream.ripple == dense.ripple
+    # demand-weighted rates: sparse path sums only touched columns, so
+    # agreement is exact up to summation order (last-ulp)
+    np.testing.assert_allclose(stream.hit_rate, dense.hit_rate, rtol=1e-12)
+    # sparse reports survive the artifact JSON round trip
+    rt = Report.from_dict(stream.to_dict())
+    assert rt.same_estimates(stream)
+    assert rt.hit_prob_at_ranks(0, (1, 10, 100)) == stream.hit_prob_at_ranks(
+        0, (1, 10, 100)
+    )
+
+
+def test_streaming_auto_selection_thresholds():
+    sc = _small_scenario()
+    assert use_streaming(sc, sc.n_requests) is False
+    # request-volume trigger: n * J crosses the cell threshold
+    assert use_streaming(sc, STREAMING_REQUEST_CELLS // 2 + 1) is True
+    # catalogue trigger: J * N crosses the state threshold
+    big = _small_scenario(
+        workload=Workload(
+            n_objects=STREAMING_STATE_CELLS // 2 + 1, alphas=(0.7, 1.0)
+        ),
+        n_requests=1_000,
+    )
+    assert use_streaming(big, big.n_requests) is True
+    # explicit override wins in both directions
+    off = dataclasses.replace(
+        big, estimator=Estimator("monte_carlo", streaming=False)
+    )
+    assert use_streaming(off, off.n_requests) is False
+    # the reference backend has no streaming driver
+    ref = _small_scenario(
+        system=System(
+            allocations=(12, 12), physical_capacity=120, backend="reference"
+        ),
+        estimator=Estimator("monte_carlo", streaming=True),
+    )
+    with pytest.raises(ValueError, match="reference"):
+        use_streaming(ref, ref.n_requests)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: independent seed substreams for trace vs lengths
+# ---------------------------------------------------------------------------
+def test_seed_substreams_independent_and_reproducible():
+    a = derive_seeds(7)
+    assert a == derive_seeds(7)  # deterministic
+    assert a[0] != a[1]  # trace and length draws decorrelated
+    assert a != derive_seeds(8)
+    # scenario reruns stay bit-identical under the derived seeds
+    sc = _small_scenario(
+        workload=Workload(
+            n_objects=200,
+            alphas=(0.7, 1.0),
+            lengths=LengthSpec("lognormal", sigma=0.8, max_len=9),
+        )
+    )
+    r1, r2 = sc.run(), sc.run()
+    assert r1.same_estimates(r2)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: zero-request proxies report NaN, not a warning or crash
+# ---------------------------------------------------------------------------
+def test_zero_request_proxy_reports_nan():
+    # proxy 1 has a vanishing request rate: on a short run it issues no
+    # post-warmup requests at all.
+    sc = Scenario(
+        name="starved",
+        workload=Workload(
+            n_objects=100, alphas=(0.7, 1.0), proxy_rates=(1.0, 1e-12)
+        ),
+        system=System(allocations=(10, 10), physical_capacity=100),
+        n_requests=2_000,
+        warmup=500,
+        seed=5,
+    )
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # any RuntimeWarning -> failure
+        rep = sc.run()
+    assert rep.realized_hit_rate is not None
+    assert np.isnan(rep.realized_hit_rate[1])
+    assert np.isfinite(rep.realized_hit_rate[0])
+    assert np.isfinite(rep.overall_hit_rate)
+    # NaN-bearing reports still round-trip and compare equal
+    assert Report.from_dict(rep.to_dict()).same_estimates(rep)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: concurrency-safe on-demand C build
+# ---------------------------------------------------------------------------
+@pytest.mark.skipif(fastsim_c._compiler() is None, reason="no C compiler")
+def test_concurrent_c_builds_race_safely(tmp_path):
+    cc = fastsim_c._compiler()
+    name = "fastsim_race_test.so"
+    results, errors = [], []
+
+    def build():
+        try:
+            results.append(fastsim_c._build_so(cc, fastsim_c._SRC, tmp_path, name))
+        except Exception as e:  # pragma: no cover - the assertion target
+            errors.append(e)
+
+    threads = [threading.Thread(target=build) for _ in range(6)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    assert all(p == tmp_path / name for p in results)
+    lib = ctypes.CDLL(str(tmp_path / name))  # complete, loadable artifact
+    assert hasattr(lib, "drive_chunk")
+    # no leaked .tmp files from any builder
+    assert [p.name for p in tmp_path.iterdir()] == [name]
+
+
+@pytest.mark.skipif(fastsim_c._compiler() is None, reason="no C compiler")
+def test_c_build_tolerates_existing_winner(tmp_path):
+    so = tmp_path / "fastsim_winner.so"
+    so.write_bytes(b"sentinel: a prior winner")
+    got = fastsim_c._build_so(
+        fastsim_c._compiler(), fastsim_c._SRC, tmp_path, so.name
+    )
+    assert got == so
+    assert so.read_bytes() == b"sentinel: a prior winner"  # not clobbered
