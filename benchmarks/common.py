@@ -14,7 +14,10 @@ three fidelity modes onto scale factors:
 All benchmarks write machine-readable artifacts to
 ``benchmarks/artifacts/*.json`` (consumed by ``python -m
 benchmarks.report``, which renders EXPERIMENTS.md) and print
-``name,us_per_call,derived`` CSV rows per the harness contract.
+``name,us_per_call,derived`` CSV rows per the harness contract. The
+artifacts are committed alongside EXPERIMENTS.md, and CI's ``docs`` job
+(``tools/check_docs.py``) fails when the two disagree — regenerate both
+together.
 """
 
 from __future__ import annotations

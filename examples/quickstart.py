@@ -10,6 +10,9 @@ One declarative `Scenario` = workload x system x estimator:
 2. Swap one axis: the not-shared baseline on the same trace (Prop. 3.1).
 3. Serialize the scenario to JSON and rerun it bit-identically.
 4. Overbooking + eq. (13) admission control (paper Section IV-C).
+5. The same admission loop as an online scenario: tenants arrive and
+   depart, virtual allocations refresh from estimated popularities, and
+   the final admitted set is validated by simulation.
 
 The older entry points (`SharedLRUCache`, `SimParams`/`simulate_trace`,
 `solve_workingset`, `MCDOSServer`) all still work — `Scenario.run()` is
@@ -72,3 +75,14 @@ for i in range(3):
         ctl.refresh()
 print(f"committed SLA {ctl.committed_sla:.0f} vs B={ctl.B:.0f} "
       f"-> overbooked={ctl.overbooked}")
+
+print("\n== 5. admission control as an online scenario ==")
+adm_sc = get_preset("admission_overbooking").scaled(requests=0.01)
+adm = adm_sc.run().extras["admission"]
+n_static = int(adm["capacity"] // max(adm["b_star"].values()))
+print(f"episode: {len(adm['decisions'])} decisions -> "
+      f"{len(adm['active_tenants'])} tenants active at "
+      f"B={adm['capacity']:.0f} (static partitioning fits {n_static})")
+print(f"overbooking gain sum b*/sum b = {adm['overbooking_gain']:.3f}; "
+      f"max |realized - predicted| SLA hit rate = "
+      f"{adm['max_abs_sla_gap']:.4f}")

@@ -58,6 +58,7 @@ from .workingset import (  # noqa: F401
     solve_workingset,
     solve_workingset_batch,
     solve_workingset_unshared,
+    virtual_footprint,
 )
 from .admission import (  # noqa: F401
     AdmissionController,

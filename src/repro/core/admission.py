@@ -14,27 +14,42 @@ minimal virtual allocation is then
 
     b_i = sum_k h*_{i,k} * L_{i,k}(h*)        (evaluate eq. (4) at t*)
 
+computed by :func:`repro.core.workingset.virtual_footprint`.
+
 A new tenant J+1 is conservatively admitted iff
 ``b*_{J+1} <= B - sum_i b_i`` (eq. (13)); after admission its popularity
 estimates are folded in and virtual allocations are recomputed.
+
+:class:`AdmissionController` runs this loop *online*: tenants arrive
+(:meth:`~AdmissionController.admit`), popularity estimates stream in
+(:meth:`~AdmissionController.observe`, typically from a
+:class:`~repro.core.irm.PopularityEstimator`), allocations are
+recomputed (:meth:`~AdmissionController.refresh`), tenants depart
+(:meth:`~AdmissionController.depart` — footnote 1: departures force a
+recomputation too, because the survivors lose sharing partners and
+their minimal allocations *grow* back toward ``b*``), and — when that
+regrowth overcommits the physical cache — the most recently admitted
+tenants are evicted (:meth:`~AdmissionController.enforce`). Every
+decision is appended to :attr:`~AdmissionController.log`, so an episode
+can be replayed and validated against Monte-Carlo simulation (see
+``repro.scenario``'s ``admission_overbooking`` preset).
+
+The module is pure NumPy at its interface; the JAX work happens inside
+the :mod:`repro.core.workingset` solver it calls.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from dataclasses import asdict, dataclass
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from .irm import PopularityEstimator
 from .workingset import (
     WorkingSetSolution,
-    attribution_matrix,
-    hit_probabilities,
-    solve_workingset,
     solve_workingset_unshared,
+    virtual_footprint,
 )
-import jax.numpy as jnp
 
 
 def virtual_allocations(
@@ -55,14 +70,9 @@ def virtual_allocations(
     lengths = np.asarray(lengths, dtype=np.float64)
     b_star = np.asarray(b_star, dtype=np.float64)
     sol_star = solve_workingset_unshared(lam, lengths, b_star)
-    J = lam.shape[0]
-    if n_quad is None:
-        n_quad = max(8, (J + 1) // 2 + 1)
-    h_star = jnp.asarray(sol_star.h)
-    L = np.asarray(
-        attribution_matrix(h_star, jnp.asarray(lengths), attribution, n_quad)
+    b = virtual_footprint(
+        sol_star.h, lengths, attribution=attribution, n_quad=n_quad
     )
-    b = (sol_star.h * L).sum(axis=1)
     return b, sol_star
 
 
@@ -74,15 +84,23 @@ class Tenant:
     b_star: float                 # SLA allocation (unshared-equivalent)
     b_virtual: float              # current virtual allocation (<= b_star)
     lam: Optional[np.ndarray] = None  # estimated request rates (N,)
+    order: int = 0                # admission sequence number (LIFO evict)
 
 
 @dataclass
 class AdmissionDecision:
+    """One entry of the controller's decision log."""
+
+    action: str                  # "admit" | "reject" | "depart" | "evict"
+    name: str
     admitted: bool
     reason: str
     b_star: float
     headroom_before: float
     headroom_after: float
+
+    def to_dict(self) -> dict:
+        return asdict(self)
 
 
 class AdmissionController:
@@ -90,11 +108,18 @@ class AdmissionController:
 
     * ``admit()``: conservative test (eq. (13)) against current virtual
       allocations; on success the tenant starts with ``b = b*``.
-    * ``refresh()``: once popularities are estimated, recompute all
-      virtual allocations via the working-set approximation, shrinking
-      ``b`` toward the minimal SLA-preserving value and freeing headroom.
-    * ``depart()``: remove a tenant and refresh (footnote 1 of the paper:
-      allocations must be recomputed on departures too).
+    * ``observe()``: attach/update a tenant's popularity estimate.
+    * ``refresh()``: recompute all virtual allocations via the
+      working-set approximation from current estimates, shrinking ``b``
+      toward the minimal SLA-preserving value and freeing headroom.
+    * ``depart()``: remove a tenant and refresh (footnote 1 of the
+      paper: allocations must be recomputed on departures too — the
+      survivors' minimal allocations grow when sharing partners leave).
+    * ``enforce()``: if a refresh leaves the cache overcommitted
+      (``committed > B * (1 - safety_margin)``), evict the most recently
+      admitted tenants until the commitment fits again.
+
+    All decisions are appended to :attr:`log` in order.
     """
 
     def __init__(
@@ -110,6 +135,8 @@ class AdmissionController:
         self.attribution = attribution
         self.safety_margin = float(safety_margin)
         self.tenants: Dict[str, Tenant] = {}
+        self.log: List[AdmissionDecision] = []
+        self._order = 0
 
     # -- bookkeeping ---------------------------------------------------
     @property
@@ -130,37 +157,70 @@ class AdmissionController:
     def overbooked(self) -> bool:
         return self.committed_sla > self.B
 
+    @property
+    def overbooking_gain(self) -> float:
+        """``sum b_i* / sum b_i`` over the admitted set — how much SLA
+        memory is being served per unit of virtual commitment."""
+        c = self.committed
+        return self.committed_sla / c if c > 0 else 1.0
+
     # -- operations ------------------------------------------------------
-    def admit(self, name: str, b_star: float) -> AdmissionDecision:
-        """Conservative admission per eq. (13)."""
+    def admit(
+        self, name: str, b_star: float, lam: Optional[np.ndarray] = None
+    ) -> AdmissionDecision:
+        """Conservative admission per eq. (13): admit iff ``b* <=
+        headroom`` (boundary inclusive — eq. (13) is ``<=``)."""
         if name in self.tenants:
             raise ValueError(f"tenant {name!r} already admitted")
         before = self.headroom()
         if b_star <= before:
-            self.tenants[name] = Tenant(name, b_star, b_virtual=b_star)
-            return AdmissionDecision(
-                True, "eq13-conservative", b_star, before, self.headroom()
+            self._order += 1
+            self.tenants[name] = Tenant(
+                name, float(b_star), b_virtual=float(b_star), order=self._order
             )
-        return AdmissionDecision(
-            False,
-            f"b*={b_star:.1f} exceeds headroom {before:.1f} (eq. (13))",
-            b_star,
-            before,
-            before,
-        )
+            if lam is not None:
+                self.observe(name, lam)
+            d = AdmissionDecision(
+                "admit", name, True, "eq13-conservative", float(b_star),
+                before, self.headroom(),
+            )
+        else:
+            d = AdmissionDecision(
+                "reject", name, False,
+                f"b*={b_star:.1f} exceeds headroom {before:.1f} (eq. (13))",
+                float(b_star), before, before,
+            )
+        self.log.append(d)
+        return d
 
     def observe(self, name: str, lam: np.ndarray) -> None:
         """Attach estimated popularities (per-request rates) to a tenant."""
         self.tenants[name].lam = np.asarray(lam, dtype=np.float64)
 
-    def depart(self, name: str) -> None:
-        del self.tenants[name]
+    def depart(self, name: str) -> Dict[str, float]:
+        """Remove a tenant, release its virtual allocation, and refresh
+        the survivors (their minimal allocations grow — footnote 1).
+        Returns the refreshed allocation map."""
+        t = self.tenants.pop(name)
+        before = self.headroom() - t.b_virtual  # headroom at decision time
+        self.log.append(
+            AdmissionDecision(
+                "depart", name, False, "departure", t.b_star,
+                before, self.headroom(),
+            )
+        )
+        return self.refresh()
 
     def refresh(self) -> Dict[str, float]:
-        """Recompute virtual allocations from current popularity estimates
-        (tenants without estimates keep b = b*). Returns the new b map."""
+        """Recompute virtual allocations from current popularity
+        estimates. Tenants without estimates keep ``b = b*`` (the
+        conservative admission value); a lone estimated tenant has no
+        sharing partner, so its minimal allocation *is* ``b*``. Returns
+        the new ``{name: b_virtual}`` map."""
         est = [t for t in self.tenants.values() if t.lam is not None]
-        if len(est) >= 2:
+        if len(est) == 1:
+            est[0].b_virtual = est[0].b_star
+        elif len(est) >= 2:
             lam = np.stack([t.lam for t in est])
             b_star = np.array([t.b_star for t in est])
             b_new, _ = virtual_allocations(
@@ -169,7 +229,30 @@ class AdmissionController:
             for t, b in zip(est, b_new):
                 # b is minimal; never grow beyond the SLA value.
                 t.b_virtual = float(min(b, t.b_star))
-        return {t.name: t.b_virtual for t in self.tenants.values()}
+        return self.allocations()
+
+    def enforce(self) -> List[str]:
+        """Evict most-recently-admitted tenants until ``committed`` fits
+        inside ``B * (1 - safety_margin)`` again (LIFO: the earliest
+        admissions keep their SLAs). Returns the evicted names —
+        normally empty; overcommitment only arises when departures make
+        the survivors' minimal allocations grow past the capacity their
+        admission was justified against."""
+        evicted: List[str] = []
+        while self.headroom() < 0 and len(self.tenants) > 1:
+            victim = max(self.tenants.values(), key=lambda t: t.order)
+            before = self.headroom()
+            del self.tenants[victim.name]
+            self.log.append(
+                AdmissionDecision(
+                    "evict", victim.name, False,
+                    f"overcommitted: headroom {before:.1f} < 0",
+                    victim.b_star, before, self.headroom(),
+                )
+            )
+            evicted.append(victim.name)
+            self.refresh()
+        return evicted
 
     def allocations(self) -> Dict[str, float]:
         return {t.name: t.b_virtual for t in self.tenants.values()}

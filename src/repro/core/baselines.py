@@ -13,7 +13,7 @@
 from __future__ import annotations
 
 from collections import OrderedDict
-from typing import Dict, List, Optional, Sequence
+from typing import List, Sequence
 
 from .shared_lru import EvictionEvent, GetResult, RequestStats
 

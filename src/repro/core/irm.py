@@ -136,12 +136,26 @@ class PopularityEstimator:
     """Online empirical request-rate estimator (per proxy × object).
 
     ``lam_hat[i, k] = count[i, k] / n[i]`` — the admission controller
-    feeds this into the working-set solver (Section IV-C).
+    feeds this into the working-set solver (Section IV-C: "once admitted,
+    the object popularities can be estimated and fed into our working-set
+    approximation").
+
+    The estimator is designed for *online* operation under tenant churn:
+
+    * :meth:`observe` / :meth:`observe_trace` fold new requests in
+      incrementally (counts accumulate across calls);
+    * :meth:`decay` exponentially forgets old traffic, so the estimate
+      tracks non-stationary popularity instead of averaging over the
+      whole history;
+    * :meth:`reset_proxy` clears one tenant's row when it departs, so a
+      later re-admission under the same proxy id starts fresh.
+
+    Counts are float64 so decayed (fractional) counts stay exact.
     """
 
     def __init__(self, n_proxies: int, n_objects: int) -> None:
-        self.counts = np.zeros((n_proxies, n_objects), dtype=np.int64)
-        self.totals = np.zeros(n_proxies, dtype=np.int64)
+        self.counts = np.zeros((n_proxies, n_objects), dtype=np.float64)
+        self.totals = np.zeros(n_proxies, dtype=np.float64)
 
     def observe(self, proxy: int, obj: int) -> None:
         self.counts[proxy, obj] += 1
@@ -151,10 +165,27 @@ class PopularityEstimator:
         np.add.at(self.counts, (trace.proxies, trace.objects), 1)
         np.add.at(self.totals, trace.proxies, 1)
 
+    def decay(self, factor: float) -> None:
+        """Exponential forgetting: scale all counts by ``factor``.
+
+        Called once per estimation window, ``factor = gamma`` gives each
+        window weight ``gamma^age`` — the standard EWMA popularity
+        tracker for non-stationary demand (cf. shot-noise churn).
+        """
+        if not 0.0 <= factor <= 1.0:
+            raise ValueError("decay factor must be in [0, 1]")
+        self.counts *= factor
+        self.totals *= factor
+
+    def reset_proxy(self, proxy: int) -> None:
+        """Forget everything observed for one proxy (tenant departure)."""
+        self.counts[proxy, :] = 0.0
+        self.totals[proxy] = 0.0
+
     def rates(self, laplace: float = 0.0) -> np.ndarray:
         """Estimated per-request rates, optionally Laplace-smoothed."""
         J, N = self.counts.shape
-        tot = np.maximum(self.totals, 1).astype(np.float64)[:, None]
+        tot = np.maximum(self.totals, 1.0)[:, None]
         if laplace > 0.0:
             return (self.counts + laplace) / (tot + laplace * N)
         return self.counts / tot

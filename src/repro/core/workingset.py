@@ -316,6 +316,37 @@ def solve_workingset_unshared(lam, lengths, b, **kw) -> WorkingSetSolution:
     return solve_workingset(lam, lengths, b, attribution="full", **kw)
 
 
+def virtual_footprint(
+    h,
+    lengths,
+    attribution: str = "L1",
+    n_quad: int | None = None,
+) -> np.ndarray:
+    """Per-proxy memory footprint ``sum_k h_{i,k} L_{i,k}(h)`` (eq. (4)).
+
+    Evaluates the attributed-length matrix at the given occupancy
+    probabilities ``h`` (J, N) and contracts it against ``h`` — the
+    virtual allocation each proxy consumes under sharing. Evaluated at
+    ``h* = h(t*)`` of the *unshared* working set at the SLA allocation
+    ``b*``, this is exactly the minimal SLA-preserving virtual allocation
+    of eq. (10); the admission controller
+    (:mod:`repro.core.admission`) uses it at every refresh.
+    """
+    h = np.asarray(h, dtype=np.float64)
+    lengths = np.asarray(lengths, dtype=np.float64)
+    if attribution not in ATTRIBUTIONS:
+        raise ValueError(
+            f"unknown attribution {attribution!r}; options: {ATTRIBUTIONS}"
+        )
+    J = h.shape[0]
+    if n_quad is None:
+        n_quad = max(8, (J + 1) // 2 + 1)
+    L = np.asarray(
+        attribution_matrix(jnp.asarray(h), jnp.asarray(lengths), attribution, n_quad)
+    )
+    return (h * L).sum(axis=1)
+
+
 def solve_workingset_batch(
     lam,
     lengths,

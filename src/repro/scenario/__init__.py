@@ -16,12 +16,65 @@ Axes
 ----
 * :class:`Workload` — stationary IRM/Zipf (per-proxy heterogeneous
   alphas), shot-noise/non-stationary popularity churn, explicit trace
-  replay; object-size distributions via :class:`LengthSpec`.
+  replay, or a ``tenant_churn`` admission episode; object-size
+  distributions via :class:`LengthSpec`.
 * :class:`System` — flat shared LRU, S-LRU, not-shared, pooled; ghost
   retention, RRE slack/batch config; backend selection across the
-  reference ``SharedLRUCache`` and the fastsim Python/C/XLA drivers.
+  reference ``SharedLRUCache`` and the fastsim Python/C/XLA drivers;
+  optional online admission control via :class:`AdmissionSpec`.
 * :class:`Estimator` — ``monte_carlo`` vs ``working_set`` (L1 / Lstar /
-  L2 / full attribution), both returning one :class:`Report`.
+  L2 / full attribution), both returning one :class:`Report`. Large
+  Monte-Carlo runs stream automatically (chunk-fed engine + sparse
+  touched-set occupancy) past the runner's size thresholds
+  (``n_requests * J >= 12M`` or ``J * n_objects >= 4M``); results are
+  bit-identical to the one-shot dense path.
+
+Admission control (Section IV-C)
+--------------------------------
+An admission scenario is declarative like everything else — a
+``tenant_churn`` workload (tenants + arrival/departure events +
+estimation traffic per round) over a ``System`` whose ``allocations``
+are the per-tenant SLA targets ``b*`` and whose ``admission`` spec
+drives the online controller::
+
+    from repro.scenario import (
+        AdmissionSpec, Estimator, Scenario, System, Workload,
+    )
+
+    sc = Scenario(
+        name="overbook",
+        workload=Workload(
+            kind="tenant_churn",
+            n_objects=1000,
+            alphas=(0.9, 0.92, 0.94, 0.96),       # one per tenant
+            tenant_events=(
+                (0, "arrive", 0), (1, "arrive", 1),
+                (2, "arrive", 2), (3, "depart", 0),
+                (4, "arrive", 3),
+            ),
+            round_requests=50_000,                 # estimation traffic
+        ),
+        system=System(
+            allocations=(64, 64, 64, 64),          # SLA targets b*
+            physical_capacity=192,                 # B < sum b*: overbook
+            admission=AdmissionSpec(attribution="L1"),
+        ),
+        estimator=Estimator("monte_carlo"),        # validation estimator
+        n_requests=500_000,                        # validation trace
+        seed=7,
+    )
+    rep = sc.run()
+    rep.extras["admission"]["decisions"]           # admit/reject/... log
+    rep.extras["admission"]["overbooking_gain"]    # sum b* / sum b
+    rep.extras["admission"]["realized_hit_rate"]   # vs predicted_sla_hit_rate
+
+The episode replays arrivals/departures through the eq. (13) test,
+refreshes eq. (10) virtual allocations from online popularity
+estimates, and finally *validates* the admitted set by running it at
+its virtual allocations with the configured estimator — the returned
+:class:`Report` is that validation run, with the full episode under
+``extras["admission"]``. The ``admission_overbooking`` preset packages
+the paper-scale version.
 
 Named presets cover every paper experiment (``list_presets()``); the
 older entry points (``SimParams``/``simulate_trace``,
@@ -31,11 +84,12 @@ low-level layer this package drives.
 
 from .report import Report  # noqa: F401
 from .scenario import Scenario  # noqa: F401
-from .system import Estimator, System  # noqa: F401
+from .system import AdmissionSpec, Estimator, System  # noqa: F401
 from .workload import LengthSpec, Workload  # noqa: F401
 from .presets import PRESETS, get_preset, list_presets  # noqa: F401
 
 __all__ = [
+    "AdmissionSpec",
     "Estimator",
     "LengthSpec",
     "PRESETS",

@@ -6,6 +6,25 @@ EXPERIMENTS.md generator) consumes one :class:`Report`: per-proxy and
 per-object hit probabilities, demand-weighted hit rates, ripple/eviction
 statistics (simulation only), and throughput. Reports serialize to plain
 JSON dicts — that is what ``benchmarks/artifacts/`` records.
+
+Field notes
+-----------
+* ``hit_prob`` is a dense ``(J, N)`` matrix, except for streaming
+  Monte-Carlo runs where it is a
+  :class:`~repro.core.fastsim.SparseOccupancy` (indices, values) pair
+  over the touched objects — ``dense_hit_prob()`` densifies when N is
+  small, ``hit_prob_at_ranks`` probes without densifying.
+* ``hit_rate`` (estimated from occupancy, PASTA) and
+  ``realized_hit_rate`` (counted hits, Monte-Carlo only; NaN for
+  zero-request proxies) are both demand-weighted per proxy.
+* ``extras`` carries estimator- and path-specific payloads:
+  ``streaming``/``chunk_size`` for streamed runs, solver diagnostics
+  for working-set runs, and the full ``admission`` episode (decision
+  log, virtual allocations, overbooking gain, predicted-vs-realized
+  SLA hit rates) for ``System(admission=...)`` scenarios.
+* ``same_estimates`` is the round-trip identity check used by the
+  JSON tests: estimates must match bit for bit, timing fields are
+  excluded (wall clock is not part of a result's identity).
 """
 
 from __future__ import annotations

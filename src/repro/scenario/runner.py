@@ -1,6 +1,6 @@
 """Execution layer behind :meth:`Scenario.run`.
 
-Dispatches on the estimator:
+Dispatches on the system and estimator:
 
 * ``monte_carlo`` — samples the workload's trace and drives it through
   :func:`repro.core.fastsim.simulate_trace` (C / inlined-Python / XLA
@@ -17,18 +17,30 @@ Dispatches on the estimator:
 * ``working_set`` — solves the paper's eq. (8) fixed point
   (:func:`repro.core.workingset.solve_workingset`) on the workload's
   (time-average) rate matrix. No trace is sampled.
+* ``System(admission=...)`` + a ``tenant_churn`` workload — replays the
+  Section IV-C admission episode (:func:`_run_admission`): arrivals and
+  departures flow through an
+  :class:`~repro.core.admission.AdmissionController`, per-round
+  estimation traffic feeds a
+  :class:`~repro.core.irm.PopularityEstimator`, and the surviving
+  tenant set is *validated* by handing the final virtual allocations to
+  whichever estimator the scenario configured (Monte-Carlo replays the
+  system; working-set solves it) — so every admission decision is
+  checked against the realized hit probabilities it promised.
 
-Both paths return the same :class:`~repro.scenario.report.Report`, so
+All paths return the same :class:`~repro.scenario.report.Report`, so
 simulation and analytics are interchangeable downstream.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import time
 from typing import Optional, Tuple
 
 import numpy as np
 
+from repro.core.admission import AdmissionController
 from repro.core.fastsim import (
     HIST_BUCKETS,
     SimResult,
@@ -37,14 +49,16 @@ from repro.core.fastsim import (
     simulate_chunks,
     simulate_trace,
 )
-from repro.core.irm import IRMTrace
+from repro.core.irm import IRMTrace, PopularityEstimator, sample_trace
 from repro.core.metrics import OccupancyRecorder
 from repro.core.shared_lru import GetResult, SharedLRUCache
 from repro.core.slru import SegmentedSharedLRUCache
-from repro.core.workingset import solve_workingset
+from repro.core.workingset import solve_workingset, solve_workingset_unshared
 
 from .report import Report
 from .scenario import Scenario
+from .system import System
+from .workload import Workload
 
 # Auto-streaming thresholds (Estimator.streaming=None): switch the
 # Monte-Carlo path to chunked trace feeding + sparse occupancy once the
@@ -55,6 +69,12 @@ STREAMING_STATE_CELLS = 4_000_000
 
 
 def run_scenario(sc: Scenario) -> Report:
+    if sc.system.admission is not None:
+        return _run_admission(sc)
+    if sc.workload.kind == "tenant_churn":
+        raise ValueError(
+            "tenant_churn workloads need System(admission=AdmissionSpec())"
+        )
     if sc.estimator.kind == "working_set":
         return _run_working_set(sc)
     return _run_monte_carlo(sc)
@@ -391,4 +411,193 @@ def _run_reference(
         n_batch_evictions=n_batch,
         final_vlen=np.asarray([cache.vlen(i) for i in range(J)]),
         elapsed_s=elapsed,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Section IV-C: online admission-control episodes
+# ---------------------------------------------------------------------------
+def _round_seed(trace_seed: int, round_idx: int) -> int:
+    """Deterministic per-round estimation-trace seed, independent of the
+    validation trace (which uses ``trace_seed`` itself)."""
+    ss = np.random.SeedSequence([int(trace_seed), int(round_idx), 0xAD31])
+    return int(ss.generate_state(1)[0])
+
+
+def _run_admission(sc: Scenario) -> Report:
+    """Replay a tenant-churn episode through the admission controller,
+    then validate the surviving configuration with the scenario's
+    estimator.
+
+    Per round: departures release their virtual allocations (footnote-1
+    refresh), arrivals face the conservative eq. (13) test (optionally
+    retried once after a refresh), the active tenants generate
+    ``round_requests`` of estimation traffic, popularity estimates are
+    refreshed, virtual allocations recomputed via eq. (10), and — if the
+    commitment overflowed — most-recently-admitted tenants are evicted.
+
+    The returned Report is the *validation* report of the final admitted
+    set running at its final (integer-rounded) virtual allocations, with
+    the full episode — decisions, allocations, overbooking gain, and
+    predicted-vs-realized SLA hit rates — under
+    ``Report.extras["admission"]``.
+    """
+    wl, system, spec = sc.workload, sc.system, sc.system.admission
+    if wl.kind != "tenant_churn":
+        raise ValueError(
+            "System(admission=...) needs a tenant_churn workload "
+            f"(got kind={wl.kind!r})"
+        )
+    T, N = wl.n_proxies, wl.n_objects
+    B = system.capacity()
+    trace_seed, length_seed = derive_seeds(sc.seed)
+    lengths = wl.object_lengths(length_seed).astype(np.float64)
+    lam_true = wl.rates()
+    b_star = np.asarray(system.allocations, dtype=np.float64)
+
+    ctl = AdmissionController(
+        B,
+        lengths,
+        attribution=spec.attribution,
+        safety_margin=spec.safety_margin,
+    )
+    estimator = PopularityEstimator(T, N)
+    name = [f"tenant{i}" for i in range(T)]
+    active: list = []
+    n_est_requests = 0
+
+    t0 = time.perf_counter()
+    by_round = wl.events_by_round()
+    for r in range(wl.n_rounds):
+        for action, i in by_round.get(r, ()):
+            if action == "depart":
+                if i in active:
+                    active.remove(i)
+                    ctl.depart(name[i])
+                    estimator.reset_proxy(i)
+                continue
+            d = ctl.admit(name[i], float(b_star[i]))
+            if not d.admitted and spec.refresh_on_reject:
+                # Free the sharing surplus the estimates justify, then
+                # retry once — the paper's stated use of the working-set
+                # approximation ("to facilitate admission control").
+                ctl.refresh()
+                d = ctl.admit(name[i], float(b_star[i]))
+            if d.admitted:
+                active.append(i)
+        if active and wl.round_requests:
+            rows = np.asarray(sorted(active), dtype=np.int64)
+            t = sample_trace(
+                lam_true[rows], wl.round_requests, seed=_round_seed(trace_seed, r)
+            )
+            estimator.observe_trace(
+                IRMTrace(rows[t.proxies].astype(np.int32), t.objects)
+            )
+            n_est_requests += len(t)
+            rates = estimator.rates(laplace=spec.laplace)
+            for i in active:
+                ctl.observe(name[i], rates[i])
+            ctl.refresh()
+            if spec.decay < 1.0:
+                estimator.decay(spec.decay)
+        if spec.evict_on_overcommit:
+            for victim in ctl.enforce():
+                active.remove(int(victim.removeprefix("tenant")))
+    episode_s = time.perf_counter() - t0
+
+    active = sorted(active)
+    b_virtual = {i: ctl.tenants[name[i]].b_virtual for i in active}
+    admission: dict = {
+        "decisions": [d.to_dict() for d in ctl.log],
+        "active_tenants": list(active),
+        "tenant_names": [name[i] for i in active],
+        "b_star": {name[i]: float(b_star[i]) for i in active},
+        "b_virtual": {name[i]: float(b_virtual[i]) for i in active},
+        "capacity": float(B),
+        "committed": float(ctl.committed),
+        "committed_sla": float(ctl.committed_sla),
+        "overbooked": bool(ctl.overbooked),
+        "overbooking_gain": float(ctl.overbooking_gain),
+        "n_admitted": sum(1 for d in ctl.log if d.action == "admit"),
+        "n_rejected": sum(1 for d in ctl.log if d.action == "reject"),
+        "n_departed": sum(1 for d in ctl.log if d.action == "depart"),
+        "n_evicted": sum(1 for d in ctl.log if d.action == "evict"),
+        "n_estimation_requests": int(n_est_requests),
+        "episode_s": float(episode_s),
+    }
+
+    if not active:
+        return Report(
+            scenario=sc.to_dict(),
+            estimator=sc.estimator.kind,
+            backend="none",
+            hit_prob=np.zeros((0, N)),
+            hit_rate=np.zeros(0),
+            overall_hit_rate=0.0,
+            n_requests=0,
+            warmup=0,
+            elapsed_s=episode_s,
+            throughput_rps=0.0,
+            extras={"admission": admission},
+        )
+
+    # -- validation: final admitted set at its final virtual allocations.
+    # Integer-rounded (the engines allocate in object-length units); the
+    # exact floats stay in extras["admission"]["b_virtual"].
+    b_int = tuple(max(1, round(b_virtual[i])) for i in active)
+    admission["b_virtual_int"] = list(b_int)
+    val_wl = Workload(
+        kind="irm",
+        n_objects=N,
+        alphas=tuple(wl.alphas[i] for i in active),
+        proxy_rates=(
+            tuple(wl.proxy_rates[i] for i in active)
+            if wl.proxy_rates is not None
+            else None
+        ),
+        lengths=wl.lengths,
+    )
+    val_sys = System(
+        variant=system.variant,
+        allocations=b_int,
+        physical_capacity=B,
+        ghost_retention=system.ghost_retention,
+        backend=system.backend,
+    )
+    val_sc = Scenario(
+        name=f"{sc.name}/validation",
+        description="final admitted set at its virtual allocations",
+        workload=val_wl,
+        system=val_sys,
+        estimator=sc.estimator,
+        n_requests=sc.n_requests,
+        warmup=sc.warmup,
+        seed=sc.seed,
+    )
+    rep = run_scenario(val_sc)
+
+    # -- eq. (10) promise: each admitted tenant's hit rate under sharing
+    # at b_virtual should match a dedicated (unshared) b* cache.
+    lam_active = lam_true[np.asarray(active, dtype=np.int64)]
+    sol_star = solve_workingset_unshared(
+        lam_active, lengths, b_star[np.asarray(active, dtype=np.int64)]
+    )
+    predicted = sol_star.hit_rate
+    # Counted hits when the validation simulated (Report.realized_hit_rate
+    # semantics); the occupancy/fixed-point estimate otherwise.
+    realized = (
+        rep.realized_hit_rate
+        if rep.realized_hit_rate is not None
+        else rep.hit_rate
+    )
+    admission["predicted_sla_hit_rate"] = [float(x) for x in predicted]
+    admission["realized_hit_rate"] = [float(x) for x in realized]
+    admission["estimated_hit_rate"] = [float(x) for x in rep.hit_rate]
+    gaps = np.asarray(realized) - np.asarray(predicted)
+    admission["max_abs_sla_gap"] = float(np.max(np.abs(gaps)))
+    admission["min_sla_margin"] = float(np.min(gaps))
+    return dataclasses.replace(
+        rep,
+        scenario=sc.to_dict(),
+        extras={**rep.extras, "admission": admission},
     )

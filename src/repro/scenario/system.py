@@ -1,11 +1,14 @@
 """The System and Estimator axes of a :class:`repro.scenario.Scenario`.
 
 :class:`System` declares the cache under test — sharing variant, virtual
-allocations, RRE configuration, ghost retention, and which execution
-backend runs it. :class:`Estimator` declares how hit probabilities are
-obtained: Monte-Carlo simulation or the working-set fixed point of paper
-Section IV. Both are plain frozen dataclasses that round-trip through
-JSON, so an experiment is reproducible from its artifact alone.
+allocations, RRE configuration, ghost retention, which execution backend
+runs it, and (optionally) an online :class:`AdmissionSpec` that turns
+the static per-proxy allocations into SLA targets managed by the
+Section IV-C admission controller. :class:`Estimator` declares how hit
+probabilities are obtained: Monte-Carlo simulation or the working-set
+fixed point of paper Section IV. All three are plain frozen dataclasses
+that round-trip through JSON, so an experiment is reproducible from its
+artifact alone.
 """
 
 from __future__ import annotations
@@ -27,15 +30,125 @@ ESTIMATORS = ("monte_carlo", "working_set")
 
 
 @dataclass(frozen=True)
+class AdmissionSpec:
+    """Online admission-control configuration (paper Section IV-C).
+
+    Attaching an ``AdmissionSpec`` to a :class:`System` reinterprets the
+    system's ``allocations`` as per-tenant **SLA allocations** ``b*``
+    (the memory each tenant was sold, unshared-equivalent) and requires
+    an explicit ``physical_capacity`` ``B`` — the point of overbooking
+    is ``sum b* > B``. The scenario runner then replays the workload's
+    tenant-churn event stream through an
+    :class:`~repro.core.admission.AdmissionController`: arrivals are
+    admitted or rejected by the conservative eq. (13) test, popularity
+    estimates stream in per round, virtual allocations are recomputed
+    via the eq. (10) working-set mapping, departures trigger the
+    footnote-1 recomputation, and overcommitment evicts the most
+    recently admitted tenants.
+
+    Fields
+    ------
+    attribution:
+        Length-attribution model used for the eq. (10) virtual-
+        allocation evaluation — one of ``L1`` (exact eq. (5)),
+        ``Lstar`` (eq. (14)), ``L2`` (eq. (15)).
+    safety_margin:
+        Fraction of ``B`` held back from the eq. (13) headroom test
+        (``headroom = B * (1 - safety_margin) - committed``); guards the
+        estimate-driven refresh against popularity-estimation noise.
+    laplace:
+        Laplace smoothing added to the per-round popularity estimates
+        (see :meth:`repro.core.irm.PopularityEstimator.rates`).
+    decay:
+        Exponential forgetting factor applied to the popularity counts
+        once per round (1.0 = never forget — the stationary-IRM
+        default; < 1 tracks non-stationary demand).
+    refresh_on_reject:
+        When an arrival fails the conservative test, refresh the
+        virtual allocations from the current estimates (freeing the
+        sharing surplus) and retry the admission once — the paper's
+        intended use of the working-set approximation ("to facilitate
+        admission control").
+    evict_on_overcommit:
+        Run :meth:`~repro.core.admission.AdmissionController.enforce`
+        after every refresh, evicting most-recently-admitted tenants
+        while the total virtual commitment exceeds
+        ``B * (1 - safety_margin)`` (only reachable after departures
+        make the survivors' allocations regrow).
+    """
+
+    attribution: str = "L1"
+    safety_margin: float = 0.0
+    laplace: float = 0.0
+    decay: float = 1.0
+    refresh_on_reject: bool = True
+    evict_on_overcommit: bool = True
+
+    def __post_init__(self) -> None:
+        # "full" is excluded: without a sharing term, eq. (10) returns
+        # b = b* exactly and the controller degenerates to static
+        # partitioning — never what an admission spec means.
+        shared = tuple(a for a in ATTRIBUTIONS if a != "full")
+        if self.attribution not in shared:
+            raise ValueError(
+                f"unknown admission attribution {self.attribution!r}; "
+                f"options: {shared}"
+            )
+        if not 0.0 <= self.safety_margin < 1.0:
+            raise ValueError("safety_margin must be in [0, 1)")
+        if not 0.0 <= self.decay <= 1.0:
+            raise ValueError("decay must be in [0, 1]")
+        if self.laplace < 0.0:
+            raise ValueError("laplace must be nonnegative")
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+    @staticmethod
+    def from_dict(d: dict) -> "AdmissionSpec":
+        return AdmissionSpec(**d)
+
+
+@dataclass(frozen=True)
 class System:
     """Declarative cache-system configuration.
 
-    ``slack_frac`` > 0 derives RRE ripple allocations
-    ``b_hat = ceil(b * (1 + slack_frac))`` (paper Section IV-D) unless an
-    explicit ``ripple_allocations`` overrides it; ``batch_interval`` adds
-    the delayed-batch-eviction mechanism. ``physical_capacity`` defaults
-    to ``sum(allocations)`` (or ``sum(b_hat)`` when slack is configured,
-    so the slack is actually backed by memory).
+    Fields
+    ------
+    variant:
+        ``lru`` — the paper's flat shared LRU-lists (Section III);
+        ``slru`` — memcached-style Segmented LRU under sharing
+        (Section VII); ``noshare`` — independent full-length-charging
+        LRUs (the Table III baseline); ``pooled`` — one collective LRU
+        over the merged demand.
+    allocations:
+        Per-proxy virtual allocations ``b_i`` (in object-length units).
+        With ``admission`` set these are the per-tenant *SLA* targets
+        ``b*`` instead, and the runner manages the actual virtual
+        allocations online.
+    physical_capacity:
+        Physical cache size ``B``. Defaults to ``sum(allocations)`` (or
+        ``sum(b_hat)`` when slack is configured, so the slack is
+        actually backed by memory). Required explicitly when
+        ``admission`` is set.
+    ghost_retention:
+        Keep evicted-from-list objects resident while another list still
+        holds them (the paper's ghost semantics).
+    slack_frac / ripple_allocations / batch_interval:
+        RRE (Section IV-D): ``slack_frac`` > 0 derives ripple thresholds
+        ``b_hat = ceil(b * (1 + slack_frac))`` unless an explicit
+        ``ripple_allocations`` overrides it; ``batch_interval`` > 0 adds
+        delayed batch eviction every that-many set operations.
+    hot_frac / warm_frac:
+        S-LRU segment split (``variant="slru"`` only).
+    backend:
+        Execution engine: ``auto`` (C loop when a compiler exists, else
+        the inlined Python loop), ``c``, ``flat``, ``generic``, ``xla``,
+        or ``reference`` (the hookable executable-spec classes — slow,
+        small runs and debugging only).
+    admission:
+        Optional :class:`AdmissionSpec` enabling the online Section
+        IV-C admission-control loop (tenant-churn workloads only).
     """
 
     variant: str = "lru"
@@ -48,6 +161,7 @@ class System:
     hot_frac: float = 0.32
     warm_frac: float = 0.32
     backend: str = "auto"
+    admission: Optional[AdmissionSpec] = None
 
     def __post_init__(self) -> None:
         if self.variant not in VARIANTS:
@@ -62,6 +176,18 @@ class System:
             raise ValueError("system needs per-proxy allocations")
         if self.slack_frac < 0:
             raise ValueError("slack_frac must be nonnegative")
+        if self.admission is not None:
+            if self.physical_capacity is None:
+                raise ValueError(
+                    "admission-controlled systems need an explicit "
+                    "physical_capacity (allocations are SLA targets; "
+                    "overbooking means sum b* > B)"
+                )
+            if self.variant != "lru":
+                raise ValueError(
+                    "admission control models the flat shared-LRU "
+                    "system (variant='lru')"
+                )
 
     @property
     def n_proxies(self) -> int:
@@ -123,6 +249,8 @@ class System:
         for key in ("allocations", "ripple_allocations"):
             if d.get(key) is not None:
                 d[key] = tuple(d[key])
+        if d.get("admission") is not None:
+            d["admission"] = AdmissionSpec.from_dict(d["admission"])
         return System(**d)
 
 
@@ -135,16 +263,37 @@ class Estimator:
     paper's eq. (8) fixed point under the selected length-attribution
     model — no trace, milliseconds instead of minutes, approximate.
 
-    ``streaming`` controls the Monte-Carlo memory mode: ``True`` feeds
-    the trace through the engine in ``chunk_size`` pieces
-    (``Workload.iter_chunks`` -> ``fastsim.simulate_chunks``) and
-    reports occupancy as a sparse touched-set, so peak memory is
-    O(chunk + engine state) instead of O(n_requests + J*N); ``False``
-    forces the one-shot dense path; ``None`` (default) picks streaming
-    automatically once ``n_requests * J`` or ``J * n_objects`` crosses
-    the runner's thresholds (the Section VI-C full-catalogue regime).
-    Results are bit-identical either way — streaming only changes the
-    memory footprint and the occupancy representation.
+    Fields
+    ------
+    kind:
+        ``monte_carlo`` or ``working_set``.
+    attribution:
+        Working-set length-attribution model: ``L1`` (exact eq. (5)
+        expectation), ``Lstar`` (eq. (14) Jensen bound), ``L2``
+        (eq. (15)), or ``full`` (classical Denning-Schwartz, no
+        sharing). Ignored by ``monte_carlo``.
+    n_quad:
+        Gauss-Legendre nodes for the exact L1 expectation (default
+        ``max(8, ceil((J+1)/2))`` — exact for the degree-(J-1)
+        polynomial integrand).
+    n_outer / n_bisect / damping / tol:
+        Fixed-point solver knobs: damped-Jacobi outer iterations, inner
+        bisection steps per proxy, damping factor, and relative
+        convergence tolerance on the characteristic times.
+    streaming:
+        Monte-Carlo memory mode. ``True`` feeds the trace through the
+        engine in ``chunk_size`` pieces (``Workload.iter_chunks`` ->
+        ``fastsim.simulate_chunks``) and reports occupancy as a sparse
+        touched-set, so peak memory is O(chunk + engine state) instead
+        of O(n_requests + J*N); ``False`` forces the one-shot dense
+        path; ``None`` (default) picks streaming automatically once
+        ``n_requests * J >= 12M`` or ``J * n_objects >= 4M`` (the
+        runner's ``STREAMING_REQUEST_CELLS`` / ``STREAMING_STATE_CELLS``
+        thresholds — the Section VI-C full-catalogue regime). Results
+        are bit-identical either way — streaming only changes the
+        memory footprint and the occupancy representation.
+    chunk_size:
+        Requests per streamed chunk (streaming mode only).
     """
 
     kind: str = "monte_carlo"

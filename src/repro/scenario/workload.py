@@ -15,6 +15,14 @@ object-size population that drive an experiment:
 * ``kind="trace"`` — explicit replay of a recorded (proxy, object)
   stream; request rates for the analytic estimator are recovered
   empirically from the trace itself.
+* ``kind="tenant_churn"`` — a multi-tenant *episode* for the Section
+  IV-C admission-control runner: each entry of ``alphas`` is one
+  prospective tenant, and ``tenant_events`` is a stream of
+  ``(round, "arrive" | "depart", tenant)`` events. Each round, the
+  active tenants generate ``round_requests`` IRM requests that feed the
+  operator's online popularity estimates. Requires
+  ``System(admission=...)`` — the event stream is driven by the
+  admission runner, not by ``sample()``.
 
 Object lengths come from a :class:`LengthSpec` (unit, fixed, Zipf-ranked,
 lognormal, or explicit), sampled deterministically from the scenario
@@ -25,7 +33,7 @@ from __future__ import annotations
 
 from dataclasses import asdict, dataclass, field, replace
 from functools import cached_property
-from typing import Iterator, Optional, Tuple
+from typing import Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
 
@@ -37,7 +45,8 @@ from repro.core.irm import (
 )
 
 LENGTH_KINDS = ("unit", "fixed", "zipf", "lognormal", "explicit")
-WORKLOAD_KINDS = ("irm", "shot_noise", "trace")
+WORKLOAD_KINDS = ("irm", "shot_noise", "trace", "tenant_churn")
+TENANT_ACTIONS = ("arrive", "depart")
 
 
 @dataclass(frozen=True)
@@ -98,7 +107,44 @@ class LengthSpec:
 
 @dataclass(frozen=True)
 class Workload:
-    """Declarative request process over ``n_objects`` shared objects."""
+    """Declarative request process over ``n_objects`` shared objects.
+
+    Fields
+    ------
+    kind:
+        ``irm``, ``shot_noise``, ``trace``, or ``tenant_churn`` (see the
+        module docstring for the semantics of each).
+    n_objects:
+        Catalogue size N; all proxies draw from the same object ranking
+        (that is what makes objects shareable).
+    alphas:
+        Per-proxy Zipf exponents — one entry per proxy (``irm`` /
+        ``shot_noise``) or per prospective tenant (``tenant_churn``).
+    proxy_rates:
+        Optional per-proxy total request-rate scaling (default: every
+        proxy has rate 1, the paper's normalized setting).
+    lengths:
+        Object-size population (:class:`LengthSpec`), sampled
+        deterministically from the scenario seed.
+    phase_requests / phase_shift:
+        ``shot_noise`` only — stationary-phase length (requests) and
+        per-phase popularity-rank rotation.
+    trace_proxies / trace_objects / trace_proxy_count:
+        ``trace`` replay only — the recorded (proxy, object) stream;
+        ``trace_proxy_count`` declares the true number of proxies when
+        the highest-numbered ones are silent in the recording (default:
+        max observed id + 1).
+    tenant_events:
+        ``tenant_churn`` only — tuple of ``(round, action, tenant)``
+        events with ``action`` in ``("arrive", "depart")``; defaults to
+        every tenant arriving at round 0. Each tenant arrives at most
+        once and may depart at most once, strictly after its arrival
+        round.
+    round_requests:
+        ``tenant_churn`` only — estimation requests sampled from the
+        active tenants each round (the traffic the operator's
+        :class:`~repro.core.irm.PopularityEstimator` sees).
+    """
 
     kind: str = "irm"
     n_objects: int = 1000
@@ -114,6 +160,10 @@ class Workload:
     trace_proxies: Optional[Tuple[int, ...]] = None
     trace_objects: Optional[Tuple[int, ...]] = None
     trace_proxy_count: Optional[int] = None
+    # tenant_churn only: (round, action, tenant) events + estimation
+    # traffic per round
+    tenant_events: Optional[Tuple[Tuple[int, str, int], ...]] = None
+    round_requests: int = 0
 
     def __post_init__(self) -> None:
         if self.kind not in WORKLOAD_KINDS:
@@ -128,6 +178,10 @@ class Workload:
             raise ValueError(
                 "shot_noise needs phase_requests >= 1 and phase_shift >= 1"
             )
+        if self.kind == "tenant_churn":
+            if self.round_requests < 1:
+                raise ValueError("tenant_churn needs round_requests >= 1")
+            self._check_tenant_events()
         if self.kind == "trace":
             if self.trace_proxies is None or self.trace_objects is None:
                 raise ValueError("trace workload needs trace_proxies/objects")
@@ -159,6 +213,41 @@ class Workload:
         elif not self.alphas:
             raise ValueError("need at least one proxy alpha")
 
+    def _check_tenant_events(self) -> None:
+        """Validate the tenant_churn event stream at construction."""
+        T = len(self.alphas)
+        arrived: Dict[int, int] = {}
+        departed: Dict[int, int] = {}
+        for ev in self.events():
+            r, action, tenant = ev
+            if action not in TENANT_ACTIONS:
+                raise ValueError(
+                    f"unknown tenant action {action!r}; "
+                    f"options: {TENANT_ACTIONS}"
+                )
+            if not 0 <= tenant < T:
+                raise ValueError(
+                    f"tenant id {tenant} out of range [0, {T})"
+                )
+            if r < 0:
+                raise ValueError("event rounds must be nonnegative")
+            if action == "arrive":
+                if tenant in arrived:
+                    raise ValueError(f"tenant {tenant} arrives twice")
+                arrived[tenant] = r
+            else:
+                if tenant in departed:
+                    raise ValueError(f"tenant {tenant} departs twice")
+                # strictly after the arrival round: a same-round pair
+                # would be reordered by events_by_round (departures
+                # first) and the departure silently dropped.
+                if tenant not in arrived or r <= arrived[tenant]:
+                    raise ValueError(
+                        f"tenant {tenant} must depart in a later round "
+                        "than it arrives"
+                    )
+                departed[tenant] = r
+
     # ------------------------------------------------------------------
     @property
     def n_proxies(self) -> int:
@@ -167,6 +256,37 @@ class Workload:
                 return int(self.trace_proxy_count)
             return int(max(self.trace_proxies)) + 1 if self.trace_proxies else 1
         return len(self.alphas)
+
+    # -- tenant_churn episode structure --------------------------------
+    def events(self) -> Tuple[Tuple[int, str, int], ...]:
+        """The normalized tenant-event stream, sorted by round (stable:
+        ties keep their declared order). Default: every tenant arrives
+        at round 0."""
+        if self.tenant_events is None:
+            return tuple((0, "arrive", t) for t in range(len(self.alphas)))
+        return tuple(
+            sorted(
+                ((int(r), a, int(t)) for r, a, t in self.tenant_events),
+                key=lambda ev: ev[0],
+            )
+        )
+
+    @property
+    def n_rounds(self) -> int:
+        """Number of episode rounds (last event round + 1)."""
+        evs = self.events()
+        return (max(ev[0] for ev in evs) + 1) if evs else 0
+
+    def events_by_round(self) -> Dict[int, List[Tuple[str, int]]]:
+        """{round: [(action, tenant), ...]} with departures ordered
+        before arrivals inside each round (departures free headroom the
+        same-round arrivals may need)."""
+        out: Dict[int, List[Tuple[str, int]]] = {}
+        for r, action, tenant in self.events():
+            out.setdefault(r, []).append((action, tenant))
+        for evs in out.values():
+            evs.sort(key=lambda e: 0 if e[0] == "depart" else 1)
+        return out
 
     def rates(self) -> np.ndarray:
         """(J, N) stationary request-rate matrix.
@@ -255,6 +375,12 @@ class Workload:
         return t
 
     def _sample(self, n_requests: int, seed: int) -> IRMTrace:
+        if self.kind == "tenant_churn":
+            raise ValueError(
+                "tenant_churn workloads are driven round-by-round by the "
+                "admission runner (System(admission=...)); they have no "
+                "single merged trace"
+            )
         if self.kind == "trace":
             P = np.asarray(self.trace_proxies, dtype=np.int32)
             O = np.asarray(self.trace_objects, dtype=np.int64)
@@ -273,6 +399,11 @@ class Workload:
     ) -> Iterator[IRMTrace]:
         """Stream the same trace as :meth:`sample` in bounded-memory
         chunks (see :func:`repro.core.irm.sample_trace_chunks`)."""
+        if self.kind == "tenant_churn":
+            raise ValueError(
+                "tenant_churn workloads are driven round-by-round by the "
+                "admission runner; they have no single merged trace"
+            )
         if self.kind == "trace":
             P = np.asarray(self.trace_proxies, dtype=np.int32)
             O = np.asarray(self.trace_objects, dtype=np.int64)
@@ -316,6 +447,10 @@ class Workload:
             kw["phase_requests"] = max(
                 1, round(self.phase_requests * requests)
             )
+        if requests != 1.0 and self.kind == "tenant_churn":
+            kw["round_requests"] = max(
+                1, round(self.round_requests * requests)
+            )
         return replace(self, **kw) if kw else self
 
     def to_dict(self) -> dict:
@@ -332,4 +467,8 @@ class Workload:
         for key in ("alphas", "proxy_rates", "trace_proxies", "trace_objects"):
             if d.get(key) is not None:
                 d[key] = tuple(d[key])
+        if d.get("tenant_events") is not None:
+            d["tenant_events"] = tuple(
+                (int(r), str(a), int(t)) for r, a, t in d["tenant_events"]
+            )
         return Workload(lengths=LengthSpec(**lengths), **d)

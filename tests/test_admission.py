@@ -1,0 +1,332 @@
+"""Admission control (paper Section IV-C): controller edge cases and the
+online tenant-churn scenario path.
+
+Covers the eq. (13) boundary (admit at *exactly* the available
+headroom), departure releasing virtual allocations (footnote 1:
+survivors' minimal allocations regrow), monotonicity of the eq. (10)
+virtual allocations in the SLA targets b*, LIFO eviction on
+overcommitment, and the scenario-level episode: declarative
+tenant-churn workloads, JSON round-trip, and realized-vs-predicted SLA
+hit-rate agreement.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    AdmissionController,
+    rate_matrix,
+    virtual_allocations,
+    virtual_footprint,
+)
+from repro.scenario import (
+    AdmissionSpec,
+    Estimator,
+    Scenario,
+    System,
+    Workload,
+    get_preset,
+)
+
+N = 400
+
+
+def tenant_rates(J, base=0.9):
+    return rate_matrix(N, [base + 0.02 * i for i in range(J)])
+
+
+# ---------------------------------------------------------------------------
+# virtual_allocations (eq. (10))
+# ---------------------------------------------------------------------------
+def test_virtual_allocations_below_sla_and_footprint_identity():
+    lam = tenant_rates(3)
+    lengths = np.ones(N)
+    b_star = np.array([30.0, 30.0, 30.0])
+    b, sol_star = virtual_allocations(lam, lengths, b_star)
+    # Sharing strictly helps for overlapping Zipf tenants.
+    assert np.all(b < b_star)
+    # b is exactly the eq. (4) footprint at the unshared solution.
+    np.testing.assert_allclose(
+        b, virtual_footprint(sol_star.h, lengths), rtol=1e-12
+    )
+    # Unshared footprint with "full" attribution recovers b* itself.
+    np.testing.assert_allclose(
+        virtual_footprint(sol_star.h, lengths, attribution="full"),
+        b_star,
+        rtol=1e-3,
+    )
+
+
+def test_virtual_allocations_monotone_in_b_star():
+    """eq. (10): larger SLA targets need larger virtual allocations."""
+    lam = tenant_rates(3)
+    lengths = np.ones(N)
+    prev = None
+    for scale in (10.0, 20.0, 40.0, 80.0):
+        b, _ = virtual_allocations(lam, lengths, np.full(3, scale))
+        if prev is not None:
+            assert np.all(b > prev)
+        assert np.all(b <= scale + 1e-9)
+        prev = b
+
+
+def test_virtual_allocations_single_tenant_is_identity():
+    """No sharing partner: the minimal virtual allocation is b* itself."""
+    lam = tenant_rates(1)
+    b, _ = virtual_allocations(lam, np.ones(N), np.array([25.0]))
+    assert b[0] == pytest.approx(25.0, rel=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# AdmissionController edges
+# ---------------------------------------------------------------------------
+def test_admit_at_exact_capacity_boundary():
+    """eq. (13) is `<=`: a tenant asking for exactly the headroom is
+    admitted; one epsilon more is rejected."""
+    ctl = AdmissionController(100.0, np.ones(N))
+    assert ctl.admit("a", 60.0).admitted
+    d = ctl.admit("b", 40.0)  # headroom is now exactly 40
+    assert d.admitted and d.headroom_before == pytest.approx(40.0)
+    assert ctl.headroom() == pytest.approx(0.0)
+    d = ctl.admit("c", 1e-6)
+    assert not d.admitted and d.action == "reject"
+    # The log recorded all three decisions in order.
+    assert [x.action for x in ctl.log] == ["admit", "admit", "reject"]
+
+
+def test_departure_releases_virtual_allocation_and_regrows_survivors():
+    lam = tenant_rates(3)
+    ctl = AdmissionController(120.0, np.ones(N))
+    for i, nm in enumerate("abc"):
+        assert ctl.admit(nm, 40.0).admitted
+        ctl.observe(nm, lam[i])
+    ctl.refresh()
+    shrunk = ctl.allocations()
+    assert all(b < 40.0 for b in shrunk.values())
+    committed_3 = ctl.committed
+
+    ctl.depart("a")
+    assert "a" not in ctl.tenants
+    # Departure released a's allocation...
+    assert ctl.committed < committed_3
+    # ...but the survivors' minimal allocations REGREW (footnote 1):
+    # fewer sharing partners -> larger per-tenant footprint.
+    after = ctl.allocations()
+    assert after["b"] > shrunk["b"] and after["c"] > shrunk["c"]
+    assert all(b <= 40.0 + 1e-9 for b in after.values())
+
+    # Lone survivor: minimal allocation is exactly b*.
+    ctl.depart("b")
+    assert ctl.allocations()["c"] == pytest.approx(40.0)
+
+
+def test_refresh_never_grows_past_sla_and_frees_headroom():
+    lam = tenant_rates(4)
+    ctl = AdmissionController(200.0, np.ones(N))
+    for i, nm in enumerate("abcd"):
+        assert ctl.admit(nm, 45.0).admitted
+        ctl.observe(nm, lam[i])
+    head_before = ctl.headroom()
+    ctl.refresh()
+    assert ctl.headroom() > head_before
+    assert all(b <= 45.0 for b in ctl.allocations().values())
+    assert ctl.overbooking_gain > 1.0
+
+
+def test_enforce_evicts_lifo_on_overcommit():
+    """Shrinking capacity below the commitment evicts the most recently
+    admitted tenant first (earliest admissions keep their SLAs)."""
+    ctl = AdmissionController(100.0, np.ones(N))
+    for nm, b in (("first", 40.0), ("second", 30.0), ("third", 30.0)):
+        assert ctl.admit(nm, b).admitted
+    ctl.B = 75.0  # capacity shock: committed 100 > 75
+    evicted = ctl.enforce()
+    assert evicted == ["third"]
+    assert set(ctl.tenants) == {"first", "second"} and ctl.headroom() >= 0
+    assert ctl.log[-1].action == "evict"
+
+
+def test_double_admit_rejected():
+    ctl = AdmissionController(100.0, np.ones(N))
+    ctl.admit("a", 10.0)
+    with pytest.raises(ValueError, match="already admitted"):
+        ctl.admit("a", 10.0)
+
+
+# ---------------------------------------------------------------------------
+# tenant_churn workload validation
+# ---------------------------------------------------------------------------
+def test_tenant_events_validation():
+    ok = Workload(
+        kind="tenant_churn",
+        n_objects=N,
+        alphas=(0.9, 1.0),
+        tenant_events=((0, "arrive", 0), (1, "arrive", 1), (2, "depart", 0)),
+        round_requests=100,
+    )
+    assert ok.n_rounds == 3
+    assert ok.events_by_round()[2] == [("depart", 0)]
+    with pytest.raises(ValueError, match="round_requests"):
+        Workload(kind="tenant_churn", alphas=(0.9,), n_objects=N)
+    with pytest.raises(ValueError, match="must depart in a later round"):
+        Workload(
+            kind="tenant_churn",
+            n_objects=N,
+            alphas=(0.9, 1.0),
+            tenant_events=((0, "depart", 0),),
+            round_requests=100,
+        )
+    # Same-round arrive+depart is rejected too: events_by_round orders
+    # departures first, so the pair would silently never depart.
+    with pytest.raises(ValueError, match="must depart in a later round"):
+        Workload(
+            kind="tenant_churn",
+            n_objects=N,
+            alphas=(0.9, 1.0),
+            tenant_events=((1, "arrive", 0), (1, "depart", 0)),
+            round_requests=100,
+        )
+    with pytest.raises(ValueError, match="arrives twice"):
+        Workload(
+            kind="tenant_churn",
+            n_objects=N,
+            alphas=(0.9,),
+            tenant_events=((0, "arrive", 0), (1, "arrive", 0)),
+            round_requests=100,
+        )
+    with pytest.raises(ValueError, match="out of range"):
+        Workload(
+            kind="tenant_churn",
+            n_objects=N,
+            alphas=(0.9,),
+            tenant_events=((0, "arrive", 5),),
+            round_requests=100,
+        )
+    # default events: everyone arrives at round 0
+    wl = Workload(
+        kind="tenant_churn", n_objects=N, alphas=(0.9, 1.0), round_requests=10
+    )
+    assert wl.events() == ((0, "arrive", 0), (0, "arrive", 1))
+    with pytest.raises(ValueError, match="admission runner"):
+        wl.sample(100, seed=0)
+
+
+def test_tenant_churn_requires_admission_system():
+    wl = Workload(
+        kind="tenant_churn", n_objects=N, alphas=(0.9, 1.0), round_requests=10
+    )
+    sc = Scenario(
+        name="x",
+        workload=wl,
+        system=System(allocations=(20, 20), physical_capacity=100),
+        n_requests=1000,
+    )
+    with pytest.raises(ValueError, match="admission"):
+        sc.run()
+    # ... and admission systems need an explicit physical capacity.
+    with pytest.raises(ValueError, match="physical_capacity"):
+        System(allocations=(20, 20), admission=AdmissionSpec())
+    # "full" attribution would make eq. (10) the identity b = b* —
+    # admission degenerates to static partitioning, so it is rejected.
+    with pytest.raises(ValueError, match="admission attribution"):
+        AdmissionSpec(attribution="full")
+
+
+# ---------------------------------------------------------------------------
+# The online episode end to end
+# ---------------------------------------------------------------------------
+def episode_scenario(**kw):
+    defaults = dict(
+        name="episode",
+        workload=Workload(
+            kind="tenant_churn",
+            n_objects=N,
+            alphas=(0.9, 0.92, 0.94, 0.96),
+            tenant_events=(
+                (0, "arrive", 0),
+                (1, "arrive", 1),
+                (2, "arrive", 2),
+                (3, "depart", 0),
+                (4, "arrive", 3),
+            ),
+            round_requests=20_000,
+        ),
+        system=System(
+            allocations=(40, 40, 40, 40),
+            physical_capacity=110,
+            admission=AdmissionSpec(),
+        ),
+        estimator=Estimator("monte_carlo"),
+        n_requests=60_000,
+        seed=11,
+    )
+    defaults.update(kw)
+    return Scenario(**defaults)
+
+
+def test_admission_episode_runs_and_validates():
+    rep = episode_scenario().run()
+    adm = rep.extras["admission"]
+    # B=110 fits two b*=40 tenants conservatively; sharing admits a 3rd
+    # after refresh; the departure then makes room for tenant 3.
+    assert adm["overbooked"]
+    assert adm["overbooking_gain"] > 1.0
+    assert adm["committed"] <= adm["capacity"] + 1e-9
+    n_active = len(adm["active_tenants"])
+    assert n_active >= 3 > int(adm["capacity"]) // 40
+    # the validation report is the final admitted set
+    assert rep.hit_rate.shape == (n_active,)
+    assert rep.hit_prob.shape == (n_active, N)
+    # eq. (10) promise: realized ~= predicted per tenant
+    pred = np.asarray(adm["predicted_sla_hit_rate"])
+    real = np.asarray(adm["realized_hit_rate"])
+    assert pred.shape == real.shape == (n_active,)
+    assert adm["max_abs_sla_gap"] == pytest.approx(
+        float(np.max(np.abs(real - pred)))
+    )
+    assert adm["max_abs_sla_gap"] < 0.05
+    # decision log covers the episode
+    actions = [d["action"] for d in adm["decisions"]]
+    assert "admit" in actions and "depart" in actions
+
+
+def test_admission_episode_json_round_trip():
+    sc = episode_scenario()
+    clone = Scenario.from_json(sc.to_json())
+    assert clone == sc
+    rep1, rep2 = sc.run(), clone.run()
+    assert rep1.same_estimates(rep2)
+    # identical episodes, wall clock excluded (timing is not identity)
+    strip = lambda adm: {k: v for k, v in adm.items() if k != "episode_s"}
+    assert strip(rep1.extras["admission"]) == strip(rep2.extras["admission"])
+
+
+def test_admission_episode_working_set_validation():
+    """Estimator interchangeability holds for admission scenarios too."""
+    mc = episode_scenario().run()
+    ws = episode_scenario(estimator=Estimator("working_set")).run()
+    assert ws.converged
+    # identical episodes (the controller path does not depend on the
+    # validation estimator) ...
+    assert (
+        mc.extras["admission"]["decisions"]
+        == ws.extras["admission"]["decisions"]
+    )
+    assert (
+        mc.extras["admission"]["b_virtual"]
+        == ws.extras["admission"]["b_virtual"]
+    )
+    # ... and agreeing validations.
+    np.testing.assert_allclose(ws.hit_rate, mc.hit_rate, atol=0.03)
+
+
+def test_admission_preset_scales_and_runs():
+    sc = get_preset("admission_overbooking").scaled(requests=0.005)
+    assert sc.workload.round_requests == 1000
+    rep = sc.run()
+    adm = rep.extras["admission"]
+    # The headline claim: more tenants than static partitioning fits.
+    assert len(adm["active_tenants"]) > int(
+        adm["capacity"] // max(adm["b_star"].values())
+    )
+    assert adm["overbooked"] and adm["overbooking_gain"] > 1.3

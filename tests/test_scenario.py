@@ -75,6 +75,7 @@ def test_all_presets_serializable_and_scalable():
     assert {
         "table1", "table2_ws", "table3_noshare", "fig2_ripple",
         "rre", "slru", "j2_bounds", "shot_noise", "quickstart",
+        "admission_overbooking",
     } <= set(names)
     for name in names:
         sc = get_preset(name)
