@@ -10,6 +10,8 @@ interchangeable views of the same experiment.
 
 from __future__ import annotations
 
+import dataclasses
+
 import numpy as np
 
 from repro.scenario import get_preset
@@ -18,14 +20,26 @@ from .common import RANKS, Timer, csv_row, save_artifact, section5_scale
 
 
 def main() -> dict:
+    replications = 4
     sc = get_preset("j2_bounds").scaled(*section5_scale())
+    sc = dataclasses.replace(
+        sc,
+        estimator=dataclasses.replace(
+            sc.estimator, replications=replications
+        ),
+    )
     n_requests = sc.n_requests
 
     with Timer() as tm:
         sim = sc.run()
     # densify: at REPRO_FULL the run auto-streams (sparse occupancy) and
-    # the head-rank bias below slices the (J, N) matrix (N=1000)
+    # the head-rank bias below slices the (J, N) matrix (N=1000).
+    # With replications this is the cross-replica mean trajectory.
     h_sim = sim.dense_hit_prob()
+    try:
+        h_std = sim.hit_prob_std()
+    except ValueError:  # sparse ensemble: per-object stack not retained
+        h_std = None
 
     sols = {
         kind: sc.with_estimator("working_set", attribution=kind).run()
@@ -40,6 +54,11 @@ def main() -> dict:
         hs = h_sim[i, head]
         rows[i] = {
             "sim": sim.hit_prob_at_ranks(i, RANKS),
+            **(
+                {"sim_std": [float(h_std[i, r - 1]) for r in RANKS]}
+                if h_std is not None
+                else {}
+            ),
             **{
                 kind: rep.hit_prob_at_ranks(i, RANKS)
                 for kind, rep in sols.items()
@@ -59,6 +78,7 @@ def main() -> dict:
     payload = {
         "preset": "j2_bounds",
         "scenario": sc.to_dict(),
+        "replications": replications,
         "rows": rows,
         "L1_underestimates": l1_under,
         "L2_over_or_upper": l2_over,

@@ -112,6 +112,78 @@ def bench_workload(name, scenarios, ref_cap):
     }
 
 
+def bench_xla_ensemble(quick: bool) -> dict:
+    """Batched R-replica XLA ensemble vs R sequential single-replica
+    XLA runs (the ISSUE-5 acceptance measurement).
+
+    Both sides exclude compilation (the chunk runners AOT-compile
+    outside the timed region) and replica 0 of the batch is asserted
+    bit-identical to the single-run driver — the benchmark *fails* if
+    the ensemble ever drifts from the reference trajectory.
+    """
+    from repro.core.fastsim import default_warmup, simulate_trace
+    from repro.core.fastsim_jax import simulate_ensemble
+    from repro.scenario.runner import derive_seeds, ensemble_seeds
+
+    R = 8
+    sc = get_preset("table1", b=(64, 64, 64)).scaled(
+        0.004 if quick else (0.02 if not FULL else 0.05), 1.0
+    )
+    n = sc.n_requests
+    params = sc.system.to_sim_params()
+    N = sc.workload.n_objects
+    warmup = default_warmup(n, sc.system.allocations)
+    trace_seed, _ = derive_seeds(sc.seed)
+    traces = [
+        sc.workload.sample(n, s) for s in ensemble_seeds(trace_seed, R)
+    ]
+
+    # no warm-up pass needed: the runners AOT-compile outside the timed
+    # region (elapsed provably excludes compilation — see
+    # tests/test_ensemble.py::test_chunk_runner_compiles_once...), and
+    # the global executable cache makes the 8 sequential runs compile
+    # once, not eight times
+    singles = [
+        simulate_trace(params, t, N, warmup=warmup, engine="xla")
+        for t in traces
+    ]
+    seq_s = sum(r.elapsed_s for r in singles)
+    ens = simulate_ensemble(params, traces, N, warmup=warmup)
+    bat_s = ens[0].elapsed_s
+
+    r0, s0 = ens[0], singles[0]
+    identical = bool(
+        np.array_equal(r0.dense_occupancy(), s0.dense_occupancy())
+        and np.array_equal(r0.final_vlen, s0.final_vlen)
+        and np.array_equal(r0.evictions_per_set, s0.evictions_per_set)
+        and (r0.n_hit_list, r0.n_hit_cache, r0.n_miss)
+        == (s0.n_hit_list, s0.n_hit_cache, s0.n_miss)
+    )
+    if not identical:
+        raise AssertionError(
+            "batched XLA ensemble replica 0 diverged from the "
+            "single-run driver"
+        )
+    return {
+        "replications": R,
+        "n_requests_per_replica": n,
+        "sequential_elapsed_s": seq_s,
+        "batched_elapsed_s": bat_s,
+        "sequential_rps": R * n / max(seq_s, 1e-12),
+        "batched_rps": R * n / max(bat_s, 1e-12),
+        "speedup_batched_vs_sequential": seq_s / max(bat_s, 1e-12),
+        "replica0_bitidentical": identical,
+        "note": (
+            "both sides AOT-compile outside the timed region; on this "
+            "CPU the per-update cost of XLA scatters grows with the "
+            "lane count, so the batched win is bounded here — the "
+            "batched driver's payoff on CPU is one compile + one "
+            "dispatch for the whole ensemble, and the formulation "
+            "targets accelerator backends where lane updates vectorize"
+        ),
+    }
+
+
 def main() -> dict:
     quick = quick_mode()
     ref_cap = 20_000 if quick else (200_000 if not FULL else 400_000)
@@ -127,10 +199,12 @@ def main() -> dict:
         req_f, cat_f = fig2_scale_factors()
         f2_sc = get_preset("fig2_ripple").scaled(req_f / 3, cat_f)
         f2 = bench_workload("fig2_reduced", [f2_sc], ref_cap)
+        xe = bench_xla_ensemble(quick)
 
     payload = {
         "table1": t1,
         "fig2": f2,
+        "xla_ensemble": xe,
         "estimator_note": (
             "occupancy/hit statistics are bit-identical across engines on "
             "the same trace (tests/test_fastsim.py), so Table-I accuracy "
@@ -149,6 +223,13 @@ def main() -> dict:
             f"auto={agg['fastsim']:>14,.0f}  "
             f"speedup={wl['speedup_auto_vs_reference']:.1f}x"
         )
+    print(
+        f"  xla ensemble  R={xe['replications']} batched "
+        f"{xe['batched_rps']:>12,.0f} req/s vs sequential "
+        f"{xe['sequential_rps']:>12,.0f} — "
+        f"{xe['speedup_batched_vs_sequential']:.2f}x, replica-0 "
+        f"bit-identical: {xe['replica0_bitidentical']}"
+    )
     t1_speed = t1["speedup_auto_vs_reference"]
     csv_row(
         "sim_throughput_table1",

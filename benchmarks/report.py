@@ -32,6 +32,11 @@ def _prose(text: str) -> str:
 
 
 def _ranks_table(rows: dict, key: str, ranks=(1, 10, 100, 1000)) -> List[str]:
+    has_std = any(
+        f"{key}_std" in cell
+        for per_proxy in rows.values()
+        for cell in per_proxy.values()
+    )
     out = [
         "| b | proxy | " + " | ".join(f"h@{r}" for r in ranks) + " |",
         "|---|---|" + "---|" * len(ranks),
@@ -39,12 +44,22 @@ def _ranks_table(rows: dict, key: str, ranks=(1, 10, 100, 1000)) -> List[str]:
     for b, per_proxy in rows.items():
         for i, cell in per_proxy.items():
             pred, paper = cell[key], cell["paper"]
-            vals = " | ".join(
-                f"{p:.4f} ({r:.4f})" for p, r in zip(pred, paper)
-            )
+            std = cell.get(f"{key}_std")
+            if std is not None:
+                vals = " | ".join(
+                    f"{p:.4f}±{s:.4f} ({r:.4f})"
+                    for p, s, r in zip(pred, std, paper)
+                )
+            else:
+                vals = " | ".join(
+                    f"{p:.4f} ({r:.4f})" for p, r in zip(pred, paper)
+                )
             out.append(f"| {b} | {i} | {vals} |")
     out.append("")
-    out.append("(parenthesized: paper value)")
+    out.append(
+        "(parenthesized: paper value"
+        + ("; ± is the cross-replica std)" if has_std else ")")
+    )
     return out
 
 
@@ -73,11 +88,18 @@ def _scenario_note(d: dict) -> List[str]:
 
 def render_table1_sim(d: dict) -> List[str]:
     out = _scenario_note(d)
+    reps = d.get("replications", 1)
     out += [
         f"Mean relative error vs paper Table I: "
         f"**{d['mean_rel_err_vs_paper']:.4f}** over "
-        f"{d['n_requests_per_combo']:,} requests/combo "
-        f"({d.get('engine', 'fastsim')} engine, "
+        f"{d['n_requests_per_combo']:,} requests/combo"
+        + (
+            f" × {reps} independent replicas (cells are cross-replica "
+            "means ± std)"
+            if reps > 1
+            else ""
+        )
+        + f" ({d.get('engine', 'fastsim')} engine, "
         f"{d.get('engine_requests_per_sec', 0):,.0f} req/s).",
         "",
     ]
@@ -151,11 +173,38 @@ def render_table3_noshare(d: dict) -> List[str]:
 
 def render_j2_bounds(d: dict) -> List[str]:
     mb = d["mean_bias"]
+    reps = d.get("replications", 1)
+    ranks = (1, 10, 100, 1000)
+    table = [
+        "| proxy | model | " + " | ".join(f"h@{r}" for r in ranks) + " |",
+        "|---|---|" + "---|" * len(ranks),
+    ]
+    for i, row in d["rows"].items():
+        std = row.get("sim_std")
+        sim = (
+            " | ".join(
+                f"{p:.4f}±{s:.4f}" for p, s in zip(row["sim"], std)
+            )
+            if std is not None
+            else " | ".join(f"{p:.4f}" for p in row["sim"])
+        )
+        table.append(f"| {i} | sim | {sim} |")
+        for kind in ("L1", "Lstar", "L2"):
+            vals = " | ".join(f"{p:.4f}" for p in row[kind])
+            table.append(f"| {i} | {kind} | {vals} |")
     return _scenario_note(d) + [
         f"L1 underestimates: **{d['L1_underestimates']}** "
         f"(mean head-rank bias {mb['L1']:+.3f}); "
         f"L2 upper bound: **{d['L2_over_or_upper']}** "
-        f"(mean bias {mb['L2']:+.3f}).",
+        f"(mean bias {mb['L2']:+.3f})."
+        + (
+            f" Simulated rows are means over {reps} independent "
+            "replicas (± is the cross-replica std)."
+            if reps > 1
+            else ""
+        ),
+        "",
+        *table,
         "",
         "### Reproduction discrepancies",
         "",
@@ -266,6 +315,19 @@ def render_simthroughput(d: dict) -> List[str]:
             f"{agg['fastsim']:,.0f} — speedup "
             f"**{wl['speedup_auto_vs_reference']:.0f}x** "
             f"(C backend available: {wl['c_backend_available']})."
+        )
+    xe = d.get("xla_ensemble")
+    if xe:
+        out.append(
+            f"- batched XLA ensemble (R={xe['replications']}, "
+            f"{xe['n_requests_per_replica']:,} req/replica): "
+            f"**{xe['batched_rps']:,.0f}** aggregate req/s in one "
+            f"compiled program vs {xe['sequential_rps']:,.0f} for "
+            f"{xe['replications']} sequential single-replica XLA runs — "
+            f"**{xe['speedup_batched_vs_sequential']:.2f}x**, replica-0 "
+            f"bit-identical to the single-run driver: "
+            f"{xe['replica0_bitidentical']} (both sides exclude "
+            "compilation)."
         )
     out.append("")
     out.append(d.get("estimator_note", ""))

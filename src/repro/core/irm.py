@@ -183,9 +183,27 @@ class PopularityEstimator:
         self.totals[proxy] = 0.0
 
     def rates(self, laplace: float = 0.0) -> np.ndarray:
-        """Estimated per-request rates, optionally Laplace-smoothed."""
+        """Estimated per-request rates, optionally Laplace-smoothed.
+
+        Rows are normalized by the **true** (possibly decayed) total, so
+        every observed row sums to exactly 1 whatever :meth:`decay`
+        schedule preceded it. The previous ``max(totals, 1)`` guard
+        silently deflated rows once EWMA forgetting pushed a tenant's
+        total weight below 1 (100 observations after 60 rounds of
+        ``decay(0.9)`` leave a total of ~0.18, i.e. rates summing to
+        0.18) — deep in that regime the eq. (10) working-set solve
+        degenerates (the bracketed characteristic time blows up as
+        1/total) and virtual footprints collapse toward zero, making
+        the eq. (13) admission test over-admit. Only the all-zero row
+        (nothing observed, or fully reset) keeps a guard and reports
+        uniformly zero rates.
+        """
         J, N = self.counts.shape
-        tot = np.maximum(self.totals, 1.0)[:, None]
         if laplace > 0.0:
-            return (self.counts + laplace) / (tot + laplace * N)
+            # Smoothed rows always normalize (an unobserved row is the
+            # uniform prior 1/N) — the denominator is strictly positive.
+            return (self.counts + laplace) / (
+                self.totals[:, None] + laplace * N
+            )
+        tot = np.where(self.totals > 0.0, self.totals, 1.0)[:, None]
         return self.counts / tot

@@ -27,7 +27,11 @@ Axes
   Monte-Carlo runs stream automatically (chunk-fed engine + sparse
   touched-set occupancy) past the runner's size thresholds
   (``n_requests * J >= 12M`` or ``J * n_objects >= 4M``); results are
-  bit-identical to the one-shot dense path.
+  bit-identical to the one-shot dense path. ``replications=R`` turns
+  any Monte-Carlo run into an R-replica ensemble (replica 0
+  bit-identical to the single run; batched in one compiled program on
+  ``backend="xla"``) whose Report carries cross-replica means plus the
+  ``hit_prob_ci()`` / ``hit_rate_ci()`` confidence-band accessors.
 
 Admission control (Section IV-C)
 --------------------------------

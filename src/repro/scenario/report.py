@@ -22,19 +22,33 @@ Field notes
   for working-set runs, and the full ``admission`` episode (decision
   log, virtual allocations, overbooking gain, predicted-vs-realized
   SLA hit rates) for ``System(admission=...)`` scenarios.
+* ``ensemble`` (Monte-Carlo with ``Estimator(replications=R)``) carries
+  the per-replica estimates — the main fields become cross-replica
+  means and ``hit_prob_ci()`` / ``hit_rate_ci()`` /
+  ``overall_hit_rate_ci()`` derive normal-approximation confidence
+  bands from it.
 * ``same_estimates`` is the round-trip identity check used by the
-  JSON tests: estimates must match bit for bit, timing fields are
-  excluded (wall clock is not part of a result's identity).
+  JSON tests: estimates must match bit for bit (including the
+  per-replica ensemble payload), timing fields are excluded (wall
+  clock is not part of a result's identity).
 """
 
 from __future__ import annotations
 
+import statistics as _statistics
 from dataclasses import dataclass, field
-from typing import Dict, Optional
+from typing import Dict, Optional, Tuple
 
 import numpy as np
 
 from repro.core.fastsim import SparseOccupancy
+
+
+def _z_value(level: float) -> float:
+    """Two-sided normal critical value for a confidence ``level``."""
+    if not 0.0 < level < 1.0:
+        raise ValueError("confidence level must be in (0, 1)")
+    return _statistics.NormalDist().inv_cdf(0.5 + level / 2.0)
 
 
 @dataclass
@@ -46,7 +60,9 @@ class Report:
     backend: str                 # engine that ran ("c", "flat", ..., "jax-ws")
     # (J, N) per-proxy per-object hit probability; streaming Monte-Carlo
     # runs carry a SparseOccupancy (indices, values) pair instead —
-    # densify with ``dense_hit_prob()`` when N is small.
+    # densify with ``dense_hit_prob()`` when N is small. Ensemble runs
+    # (Estimator.replications > 1) carry the cross-replica mean here and
+    # the per-replica estimates in ``ensemble``.
     hit_prob: "np.ndarray | SparseOccupancy"
     hit_rate: np.ndarray         # (J,) demand-weighted overall hit rate
     overall_hit_rate: float      # request-rate-weighted across proxies
@@ -58,7 +74,96 @@ class Report:
     ripple: Optional[dict] = None       # eviction statistics (MC only)
     final_vlen: Optional[np.ndarray] = None
     converged: Optional[bool] = None    # working_set only
+    # Ensemble payload (replications > 1): {"replications": R,
+    # "batched": bool, "hit_rate": (R, J), "overall_hit_rate": (R,),
+    # "realized_hit_rate": (R, J) | None, "hit_prob": (R, J, N) | None
+    # (omitted for sparse/streaming runs)}. Main-field estimates are
+    # the cross-replica means.
+    ensemble: Optional[Dict[str, object]] = None
     extras: Dict[str, object] = field(default_factory=dict)
+
+    # ------------------------------------------------------------------
+    # Ensemble accessors (replications > 1)
+    # ------------------------------------------------------------------
+    @property
+    def replications(self) -> int:
+        """Ensemble size R (1 for a classic single-trajectory run)."""
+        if self.ensemble is None:
+            return 1
+        return int(self.ensemble["replications"])
+
+    def _require_ensemble(self, what: str) -> None:
+        if self.ensemble is None or self.replications < 2:
+            raise ValueError(
+                f"{what} needs an ensemble run — rerun the scenario with "
+                "Estimator(replications=R) for R >= 2"
+            )
+
+    def hit_rate_std(self) -> np.ndarray:
+        """(J,) cross-replica sample std of the per-proxy hit rates."""
+        self._require_ensemble("hit_rate_std()")
+        return np.asarray(self.ensemble["hit_rate"], dtype=np.float64).std(
+            axis=0, ddof=1
+        )
+
+    def hit_rate_ci(
+        self, level: float = 0.95
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(mean, lo, hi) normal-approximation CI bands for the
+        per-proxy hit rates (each (J,)) — the same shape every CI
+        accessor returns."""
+        self._require_ensemble("hit_rate_ci()")
+        half = (
+            _z_value(level)
+            * self.hit_rate_std()
+            / np.sqrt(self.replications)
+        )
+        return self.hit_rate, self.hit_rate - half, self.hit_rate + half
+
+    def overall_hit_rate_ci(
+        self, level: float = 0.95
+    ) -> Tuple[float, float, float]:
+        """(mean, lo, hi) for the overall demand-weighted hit rate."""
+        self._require_ensemble("overall_hit_rate_ci()")
+        vals = np.asarray(
+            self.ensemble["overall_hit_rate"], dtype=np.float64
+        )
+        half = (
+            _z_value(level) * vals.std(ddof=1) / np.sqrt(self.replications)
+        )
+        m = float(vals.mean())
+        return m, m - half, m + half
+
+    def hit_prob_std(self) -> np.ndarray:
+        """(J, N) cross-replica sample std of per-object hit probs.
+
+        Needs the stacked per-replica ``hit_prob`` in the ensemble
+        payload — dropped when the densified ``(R, J, N)`` stack would
+        exceed the runner's retention cap (huge-catalogue streaming
+        runs), where only the per-proxy statistics are kept.
+        """
+        self._require_ensemble("hit_prob_std()")
+        stack = self.ensemble.get("hit_prob")
+        if stack is None:
+            raise ValueError(
+                "per-replica hit_prob was not retained (the (R, J, N) "
+                "stack exceeds the runner's cap) — only per-proxy CI "
+                "accessors are available"
+            )
+        return np.asarray(stack, dtype=np.float64).std(axis=0, ddof=1)
+
+    def hit_prob_ci(
+        self, level: float = 0.95
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(mean, lo, hi) per-(proxy, object) hit-probability bands,
+        each (J, N) — normal approximation over the R replicas."""
+        half = (
+            _z_value(level)
+            * self.hit_prob_std()
+            / np.sqrt(self.replications)
+        )
+        mean = self.dense_hit_prob()
+        return mean, mean - half, mean + half
 
     # ------------------------------------------------------------------
     @property
@@ -113,6 +218,14 @@ class Report:
                 None if self.final_vlen is None else self.final_vlen.tolist()
             ),
             "converged": self.converged,
+            "ensemble": (
+                None
+                if self.ensemble is None
+                else {
+                    k: (v.tolist() if isinstance(v, np.ndarray) else v)
+                    for k, v in self.ensemble.items()
+                }
+            ),
             "extras": self.extras,
         }
         return d
@@ -131,6 +244,17 @@ class Report:
             )
         else:
             hit_prob = np.asarray(hp, dtype=np.float64)
+        ens = d.get("ensemble")
+        if ens is not None:
+            ens = dict(ens)
+            for key in (
+                "hit_rate",
+                "overall_hit_rate",
+                "realized_hit_rate",
+                "hit_prob",
+            ):
+                if ens.get(key) is not None:
+                    ens[key] = np.asarray(ens[key], dtype=np.float64)
         return Report(
             scenario=d["scenario"],
             estimator=d["estimator"],
@@ -146,6 +270,7 @@ class Report:
             ripple=d.get("ripple"),
             final_vlen=arr(d.get("final_vlen")),
             converged=d.get("converged"),
+            ensemble=ens,
             extras=d.get("extras") or {},
         )
 
@@ -187,4 +312,25 @@ class Report:
                 )
             ):
                 return False
+        if (self.ensemble is None) != (other.ensemble is None):
+            return False
+        if self.ensemble is not None:
+            a, b = self.ensemble, other.ensemble
+            if int(a["replications"]) != int(b["replications"]):
+                return False
+            for key in (
+                "hit_rate",
+                "overall_hit_rate",
+                "realized_hit_rate",
+                "hit_prob",
+            ):
+                va, vb = a.get(key), b.get(key)
+                if (va is None) != (vb is None):
+                    return False
+                if va is not None and not np.array_equal(
+                    np.asarray(va, dtype=np.float64),
+                    np.asarray(vb, dtype=np.float64),
+                    equal_nan=True,
+                ):
+                    return False
         return self.ripple == other.ripple

@@ -97,6 +97,22 @@ def derive_seeds(seed: int) -> Tuple[int, int]:
     return tuple(int(c.generate_state(1)[0]) for c in children)
 
 
+def ensemble_seeds(trace_seed: int, replications: int) -> list:
+    """Per-replica trace seeds for an ``Estimator(replications=R)`` run.
+
+    Replica 0 keeps the scenario's derived trace seed itself, so its
+    trajectory — and hence every per-replica estimate in lane 0 — is
+    bit-identical to a ``replications=1`` run of the same scenario.
+    Replicas ``r >= 1`` draw independent ``SeedSequence`` substreams
+    keyed on ``(trace_seed, r)``.
+    """
+    out = [int(trace_seed)]
+    for r in range(1, int(replications)):
+        ss = np.random.SeedSequence([int(trace_seed), int(r), 0xE25B])
+        out.append(int(ss.generate_state(1)[0]))
+    return out
+
+
 def _demand_weights(lam: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
     """Per-proxy object weights and proxy traffic shares from a rate
     matrix (guarded against all-zero rows)."""
@@ -231,6 +247,10 @@ def _run_monte_carlo(sc: Scenario) -> Report:
         else default_warmup(n, system.allocations)
     )
     warmup = min(warmup, n)
+    if sc.estimator.replications > 1:
+        return _run_monte_carlo_ensemble(
+            sc, n, warmup, lengths, trace_seed, streaming
+        )
     if system.backend == "reference":
         trace = sc.workload.sample(n, trace_seed)
         res = _run_reference(sc, trace, lengths, warmup)
@@ -302,6 +322,220 @@ def _run_monte_carlo(sc: Scenario) -> Report:
             "n_hit_list": int(res.n_hit_list),
             "n_hit_cache": int(res.n_hit_cache),
             "n_miss": int(res.n_miss),
+            "streaming": bool(streaming),
+            **(
+                {"chunk_size": int(sc.estimator.chunk_size)}
+                if streaming
+                else {}
+            ),
+        },
+    )
+
+
+def _run_monte_carlo_ensemble(
+    sc: Scenario,
+    n: int,
+    warmup: int,
+    lengths: np.ndarray,
+    trace_seed: int,
+    streaming: bool,
+) -> Report:
+    """R-replica Monte-Carlo run (``Estimator(replications=R)``).
+
+    Replica trace seeds come from :func:`ensemble_seeds` (replica 0 is
+    bit-identical to a single run). On ``backend="xla"`` (flat LRU, no
+    delayed batching) all replicas execute batched inside one compiled
+    XLA program via :func:`repro.core.fastsim_jax.simulate_ensemble`;
+    every other backend runs the replicas sequentially with identical
+    per-replica results. The Report carries cross-replica means in the
+    main fields and the per-replica estimates in ``Report.ensemble``.
+    """
+    from repro.core.fastsim import _xla_applicable
+
+    system, est = sc.system, sc.estimator
+    R = est.replications
+    seeds = ensemble_seeds(trace_seed, R)
+    params = system.to_sim_params()
+    ripple_from = sc.ripple_from
+    batched = False
+    results = None
+    if (
+        system.backend == "xla"
+        and system.variant == "lru"
+        and system.batch_interval == 0
+        and _xla_applicable(
+            n, sc.workload.n_objects, np.asarray(lengths), params
+        )
+    ):
+        from repro.core import fastsim_jax
+
+        if streaming:
+            traces = [
+                sc.workload.iter_chunks(n, s, chunk_size=est.chunk_size)
+                for s in seeds
+            ]
+        else:
+            traces = [sc.workload.sample(n, s) for s in seeds]
+        results = fastsim_jax.simulate_ensemble(
+            params,
+            traces,
+            sc.workload.n_objects,
+            n,
+            lengths=lengths,
+            warmup=warmup,
+            ripple_from=ripple_from,
+            sparse=streaming,
+        )
+        batched = True
+    if results is None:
+        results = []
+        for s in seeds:
+            if system.backend == "reference":
+                res = _run_reference(
+                    sc, sc.workload.sample(n, s), lengths, warmup
+                )
+                res.engine = "reference"
+                results.append(res)
+            elif streaming:
+                results.append(
+                    simulate_chunks(
+                        params,
+                        sc.workload.iter_chunks(
+                            n, s, chunk_size=est.chunk_size
+                        ),
+                        sc.workload.n_objects,
+                        n,
+                        lengths=lengths,
+                        warmup=warmup,
+                        ripple_from=ripple_from,
+                        engine=system.backend,
+                        sparse=True,
+                    )
+                )
+            else:
+                results.append(
+                    simulate_trace(
+                        params,
+                        sc.workload.sample(n, s),
+                        sc.workload.n_objects,
+                        lengths=lengths,
+                        warmup=warmup,
+                        ripple_from=ripple_from,
+                        engine=system.backend,
+                    )
+                )
+    return _ensemble_report(sc, results, streaming, batched)
+
+
+# Cap on the stacked (R, J, N) per-replica hit-probability payload kept
+# inside ensemble Reports (beyond it — or for sparse results — only the
+# per-proxy ensemble statistics are retained).
+ENSEMBLE_HIT_PROB_CELLS = 32_000_000
+
+
+def _ensemble_report(
+    sc: Scenario, results, streaming: bool, batched: bool
+) -> Report:
+    """Aggregate per-replica SimResults into one ensemble Report."""
+    R = len(results)
+    lam = _rates_for(sc)
+    per = [_hit_rates(r.occupancy, lam) for r in results]
+    hit_rate_stack = np.stack([p for p, _ in per])  # (R, J)
+    overall_stack = np.asarray([o for _, o in per], dtype=np.float64)
+    realized_stack = np.stack([r.hit_rate_by_proxy for r in results])
+
+    sparse_any = any(
+        isinstance(r.occupancy, SparseOccupancy) for r in results
+    )
+    N = sc.workload.n_objects
+    J = hit_rate_stack.shape[1]
+    if sparse_any:
+        # union of touched sets; untouched columns are exactly zero
+        idx = np.unique(
+            np.concatenate([r.occupancy.indices for r in results])
+        )
+        acc = np.zeros((J, idx.size), dtype=np.float64)
+        for r in results:
+            occ = r.occupancy
+            pos = np.searchsorted(idx, occ.indices)
+            acc[:, pos] += occ.values
+        hit_prob = SparseOccupancy(N, idx, acc / R)
+        # small catalogues still get per-object error bars: densify the
+        # per-replica stack when it fits the cap (streaming may have
+        # been chosen for the trace length, not the state size)
+        prob_stack = (
+            np.stack([r.occupancy.densify() for r in results])
+            if R * J * N <= ENSEMBLE_HIT_PROB_CELLS
+            else None
+        )
+    else:
+        stack = np.stack([r.occupancy for r in results])
+        hit_prob = stack.mean(axis=0)
+        prob_stack = (
+            stack if stack.size <= ENSEMBLE_HIT_PROB_CELLS else None
+        )
+
+    ripple = None
+    if sc.system.variant in ("lru", "slru"):
+        hist_len = max(len(r.evictions_per_set) for r in results)
+        hist = np.zeros(hist_len, dtype=np.int64)
+        for r in results:
+            hist[: len(r.evictions_per_set)] += r.evictions_per_set
+        n_sets = sum(r.n_sets_recorded for r in results)
+        ks = np.arange(hist_len)
+        ripple = {
+            "evictions_per_set": {
+                str(k): int(c) for k, c in enumerate(hist) if c
+            },
+            "n_sets_recorded": int(n_sets),
+            "n_primary": int(sum(r.n_primary for r in results)),
+            "n_ripple": int(sum(r.n_ripple for r in results)),
+            "n_batch_evictions": int(
+                sum(r.n_batch_evictions for r in results)
+            ),
+            "frac_multi_eviction": float(
+                hist[2:].sum() / n_sets if n_sets else 0.0
+            ),
+            "mean_evictions": float(
+                (ks * hist).sum() / n_sets if n_sets else 0.0
+            ),
+        }
+
+    # Batched replicas share one wall clock; sequential replicas add up.
+    elapsed = (
+        results[0].elapsed_s if batched else sum(r.elapsed_s for r in results)
+    )
+    n_total = sum(r.n_requests for r in results)
+    ensemble = {
+        "replications": R,
+        "batched": bool(batched),
+        "hit_rate": hit_rate_stack,
+        "overall_hit_rate": overall_stack,
+        "realized_hit_rate": realized_stack,
+    }
+    if prob_stack is not None:
+        ensemble["hit_prob"] = prob_stack
+    return Report(
+        scenario=sc.to_dict(),
+        estimator="monte_carlo",
+        backend=results[0].engine,
+        hit_prob=hit_prob,
+        hit_rate=hit_rate_stack.mean(axis=0),
+        overall_hit_rate=float(overall_stack.mean()),
+        n_requests=n_total,
+        warmup=results[0].warmup,
+        elapsed_s=elapsed,
+        throughput_rps=n_total / elapsed if elapsed > 0 else float("inf"),
+        realized_hit_rate=realized_stack.mean(axis=0),
+        ripple=ripple,
+        final_vlen=np.stack(
+            [np.asarray(r.final_vlen, dtype=np.float64) for r in results]
+        ).mean(axis=0),
+        ensemble=ensemble,
+        extras={
+            "n_hit_list": int(sum(r.n_hit_list for r in results)),
+            "n_hit_cache": int(sum(r.n_hit_cache for r in results)),
+            "n_miss": int(sum(r.n_miss for r in results)),
             "streaming": bool(streaming),
             **(
                 {"chunk_size": int(sc.estimator.chunk_size)}

@@ -294,6 +294,19 @@ class Estimator:
         memory footprint and the occupancy representation.
     chunk_size:
         Requests per streamed chunk (streaming mode only).
+    replications:
+        Monte-Carlo only: number of independent ensemble replicas R.
+        ``1`` (default) runs the classic single trajectory. ``R > 1``
+        runs R replicas on independent trace substreams (replica 0 uses
+        the scenario's own trace seed, so its results are bit-identical
+        to a ``replications=1`` run) and the Report aggregates them —
+        ``hit_prob`` / ``hit_rate`` become cross-replica means and the
+        per-replica estimates land in ``Report.ensemble``, enabling the
+        ``hit_prob_ci()`` / ``hit_rate_ci()`` confidence-band
+        accessors. On ``backend="xla"`` all replicas run batched inside
+        one compiled program (:func:`repro.core.fastsim_jax.
+        simulate_ensemble`); other backends run them sequentially with
+        identical per-replica results.
     """
 
     kind: str = "monte_carlo"
@@ -305,6 +318,7 @@ class Estimator:
     tol: float = 1e-7
     streaming: Optional[bool] = None  # monte_carlo only; None = auto by size
     chunk_size: int = 250_000  # requests per streamed chunk
+    replications: int = 1  # monte_carlo only; R > 1 = ensemble run
 
     def __post_init__(self) -> None:
         if self.kind not in ESTIMATORS:
@@ -318,6 +332,13 @@ class Estimator:
             )
         if self.chunk_size < 1:
             raise ValueError("chunk_size must be positive")
+        if self.replications < 1:
+            raise ValueError("replications must be >= 1")
+        if self.replications > 1 and self.kind != "monte_carlo":
+            raise ValueError(
+                "replications apply to the monte_carlo estimator only "
+                "(working_set is deterministic)"
+            )
 
     def to_dict(self) -> dict:
         return asdict(self)

@@ -330,3 +330,95 @@ def test_admission_preset_scales_and_runs():
         adm["capacity"] // max(adm["b_star"].values())
     )
     assert adm["overbooked"] and adm["overbooking_gain"] > 1.3
+
+
+# ---------------------------------------------------------------------------
+# ISSUE-5 bugfix: decayed popularity-rate normalization (eq. (10)/(13))
+# ---------------------------------------------------------------------------
+def test_popularity_rates_rows_sum_to_one_under_any_decay_schedule():
+    """rates() must normalize by the *true* decayed total.
+
+    The old ``max(totals, 1)`` guard deflated every row whose EWMA
+    weight fell below 1 (100 observations + 60 x decay(0.9) -> row sum
+    ~0.18); rows must sum to exactly 1 whatever decay schedule ran,
+    with only the all-zero row guarded (uniformly zero rates).
+    """
+    from repro.core.irm import IRMTrace, PopularityEstimator, sample_trace
+
+    est = PopularityEstimator(3, 200)
+    lam = tenant_rates(2)[:, :200]
+    lam = lam / lam.sum(axis=1, keepdims=True)
+    for i in range(2):
+        t = sample_trace(lam[i : i + 1], 150, seed=i)
+        est.observe_trace(IRMTrace(t.proxies + i, t.objects))
+    # arbitrary decay schedule, including sub-1 totals territory
+    for factor in (0.9,) * 60 + (0.5, 0.99, 0.1, 0.7) * 5:
+        est.decay(factor)
+        sums = est.rates().sum(axis=1)
+        np.testing.assert_allclose(sums[:2], 1.0, rtol=1e-12)
+        assert sums[2] == 0.0  # never-observed row: guarded, all zero
+    # Laplace smoothing normalizes every row (unobserved -> uniform)
+    np.testing.assert_allclose(
+        est.rates(laplace=0.05).sum(axis=1), 1.0, rtol=1e-12
+    )
+    np.testing.assert_allclose(
+        est.rates(laplace=0.05)[2], np.full(200, 1.0 / 200), rtol=1e-12
+    )
+    # observe_trace/decay interleaving keeps the invariant
+    t = sample_trace(lam[:1], 50, seed=9)
+    est.observe_trace(IRMTrace(t.proxies + 2, t.objects))
+    est.decay(0.3)
+    np.testing.assert_allclose(est.rates().sum(axis=1), 1.0, rtol=1e-12)
+
+
+def test_eq13_no_overadmission_with_heavily_decayed_estimates():
+    """Heavily decayed (but normalized) estimates must not over-admit.
+
+    Under the old normalization bug, an aggressive EWMA schedule pushed
+    every row's total toward ~1e-36; the deflated rates blow the
+    unshared eq. (10) solve's bracketed characteristic time past its
+    growth cap, the virtual footprints collapse toward zero, refresh()
+    frees phantom headroom, and eq. (13) admits a tenant the capacity
+    cannot hold. With true-total normalization the footprints match the
+    analytic values from the exact rate matrix and the arrival is
+    rejected.
+    """
+    from repro.core.irm import IRMTrace, PopularityEstimator, sample_trace
+
+    N_obj = 400
+    lengths = np.ones(N_obj)
+    lam = tenant_rates(3)
+    B = 200.0
+    ctl = AdmissionController(B, lengths)
+    for i in range(3):
+        d = ctl.admit(f"tenant{i}", 60.0)
+        assert d.admitted
+    assert ctl.headroom() == pytest.approx(20.0)
+
+    # operator-side estimates: plenty of traffic, then aggressive
+    # forgetting — totals end up ~2000 * 0.05**30 ~ 1e-36
+    est = PopularityEstimator(3, N_obj)
+    for i in range(3):
+        t = sample_trace(lam[i : i + 1], 2000, seed=10 + i)
+        est.observe_trace(IRMTrace(t.proxies + i, t.objects))
+    for _ in range(30):
+        est.decay(0.05)
+    assert est.totals.max() < 1e-30  # deep in the failure regime
+    rates = est.rates()
+    np.testing.assert_allclose(rates.sum(axis=1), 1.0, rtol=1e-9)
+
+    for i in range(3):
+        ctl.observe(f"tenant{i}", rates[i])
+    ctl.refresh()
+
+    # footprints stay at the analytic sharing values (not collapsed):
+    b_true, _ = virtual_allocations(lam, lengths, np.full(3, 60.0))
+    b_now = np.array([ctl.tenants[f"tenant{i}"].b_virtual for i in range(3)])
+    np.testing.assert_allclose(b_now, np.minimum(b_true, 60.0), rtol=0.05)
+    assert b_now.sum() > 100.0  # the old bug left ~6 units committed
+
+    # eq. (13): an arrival beyond the genuine headroom must be rejected
+    # (the old bug reported ~194 units of phantom headroom and admitted)
+    d = ctl.admit("greedy", ctl.headroom() + 10.0)
+    assert not d.admitted
+    assert "eq. (13)" in d.reason

@@ -1,0 +1,330 @@
+"""Batched multi-replica XLA ensembles + variance-aware Reports.
+
+Engine level: replica 0 of an R=8 :func:`repro.core.fastsim_jax.
+simulate_ensemble` batch must be *bit-identical* to the single-run XLA
+driver on the same trace (occupancy integers, counters, virtual
+lengths, ripple histogram) — across ghost retention, RRE slack, and
+chunk-streamed feeding — while distinct replicas differ. The AOT
+warm-up of the chunk runners must provably exclude compilation from
+``elapsed`` (one compile per chunk shape, the stored executable reused).
+
+Scenario level: ``Estimator(replications=R)`` fans replica seeds out of
+the scenario seed (replica 0 keeps the single-run trace seed), the
+batched XLA path and the sequential fallback agree, ensemble Reports
+JSON round-trip bit-for-bit (``same_estimates``), and the CI accessors
+bracket the mean.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+del jax
+
+from repro.core import fastsim_jax
+from repro.core.fastsim import HIST_BUCKETS, SimParams, simulate_trace
+from repro.core.fastsim_jax import (
+    BatchedXLARunner,
+    XLAChunkRunner,
+    simulate_ensemble,
+)
+from repro.core.irm import rate_matrix, sample_trace, sample_trace_chunks
+from repro.scenario import Estimator, Scenario, System, Workload
+from repro.scenario.runner import ensemble_seeds
+
+N_OBJ = 250
+N_REQ = 16_000
+WARMUP = 1_600
+R = 8
+
+
+@pytest.fixture(scope="module")
+def lam():
+    return rate_matrix(N_OBJ, [0.75, 0.5, 1.0])
+
+
+@pytest.fixture(scope="module")
+def traces(lam):
+    return [sample_trace(lam, N_REQ, seed=100 + r) for r in range(R)]
+
+
+def _assert_bitidentical(a, b):
+    assert np.array_equal(a.dense_occupancy(), b.dense_occupancy())
+    assert np.array_equal(a.final_vlen, b.final_vlen)
+    assert np.array_equal(a.evictions_per_set, b.evictions_per_set)
+    assert np.array_equal(a.hits_by_proxy, b.hits_by_proxy)
+    assert np.array_equal(a.reqs_by_proxy, b.reqs_by_proxy)
+    assert (a.n_hit_list, a.n_hit_cache, a.n_miss) == (
+        b.n_hit_list,
+        b.n_hit_cache,
+        b.n_miss,
+    )
+    assert (a.n_sets_recorded, a.n_primary, a.n_ripple) == (
+        b.n_sets_recorded,
+        b.n_primary,
+        b.n_ripple,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Engine level
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize(
+    "kw",
+    [
+        dict(),
+        dict(ghost_retention=False),
+        dict(ripple_allocations=(12, 20, 12)),
+    ],
+)
+def test_every_replica_bitidentical_to_single_run(traces, kw):
+    p = SimParams(allocations=(8, 16, 8), physical_capacity=220, **kw)
+    ens = simulate_ensemble(p, traces, N_OBJ, warmup=WARMUP)
+    for r, t in enumerate(traces):
+        single = simulate_trace(p, t, N_OBJ, warmup=WARMUP, engine="xla")
+        _assert_bitidentical(ens[r], single)
+
+
+def test_distinct_replicas_differ(traces):
+    p = SimParams(allocations=(8, 16, 8), physical_capacity=220)
+    ens = simulate_ensemble(p, traces, N_OBJ, warmup=WARMUP)
+    assert not np.array_equal(
+        ens[0].dense_occupancy(), ens[1].dense_occupancy()
+    )
+
+
+def test_streamed_ensemble_equals_oneshot(lam, traces):
+    p = SimParams(allocations=(8, 16, 8), physical_capacity=220)
+    oneshot = simulate_ensemble(p, traces, N_OBJ, warmup=WARMUP)
+    streamed = simulate_ensemble(
+        p,
+        [
+            sample_trace_chunks(lam, N_REQ, chunk_size=3_111, seed=100 + r)
+            for r in range(R)
+        ],
+        N_OBJ,
+        N_REQ,
+        warmup=WARMUP,
+    )
+    for a, b in zip(streamed, oneshot):
+        _assert_bitidentical(a, b)
+
+
+def test_sweep_lane_matches_dedicated_run(traces):
+    p = SimParams(allocations=(8, 16, 8), physical_capacity=220)
+    b_sweep = np.array([[8, 16, 8], [16, 8, 8], [10, 10, 10]])
+    runner = BatchedXLARunner(
+        p, N_OBJ, np.ones(N_OBJ, np.int64), WARMUP, WARMUP, 6, 3,
+        b_sweep=b_sweep, bhat_sweep=b_sweep,
+    )
+    runner.feed(
+        np.stack([t.proxies for t in traces[:3]]),
+        np.stack([t.objects for t in traces[:3]]),
+    )
+    outs = runner.finish(N_REQ)
+    ded = simulate_trace(
+        SimParams(allocations=(16, 8, 8), physical_capacity=220),
+        traces[1],
+        N_OBJ,
+        warmup=WARMUP,
+        engine="xla",
+    )
+    assert outs[1]["n_miss"] == ded.n_miss
+    assert np.array_equal(
+        np.asarray(outs[1]["vlen"]),
+        (np.asarray(ded.final_vlen) * 6).astype(np.int64),
+    )
+
+
+def test_hist_buckets_single_shared_constant():
+    # the XLA driver's histogram constant IS fastsim's (satellite 3)
+    assert fastsim_jax.HIST_MAX == HIST_BUCKETS
+
+
+def test_hist_shape_and_clamp_identical_across_backends(traces):
+    p = SimParams(allocations=(8, 16, 8), physical_capacity=220)
+    flat = simulate_trace(
+        p, traces[0], N_OBJ, warmup=WARMUP, engine="flat"
+    )
+    xla = simulate_trace(p, traces[0], N_OBJ, warmup=WARMUP, engine="xla")
+    ens = simulate_ensemble(p, traces, N_OBJ, warmup=WARMUP)
+    assert np.array_equal(flat.evictions_per_set, xla.evictions_per_set)
+    assert np.array_equal(
+        flat.evictions_per_set, ens[0].evictions_per_set
+    )
+    # the raw histograms share HIST_BUCKETS bins before trimming, so a
+    # deeper-than-bucket ripple would clamp into the same last bucket
+    assert len(flat.evictions_per_set) <= HIST_BUCKETS
+    assert len(xla.evictions_per_set) <= HIST_BUCKETS
+
+
+# ---------------------------------------------------------------------------
+# AOT warm-up: elapsed excludes compilation (satellite 2)
+# ---------------------------------------------------------------------------
+def test_chunk_runner_compiles_once_per_shape_and_reuses_executable(lam):
+    p = SimParams(allocations=(8, 16, 8), physical_capacity=220)
+    chunks = [sample_trace(lam, 2_000, seed=s) for s in (1, 2, 3)]
+    runner = XLAChunkRunner(
+        p, N_OBJ, np.ones(N_OBJ, np.int64), 10_000, 10_000, 6
+    )
+    runner.feed(chunks[0].proxies, chunks[0].objects)
+    assert runner.n_compiles == 1
+    assert set(runner._compiled) == {2_000}
+
+    # wrap the stored executable: the timed region must call exactly it
+    calls = []
+    real = runner._compiled[2_000]
+
+    def wrapped(*args):
+        calls.append(1)
+        return real(*args)
+
+    runner._compiled[2_000] = wrapped
+    runner.feed(chunks[1].proxies, chunks[1].objects)
+    assert calls, "second same-shape feed did not reuse the compiled object"
+    assert runner.n_compiles == 1  # no second compile for the same shape
+
+    # a new shape compiles exactly once more
+    runner.feed(chunks[2].proxies[:500], chunks[2].objects[:500])
+    assert runner.n_compiles == 2
+
+
+def test_batched_runner_compiles_once_per_shape(traces):
+    p = SimParams(allocations=(8, 16, 8), physical_capacity=220)
+    runner = BatchedXLARunner(
+        p, N_OBJ, np.ones(N_OBJ, np.int64), 100_000, 100_000, 6, 4
+    )
+    P = np.stack([t.proxies[:1_000] for t in traces[:4]])
+    O = np.stack([t.objects[:1_000] for t in traces[:4]])
+    runner.feed(P, O)
+    runner.feed(P, O)
+    assert runner.n_compiles == 1
+
+
+# ---------------------------------------------------------------------------
+# Scenario level
+# ---------------------------------------------------------------------------
+def _scenario(backend: str, replications: int) -> Scenario:
+    return Scenario(
+        name="ens-test",
+        workload=Workload(kind="irm", n_objects=N_OBJ, alphas=(0.75, 0.5, 1.0)),
+        system=System(
+            allocations=(12, 12, 12),
+            physical_capacity=N_OBJ,
+            backend=backend,
+        ),
+        estimator=Estimator("monte_carlo", replications=replications),
+        n_requests=12_000,
+        seed=17,
+    )
+
+
+def test_replica0_of_scenario_ensemble_equals_single_run():
+    single = _scenario("xla", 1).run()
+    ens = _scenario("xla", 4).run()
+    assert ens.replications == 4
+    assert ens.ensemble["batched"] is True
+    assert np.array_equal(ens.ensemble["hit_rate"][0], single.hit_rate)
+    assert np.array_equal(
+        ens.ensemble["hit_prob"][0], single.dense_hit_prob()
+    )
+    assert np.array_equal(
+        ens.ensemble["realized_hit_rate"][0],
+        single.realized_hit_rate,
+        equal_nan=True,
+    )
+    # aggregate requests across replicas
+    assert ens.n_requests == 4 * single.n_requests
+
+
+def test_batched_and_sequential_ensembles_agree():
+    xla = _scenario("xla", 3).run()
+    seq = _scenario("auto", 3).run()
+    assert xla.ensemble["batched"] is True
+    assert seq.ensemble["batched"] is False
+    # all backends drive bit-identical trajectories per replica
+    np.testing.assert_array_equal(
+        xla.ensemble["hit_rate"], seq.ensemble["hit_rate"]
+    )
+    np.testing.assert_array_equal(
+        xla.dense_hit_prob(), seq.dense_hit_prob()
+    )
+    assert xla.ripple == seq.ripple
+
+
+def test_ensemble_report_json_round_trip():
+    from repro.scenario.report import Report
+
+    rep = _scenario("xla", 4).run()
+    back = Report.from_dict(json.loads(json.dumps(rep.to_dict())))
+    assert back.same_estimates(rep)
+    assert rep.same_estimates(back)
+    # dropping the ensemble payload must break identity
+    stripped = Report.from_dict(
+        json.loads(json.dumps({**rep.to_dict(), "ensemble": None}))
+    )
+    assert not stripped.same_estimates(rep)
+
+
+def test_ci_accessors_bracket_the_mean():
+    rep = _scenario("xla", 5).run()
+    mean, lo, hi = rep.hit_prob_ci(level=0.95)
+    assert mean.shape == lo.shape == hi.shape == (3, N_OBJ)
+    assert (lo <= mean + 1e-15).all() and (mean <= hi + 1e-15).all()
+    assert np.array_equal(mean, rep.dense_hit_prob())
+    m_r, lo_r, hi_r = rep.hit_rate_ci()
+    assert np.array_equal(m_r, rep.hit_rate)
+    assert (lo_r <= rep.hit_rate).all() and (rep.hit_rate <= hi_r).all()
+    m, lo_o, hi_o = rep.overall_hit_rate_ci()
+    assert lo_o <= m <= hi_o
+    std = rep.hit_rate_std()
+    assert std.shape == (3,) and (std >= 0).all()
+
+
+def test_single_run_report_rejects_ci_accessors():
+    rep = _scenario("xla", 1).run()
+    assert rep.replications == 1 and rep.ensemble is None
+    with pytest.raises(ValueError, match="replications"):
+        rep.hit_rate_ci()
+    with pytest.raises(ValueError, match="replications"):
+        rep.hit_prob_ci()
+
+
+def test_ensemble_seeds_replica0_is_trace_seed():
+    seeds = ensemble_seeds(12345, 6)
+    assert seeds[0] == 12345
+    assert len(set(seeds)) == 6
+
+
+def test_estimator_replications_round_trip_and_validation():
+    est = Estimator("monte_carlo", replications=8)
+    assert Estimator.from_dict(est.to_dict()) == est
+    with pytest.raises(ValueError, match="replications"):
+        Estimator("monte_carlo", replications=0)
+    with pytest.raises(ValueError, match="monte_carlo"):
+        Estimator("working_set", replications=2)
+
+
+def test_streaming_scenario_ensemble_matches_dense():
+    import dataclasses
+
+    sc = _scenario("xla", 3)
+    dense = sc.run()
+    streamed = dataclasses.replace(
+        sc,
+        estimator=dataclasses.replace(
+            sc.estimator, streaming=True, chunk_size=2_500
+        ),
+    ).run()
+    assert streamed.extras["streaming"] is True
+    assert streamed.hit_prob_is_sparse
+    # small catalogue: the densified per-replica stack is retained, so
+    # the per-object error bars survive streaming
+    np.testing.assert_array_equal(
+        streamed.ensemble["hit_prob"], dense.ensemble["hit_prob"]
+    )
+    np.testing.assert_array_equal(
+        streamed.dense_hit_prob(), dense.dense_hit_prob()
+    )
