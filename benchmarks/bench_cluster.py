@@ -1,0 +1,117 @@
+"""Fault-tolerant cluster: K x failure-rate sweep + the failover episode.
+
+Two parts, both on the Section VI-C Zipf workload (1e6-object catalogue
+at full scale, J=9 heterogeneous proxies):
+
+1. **K x failure-rate sweep** — shard the workload across K MCD-OS
+   nodes behind the consistent-hash ring and inject ``f`` seeded-random
+   fail/recover pairs; record the aggregate hit rate, degraded-request
+   count, retry volume, and mean node downtime per cell. The f=0 column
+   is the fault-free sharding baseline (how much hit rate K-way
+   partitioning itself costs against one big node).
+2. **Failover episode** — the ``cluster_failover`` preset (kill node 1
+   at 40% of the trace, warm-recover at 60%): per-phase hit rates,
+   remap fractions, and the recovery time-to-baseline.
+
+Artifact: ``benchmarks/artifacts/cluster.json`` (rendered into
+EXPERIMENTS.md §Cluster by ``python -m benchmarks.report``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.cluster import FaultSpec
+from repro.scenario import get_preset
+
+from .common import FULL, Timer, csv_row, fig2_scale_factors, quick_mode, save_artifact
+
+
+def _sweep_grids():
+    if quick_mode():
+        return (2, 4), (0, 2)
+    return (2, 4, 8), (0, 1, 3)
+
+
+def main() -> dict:
+    req, cat = fig2_scale_factors()
+    K_grid, failure_grid = _sweep_grids()
+    base = get_preset("cluster_failover").scaled(requests=req, catalogue=cat)
+
+    cells: dict = {}
+    total_requests = 0
+    with Timer() as tm:
+        for K in K_grid:
+            for f in failure_grid:
+                sc = dataclasses.replace(
+                    base,
+                    name=f"cluster_sweep_K{K}_f{f}",
+                    system=dataclasses.replace(
+                        base.system,
+                        nodes=K,
+                        faults=FaultSpec(random_failures=f),
+                    ),
+                )
+                rep = sc.run()
+                cl = rep.extras["cluster"]
+                phase = cl["phases"].get("steady") or cl["phases"].get(
+                    "post_recovery"
+                )
+                cells[f"K={K},failures={f}"] = {
+                    "K": K,
+                    "random_failures": f,
+                    "overall_hit_rate": float(rep.overall_hit_rate),
+                    "realized_overall": (
+                        float(phase["hit_rate"]) if phase else None
+                    ),
+                    "degraded_requests": cl["retries"]["degraded_requests"],
+                    "retries": cl["retries"]["total"],
+                    "mean_downtime_frac": (
+                        sum(p["downtime_frac"] for p in cl["per_node"])
+                        / max(len(cl["per_node"]), 1)
+                    ),
+                    "recovered": cl["recovery"]["recovered"],
+                    "requests_per_sec": float(rep.throughput_rps),
+                }
+                total_requests += rep.n_requests
+
+        # the headline failover episode (scheduled kill + warm recover)
+        episode_rep = base.run()
+        episode = episode_rep.extras["cluster"]
+        total_requests += episode_rep.n_requests
+
+    payload = {
+        "preset": "cluster_failover",
+        "scenario": base.to_dict(),
+        "sweep": cells,
+        "episode": episode,
+        "full_scale": FULL,
+    }
+    save_artifact("cluster", payload)
+
+    print("# K x failure-rate sweep (aggregate demand-weighted hit rate)")
+    for key, c in cells.items():
+        print(
+            f"  {key}: hit={c['overall_hit_rate']:.4f} "
+            f"degraded={c['degraded_requests']} retries={c['retries']} "
+            f"downtime={c['mean_downtime_frac']:.3f}"
+        )
+    ph = episode["phases"]
+    print(
+        f"# failover episode: pre={ph['pre_fault']['hit_rate']:.4f} "
+        f"during={ph['during']['hit_rate']:.4f} "
+        f"post={ph['post_recovery']['hit_rate']:.4f} "
+        f"recovered={episode['recovery']['recovered']} "
+        f"(+{episode['recovery']['requests_to_baseline']} requests)"
+    )
+    csv_row(
+        "cluster",
+        tm.seconds * 1e6 / max(total_requests, 1),
+        f"cells={len(cells)};episode_recovered="
+        f"{episode['recovery']['recovered']}",
+    )
+    return payload
+
+
+if __name__ == "__main__":
+    main()

@@ -2,8 +2,8 @@
 
 Prints the full (arch x shape x mesh) three-term table and writes the
 aggregate JSON consumed by EXPERIMENTS.md §Roofline. Skips quietly when
-the sweep has not produced artifacts yet (the dry-run is a separate,
-long-running step: ``python -m repro.launch.dryrun --all --mesh both``).
+``benchmarks/artifacts/dryrun/`` holds no artifacts (the compile sweep
+that produces them runs offline, outside this repo's benchmark set).
 """
 
 from __future__ import annotations
@@ -19,8 +19,8 @@ DRYRUN_DIR = ARTIFACTS / "dryrun"
 
 def main() -> dict:
     if not DRYRUN_DIR.exists() or not list(DRYRUN_DIR.glob("*.json")):
-        print("# no dry-run artifacts found; run "
-              "`python -m repro.launch.dryrun --all --mesh both` first")
+        print("# no dry-run artifacts found under benchmarks/artifacts/"
+              "dryrun/; skipping the roofline table")
         csv_row("roofline", float("nan"), "skipped=no_artifacts")
         return {}
     with Timer() as tm:

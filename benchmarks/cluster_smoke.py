@@ -1,0 +1,139 @@
+"""Cluster failover smoke: prove graceful degradation + recovery in CI.
+
+Runs the ``cluster_failover`` preset at smoke scale (fixed seed, fixed
+fault schedule: node 1 fails at 40% of the trace and warm-recovers at
+60%) plus a fault-free *counterfactual* of the identical trace, and
+enforces three hard assertions:
+
+* the outage has a *visible cost* — the faulted run serves strictly
+  fewer list hits than the fault-free run of the same trace, and its
+  mean hit rate over the outage windows is below the counterfactual's
+  over the same windows (a same-trace comparison, so the cache-warming
+  trend cannot mask the outage the way a pre-vs-during comparison can);
+* the cluster *recovers* — the post-recovery hit rate returns to within
+  ``RECOVERY_TOL`` of the pre-fault baseline (the warm restart keeps
+  the failed node's cache, so the recovery window is short);
+* the run is *deterministic* — a second run under the same seed
+  reproduces every estimate bit for bit (the fault engine, ring, and
+  failover client add no hidden entropy).
+
+Used by the CI ``cluster-smoke`` job (and runnable standalone:
+``PYTHONPATH=src python -m benchmarks.cluster_smoke``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.scenario import FaultSpec, Scenario, get_preset
+
+from .common import Timer, csv_row, save_artifact
+
+# Smoke scale: 60k requests over a 20k-object catalogue (the preset is
+# 3M x 1e6 at paper scale). Phase windows stay thousands of requests
+# wide, so phase hit rates carry ~0.005 Monte-Carlo noise — well inside
+# the recovery tolerance.
+REQUESTS_FACTOR = 0.02
+CATALOGUE_FACTOR = 0.02
+RECOVERY_TOL = 0.02
+
+
+def scenario() -> Scenario:
+    return get_preset("cluster_failover").scaled(
+        requests=REQUESTS_FACTOR, catalogue=CATALOGUE_FACTOR
+    )
+
+
+def _outage_window_mean(cl: dict, lo: int, hi: int) -> float:
+    """Mean windowed hit rate over ``[lo, hi)`` (full windows only)."""
+    w = cl["windows"]
+    vals = [
+        hr
+        for start, hr in zip(w["starts"], w["hit_rate"])
+        if start >= lo and start + w["size"] <= hi
+    ]
+    return float(np.mean(vals))
+
+
+def main() -> dict:
+    sc = scenario()
+    counterfactual = dataclasses.replace(
+        sc, system=dataclasses.replace(sc.system, faults=FaultSpec())
+    )
+    with Timer() as tm:
+        rep = sc.run()
+        rep2 = sc.run()
+        rep0 = counterfactual.run()  # same trace, no faults
+
+    if not rep.same_estimates(rep2):
+        raise RuntimeError(
+            "cluster run is not bit-reproducible under a fixed seed"
+        )
+    cl = rep.extras["cluster"]
+    if cl != rep2.extras["cluster"]:
+        raise RuntimeError("cluster telemetry differs between seeded runs")
+
+    n = sc.n_requests
+    fail_idx, recover_idx = round(0.4 * n), round(0.6 * n)
+    during_faulted = _outage_window_mean(cl, fail_idx, recover_idx)
+    during_healthy = _outage_window_mean(
+        rep0.extras["cluster"], fail_idx, recover_idx
+    )
+    hits_lost = rep0.extras["n_hit_list"] - rep.extras["n_hit_list"]
+    if hits_lost <= 0 or during_faulted >= during_healthy:
+        raise RuntimeError(
+            "node outage not visible against the fault-free "
+            f"counterfactual: hits_lost={hits_lost}, outage windows "
+            f"{during_faulted:.4f} (faulted) vs {during_healthy:.4f} "
+            "(healthy)"
+        )
+    if cl["retries"]["total"] <= 0:
+        raise RuntimeError("failover never engaged (zero retries)")
+
+    pre = cl["phases"]["pre_fault"]["hit_rate"]
+    post = cl["phases"]["post_recovery"]["hit_rate"]
+    if post < pre - RECOVERY_TOL:
+        raise RuntimeError(
+            f"post-recovery hit rate {post:.4f} did not return to within "
+            f"{RECOVERY_TOL} of the pre-fault baseline {pre:.4f}"
+        )
+    if not cl["recovery"]["recovered"]:
+        raise RuntimeError(
+            "recovery detector never found a window back at baseline"
+        )
+
+    payload = {
+        "scenario": sc.to_dict(),
+        "backend": rep.backend,
+        "pre_fault_hit_rate": pre,
+        "during_window_hit_rate": during_faulted,
+        "counterfactual_window_hit_rate": during_healthy,
+        "hits_lost_to_outage": int(hits_lost),
+        "post_recovery_hit_rate": post,
+        "recovery_tol": RECOVERY_TOL,
+        "requests_to_baseline": cl["recovery"]["requests_to_baseline"],
+        "degraded_requests": cl["retries"]["degraded_requests"],
+        "retries": cl["retries"]["total"],
+        "deterministic": True,
+        "wall_seconds": round(tm.seconds, 3),
+    }
+    save_artifact("cluster_smoke", payload)
+    print(
+        f"# cluster smoke: outage windows {during_faulted:.4f} vs "
+        f"{during_healthy:.4f} healthy ({hits_lost} hits lost), "
+        f"pre={pre:.4f} post={post:.4f} (tol {RECOVERY_TOL}), recovered "
+        f"in {cl['recovery']['requests_to_baseline']} requests, "
+        f"deterministic across reruns"
+    )
+    csv_row(
+        "cluster_smoke",
+        tm.seconds * 1e6 / max(3 * sc.n_requests, 1),
+        f"hits_lost={hits_lost};pre={pre:.4f};post={post:.4f}",
+    )
+    return payload
+
+
+if __name__ == "__main__":
+    main()

@@ -29,6 +29,7 @@ BENCHES = [
     ("simthroughput", "benchmarks.bench_simthroughput"),  # engine speedup
     ("large_n_smoke", "benchmarks.large_n_smoke"),        # streaming + RSS guard
     ("admission", "benchmarks.bench_admission"),
+    ("cluster", "benchmarks.bench_cluster"),              # K x failure-rate sweep
     ("serving", "benchmarks.bench_serving"),
     ("roofline", "benchmarks.bench_roofline"),
 ]
@@ -65,7 +66,7 @@ def main() -> None:
         print(f"unknown benchmark(s): {', '.join(sorted(unknown))}")
         print(f"available: {', '.join(sorted(known))}")
         sys.exit(2)
-    failures = []
+    outcomes = []  # (name, error-or-None), in run order
     for name, module in BENCHES:
         if selected and name not in selected:
             continue
@@ -74,14 +75,23 @@ def main() -> None:
             mod = importlib.import_module(module)
             mod.main()
         except Exception as e:  # keep the harness going; report at the end
-            failures.append((name, e))
+            outcomes.append((name, e))
             traceback.print_exc()
             print(f"{name},nan,FAILED:{type(e).__name__}")
+        else:
+            outcomes.append((name, None))
+    # Per-bench summary: one PASS/FAIL line each, so a crashed bench is
+    # visible in the log tail and the harness exit code (CI greps both).
+    print("\n----- summary -----")
+    for name, err in outcomes:
+        status = "PASS" if err is None else f"FAIL ({type(err).__name__})"
+        print(f"{name:16s} {status}")
+    failures = [(n, e) for n, e in outcomes if e is not None]
     if failures:
-        print(f"\n{len(failures)} benchmark(s) failed: "
+        print(f"\n{len(failures)}/{len(outcomes)} benchmark(s) failed: "
               + ", ".join(n for n, _ in failures))
         sys.exit(1)
-    print("\nall benchmarks passed")
+    print(f"\nall {len(outcomes)} selected benchmark(s) passed")
 
 
 if __name__ == "__main__":

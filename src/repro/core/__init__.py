@@ -17,6 +17,9 @@ Layers:
 * :mod:`~repro.core.admission` — Section IV-C: overbooking + admission.
 * :mod:`~repro.core.rre` — Section IV-D: ripple-eviction reduction.
 * :mod:`~repro.core.mcdos` — Section VI: the MCD-OS server semantics.
+* :mod:`~repro.core.cluster` — fault-tolerant K-node MCD-OS cluster:
+  consistent-hash ring with virtual nodes, seeded fault injection
+  (fail/recover/add/remove), failover routing, graceful degradation.
 * :mod:`~repro.core.baselines` — not-shared and pooled-LRU baselines.
 * :mod:`~repro.core.irm` — IRM/Zipf traces and popularity estimation.
 
@@ -67,5 +70,14 @@ from .admission import (  # noqa: F401
     virtual_allocations,
 )
 from .rre import RRECache, RREConfig, compare_ripple  # noqa: F401
+from .cluster import (  # noqa: F401
+    FaultEvent,
+    FaultSpec,
+    HashRing,
+    default_ring,
+    key_position,
+    key_positions,
+    simulate_cluster,
+)
 from .mcdos import MCDOSServer, MCDServer, consistent_route, run_trace  # noqa: F401
 from .metrics import HitRecorder, LatencyRecorder, RippleStats, table_rows  # noqa: F401

@@ -968,7 +968,48 @@ def simulate_chunks(
             raise ValueError("object lengths must be positive")
 
     J = len(params.allocations)
-    scale = _lcm_1_to(J)
+    driver, engine_name, vlen_scale = make_chunk_driver(
+        params, N, lengths_a, warmup, ripple_from, engine=engine, n_requests=n
+    )
+
+    consumed = 0
+    for chunk in chunks:
+        driver.feed(chunk.proxies, chunk.objects)
+        consumed += len(chunk.proxies)
+    if consumed != n:
+        raise ValueError(
+            f"chunk stream supplied {consumed} requests but n_requests={n}"
+        )
+    out = driver.finish(n)
+    return _assemble(
+        out, driver.elapsed, n, warmup, J, N, vlen_scale, engine_name, sparse
+    )
+
+
+def make_chunk_driver(
+    params: SimParams,
+    n_objects: int,
+    lengths: np.ndarray,
+    warmup: int,
+    ripple_from: int,
+    *,
+    engine: str = "auto",
+    n_requests: int = 0,
+):
+    """Construct a chunk-fed drive loop for one cache instance.
+
+    This is the backend dispatch of :func:`simulate_chunks`, exposed so
+    multi-instance callers (the :mod:`repro.core.cluster` fault-injection
+    simulator drives one driver per node) can own the feed schedule.
+    Returns ``(driver, engine_name, vlen_scale)``; the driver honours the
+    ``feed(proxies, objects)`` / ``finish(n_total)`` protocol with state
+    resident between feeds, and ``n_requests`` (total stream length, when
+    known up front) only gates the int32-envelope check of the XLA
+    backend.
+    """
+    N = int(n_objects)
+    lengths_a = np.ascontiguousarray(np.asarray(lengths), dtype=np.int64)
+    scale = _lcm_1_to(len(params.allocations))
     driver = None
     engine_name = "?"
     vlen_scale = scale
@@ -1002,7 +1043,7 @@ def simulate_chunks(
                 )
         if driver is None and engine == "xla":
             if params.batch_interval == 0 and _xla_applicable(
-                n, N, lengths_a, params
+                int(n_requests), N, lengths_a, params
             ):
                 driver = _make_xla(params, N, lengths_a, warmup, ripple_from, scale)
                 engine_name = "xla"
@@ -1017,19 +1058,7 @@ def simulate_chunks(
         if driver is None:
             driver = _FlatDriver(params, N, lengths_a, warmup, ripple_from)
             engine_name = "flat"
-
-    consumed = 0
-    for chunk in chunks:
-        driver.feed(chunk.proxies, chunk.objects)
-        consumed += len(chunk.proxies)
-    if consumed != n:
-        raise ValueError(
-            f"chunk stream supplied {consumed} requests but n_requests={n}"
-        )
-    out = driver.finish(n)
-    return _assemble(
-        out, driver.elapsed, n, warmup, J, N, vlen_scale, engine_name, sparse
-    )
+    return driver, engine_name, vlen_scale
 
 
 # Backends that can honour a forced-engine request, per variant.
@@ -1596,6 +1625,23 @@ class _FlatDriver:
         self.ghead, self.gtail = ghead, gtail
         self.n_ghosts, self.phys_used = n_ghosts, phys_used
         return n_ev
+
+    def counters(self) -> dict:
+        """Cumulative hit/miss/ripple counters, readable between ``feed``
+        calls (whole-stream totals; the per-proxy arrays are post-warmup
+        and the ripple fields post-``ripple_from``)."""
+        return {
+            "n_hit_list": int(self.n_hit_list),
+            "n_hit_cache": int(self.n_hit_cache),
+            "n_miss": int(self.n_miss),
+            "hits_by_proxy": np.asarray(self.hits_by_proxy, dtype=np.int64),
+            "reqs_by_proxy": np.asarray(self.reqs_by_proxy, dtype=np.int64),
+            "hist": np.asarray(self.hist, dtype=np.int64),
+            "n_sets": int(self.n_sets_rec),
+            "n_prim": int(self.n_primary),
+            "n_rip": int(self.n_ripple),
+            "n_batch": int(self.n_batch),
+        }
 
     def finish(self, n_total: int) -> dict:
         rs = np.asarray(self.res_since, dtype=np.int64)

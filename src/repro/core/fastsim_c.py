@@ -310,6 +310,23 @@ class FlatChunkRunner:
             if off < n:  # touched-set capacity exhausted mid-chunk
                 self._grow()
 
+    def counters(self) -> dict:
+        """Cumulative hit/miss/ripple counters, readable between ``feed``
+        calls (whole-stream totals; the per-proxy arrays are post-warmup
+        and the ripple fields post-``ripple_from``)."""
+        return {
+            "n_hit_list": int(self.sc[SC_NHITLIST]),
+            "n_hit_cache": int(self.sc[SC_NHITCACHE]),
+            "n_miss": int(self.sc[SC_NMISS]),
+            "hits_by_proxy": self.hits_p.copy(),
+            "reqs_by_proxy": self.reqs_p.copy(),
+            "hist": self.hist.copy(),
+            "n_sets": int(self.sc[SC_NSETS]),
+            "n_prim": int(self.sc[SC_NPRIM]),
+            "n_rip": int(self.sc[SC_NRIP]),
+            "n_batch": int(self.sc[SC_NBATCH]),
+        }
+
     def finish(self, n_total: int) -> Dict[str, np.ndarray]:
         n_slots = int(self.sc[SC_NSLOTS])
         t_start = int(self.sc[SC_TSTART])

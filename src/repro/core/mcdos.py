@@ -21,27 +21,41 @@ Like MCD-OS (and unlike the abstract Section III model), an LRU-list miss
 that is a physical-cache hit is served from cache without an artificial
 delay — the miss penalty model is attached by the serving engine, not
 here. ``consistent_route`` reproduces MCD's client-side consistent
-hashing for clustered deployments (placement is untouched by sharing).
+hashing for clustered deployments (placement is untouched by sharing):
+it routes against the :class:`~repro.core.cluster.HashRing` virtual-node
+ring, so growing or shrinking the server count remaps only ~1/K of the
+key space instead of reshuffling almost every key the way the naive
+``hash(key) % n`` rule does.
 """
 
 from __future__ import annotations
 
-import hashlib
 from dataclasses import dataclass
 from typing import Optional, Sequence
 
 import numpy as np
 
 from .baselines import PooledLRU
+from .cluster import default_ring, key_position
 from .metrics import HitRecorder, LatencyRecorder, RippleStats
 from .shared_lru import GetResult, RequestStats, SharedLRUCache
 from .slru import SegmentedSharedLRUCache
 
 
-def consistent_route(key: object, n_servers: int) -> int:
-    """MCD-style consistent key -> server routing (stable across J)."""
-    digest = hashlib.md5(repr(key).encode()).digest()
-    return int.from_bytes(digest[:8], "little") % n_servers
+def consistent_route(key: object, n_servers: int, vnodes: int = 64) -> int:
+    """MCD-style consistent key -> server routing.
+
+    Looks the key's 64-bit position up on the canonical ``vnodes``-per-
+    server hash ring (:func:`~repro.core.cluster.default_ring`): stable
+    run-to-run, balanced across servers, and minimally disruptive under
+    membership change — routing against ``n_servers - 1`` moves only the
+    keys owned by the removed server's arcs (~``1/n_servers`` of them).
+    """
+    if n_servers < 1:
+        raise ValueError("n_servers must be >= 1")
+    return default_ring(int(n_servers), int(vnodes)).route_pos(
+        key_position(key)
+    )
 
 
 @dataclass
@@ -86,8 +100,15 @@ class MCDOSServer:
     def J(self) -> int:
         return self.cache.J
 
+    def _check_proxy(self, proxy: int) -> None:
+        if not 0 <= int(proxy) < self.J:
+            raise ValueError(
+                f"proxy id {proxy} out of range for J={self.J} proxies"
+            )
+
     # -- wire protocol -----------------------------------------------------
     def get(self, proxy: int, key: object) -> RequestStats:
+        self._check_proxy(proxy)
         with self.stats.latency.time("get"):
             st = self.cache.get(proxy, key)
         if isinstance(key, (int, np.integer)) and key < self.stats.hits.req.shape[1]:
@@ -95,6 +116,9 @@ class MCDOSServer:
         return st
 
     def set(self, proxy: int, key: object, length: int) -> RequestStats:
+        self._check_proxy(proxy)
+        if length <= 0:
+            raise ValueError(f"object length must be positive (got {length})")
         with self.stats.latency.time("set"):
             st = self.cache.set(proxy, key, length)
         self.stats.ripple.record(st)

@@ -1,2 +1,2 @@
-"""Launchers + distribution config: production mesh, sharding rules,
-input specs, the multi-pod dry-run, and the train/serve CLIs."""
+"""Launchers + distribution config: production mesh, input specs,
+EP MoE dispatch, flash-decode tuning, and the train/serve CLIs."""

@@ -7,7 +7,7 @@ compute at deepseek-v2 train_4k scale — and would destroy the
 MODEL_FLOPS / HLO_FLOPS roofline ratio. Gathers/scatters cost bytes, not
 FLOPs.
 
-Sharding (applied in launch/sharding.py): experts E over the `model`
+Sharding (applied by the launcher): experts E over the `model`
 axis; token/capacity dims over (`pod`,`data`); expert weights at rest are
 additionally sharded over `data` on d_ff (ZeRO-3 style for the expert
 tensors only) because 160x(5120x1536x3)x60 layers does not fit TP-16

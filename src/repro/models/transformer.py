@@ -61,7 +61,7 @@ class TransformerLM:
         self.compute_dtype = compute_dtype
         self.remat = remat
         self.remat_policy = remat_policy
-        # Cost-accounting hooks (see launch/dryrun.py): XLA's
+        # Cost-accounting hooks for dry-run tooling: XLA's
         # HloCostAnalysis counts a while-loop body ONCE regardless of trip
         # count, so the dry-run compiles (a) an unrolled variant on small
         # configs to validate the analytic cost model, and (b) a

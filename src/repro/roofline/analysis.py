@@ -4,7 +4,7 @@ Hardware model (TPU v5e, per chip):
     peak bf16 compute   197 TFLOP/s
     HBM bandwidth       819 GB/s
     ICI                 ~50 GB/s per link (ring traffic model applied at
-                        collective parsing time, see launch/dryrun.py)
+                        collective parsing time)
 
 Terms (seconds per step, per chip):
     compute    = FLOPs/chip / 197e12

@@ -21,7 +21,11 @@ Axes
 * :class:`System` — flat shared LRU, S-LRU, not-shared, pooled; ghost
   retention, RRE slack/batch config; backend selection across the
   reference ``SharedLRUCache`` and the fastsim Python/C/XLA drivers;
-  optional online admission control via :class:`AdmissionSpec`.
+  optional online admission control via :class:`AdmissionSpec`; and
+  K-node consistent-hash cluster simulation with seeded fault
+  injection via ``System(nodes=K, faults=FaultSpec(...))`` —
+  per-phase hit rates, remap fractions, retry counts, and recovery
+  time-to-baseline land in ``Report.extras["cluster"]``.
 * :class:`Estimator` — ``monte_carlo`` vs ``working_set`` (L1 / Lstar /
   L2 / full attribution), both returning one :class:`Report`. Large
   Monte-Carlo runs stream automatically (chunk-fed engine + sparse
@@ -86,6 +90,8 @@ older entry points (``SimParams``/``simulate_trace``,
 low-level layer this package drives.
 """
 
+from repro.core.cluster import FaultSpec  # noqa: F401
+
 from .report import Report  # noqa: F401
 from .scenario import Scenario  # noqa: F401
 from .system import AdmissionSpec, Estimator, System  # noqa: F401
@@ -95,6 +101,7 @@ from .presets import PRESETS, get_preset, list_presets  # noqa: F401
 __all__ = [
     "AdmissionSpec",
     "Estimator",
+    "FaultSpec",
     "LengthSpec",
     "PRESETS",
     "Report",

@@ -17,6 +17,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Dict, Tuple
 
+from repro.core.cluster import FaultSpec
+
 from .scenario import Scenario
 from .system import AdmissionSpec, Estimator, System
 from .workload import Workload
@@ -249,6 +251,43 @@ def admission_overbooking(
     )
 
 
+def cluster_failover(nodes: int = 4, seed: int = 53) -> Scenario:
+    """Fault-tolerant cluster scenario: kill-and-recover one of K nodes.
+
+    The Fig.-2 workload (J=9 heterogeneous Zipf proxies over 1e6
+    objects) sharded across ``nodes`` homogeneous MCD-OS nodes behind a
+    64-vnode consistent-hash ring. Node 1 fails at 40% of the trace and
+    recovers warm at 60%; in between, the failover client walks the
+    ring (budget 2) and exhausted requests degrade to misses. The
+    per-phase hit rates, remap fractions, retry counts, and recovery
+    time-to-baseline land in ``Report.extras["cluster"]``.
+    """
+    return Scenario(
+        name="cluster_failover",
+        description=(
+            f"Fault-tolerant MCD-OS cluster: the Fig.-2 workload across "
+            f"K={nodes} nodes behind a consistent-hash ring; node 1 "
+            "fails at 40% of the trace, recovers warm at 60% — "
+            "failover routing, graceful degradation, and "
+            "recovery-to-baseline telemetry."
+        ),
+        workload=Workload(kind="irm", n_objects=FIG2_N, alphas=FIG2_ALPHAS),
+        system=System(
+            variant="lru",
+            allocations=FIG2_B_UNITS,
+            physical_capacity=sum(FIG2_B_UNITS),
+            nodes=nodes,
+            faults=FaultSpec(
+                events=((0.4, "fail", 1), (0.6, "recover", 1)),
+            ),
+        ),
+        estimator=Estimator("monte_carlo"),
+        n_requests=FIG2_REQUESTS,
+        warmup=FIG2_REQUESTS // 10,
+        seed=seed,
+    )
+
+
 def quickstart(seed: int = 1) -> Scenario:
     return Scenario(
         name="quickstart",
@@ -295,6 +334,7 @@ PRESETS: Dict[str, Callable[..., Scenario]] = {
     "j2_bounds": j2_bounds,
     "shot_noise": shot_noise,
     "admission_overbooking": admission_overbooking,
+    "cluster_failover": cluster_failover,
     "quickstart": quickstart,
 }
 

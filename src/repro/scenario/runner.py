@@ -41,6 +41,7 @@ from typing import Optional, Tuple
 import numpy as np
 
 from repro.core.admission import AdmissionController
+from repro.core.cluster import simulate_cluster
 from repro.core.fastsim import (
     HIST_BUCKETS,
     SimResult,
@@ -75,6 +76,8 @@ def run_scenario(sc: Scenario) -> Report:
         raise ValueError(
             "tenant_churn workloads need System(admission=AdmissionSpec())"
         )
+    if sc.system.is_cluster:
+        return _run_cluster(sc)
     if sc.estimator.kind == "working_set":
         return _run_working_set(sc)
     return _run_monte_carlo(sc)
@@ -328,6 +331,100 @@ def _run_monte_carlo(sc: Scenario) -> Report:
                 if streaming
                 else {}
             ),
+        },
+    )
+
+
+def cluster_fault_seed(seed: int) -> int:
+    """Fault-schedule seed substream for a cluster scenario.
+
+    Independent of the trace/length substreams (:func:`derive_seeds`),
+    so adding random failures never perturbs the sampled workload."""
+    ss = np.random.SeedSequence([int(seed), 0xC105])
+    return int(ss.generate_state(1)[0])
+
+
+def _run_cluster(sc: Scenario) -> Report:
+    """K-node consistent-hash cluster run (``System(nodes=K, faults=...)``).
+
+    Samples the scenario trace once, routes it through
+    :func:`repro.core.cluster.simulate_cluster` (per-node fastsim
+    engines behind the ring + failover client), and reports the
+    aggregate exactly like :func:`_run_monte_carlo` — with ``nodes=1``
+    and an empty :class:`~repro.core.cluster.FaultSpec` the estimates
+    are bit-identical to the single-node path. The cluster telemetry
+    (phases, windows, remaps, retries, recovery) lands in
+    ``Report.extras["cluster"]``.
+    """
+    system, est = sc.system, sc.estimator
+    if est.kind != "monte_carlo":
+        raise ValueError(
+            "cluster systems are simulated: use Estimator('monte_carlo') "
+            "(the working-set fixed point has no churn model)"
+        )
+    if est.replications > 1:
+        raise ValueError(
+            "cluster systems do not support ensemble replications yet"
+        )
+    n = sc.n_requests
+    if sc.workload.kind == "trace" and n < 1:
+        n = len(sc.workload.trace_proxies)
+    trace_seed, length_seed = derive_seeds(sc.seed)
+    streaming = use_streaming(sc, n)
+    lengths = sc.workload.object_lengths(length_seed)
+    warmup = (
+        sc.warmup
+        if sc.warmup is not None
+        else default_warmup(n, system.allocations)
+    )
+    warmup = min(warmup, n)
+    trace = sc.workload.sample(n, trace_seed)
+    res, cluster = simulate_cluster(
+        system.to_sim_params(),
+        trace,
+        sc.workload.n_objects,
+        nodes=system.nodes,
+        faults=system.faults,
+        lengths=lengths,
+        warmup=warmup,
+        ripple_from=sc.ripple_from,
+        engine=system.backend,
+        sparse=streaming,
+        fault_seed=cluster_fault_seed(sc.seed),
+    )
+    lam = _rates_for(sc)
+    per_proxy, overall = _hit_rates(res.occupancy, lam)
+    ripple = {
+        "evictions_per_set": {
+            str(k): int(c) for k, c in enumerate(res.evictions_per_set) if c
+        },
+        "n_sets_recorded": int(res.n_sets_recorded),
+        "n_primary": int(res.n_primary),
+        "n_ripple": int(res.n_ripple),
+        "n_batch_evictions": int(res.n_batch_evictions),
+        "frac_multi_eviction": float(res.frac_multi_eviction),
+        "mean_evictions": float(res.mean_evictions),
+    }
+    return Report(
+        scenario=sc.to_dict(),
+        estimator="monte_carlo",
+        backend=res.engine,
+        hit_prob=res.occupancy,
+        hit_rate=per_proxy,
+        overall_hit_rate=overall,
+        n_requests=res.n_requests,
+        warmup=res.warmup,
+        elapsed_s=res.elapsed_s,
+        throughput_rps=res.requests_per_sec,
+        realized_hit_rate=res.hit_rate_by_proxy,
+        ripple=ripple,
+        final_vlen=np.asarray(res.final_vlen, dtype=np.float64),
+        extras={
+            "n_hit_list": int(res.n_hit_list),
+            "n_hit_cache": int(res.n_hit_cache),
+            "n_miss": int(res.n_miss),
+            "streaming": bool(streaming),
+            "cluster": cluster,
         },
     )
 

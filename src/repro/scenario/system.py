@@ -18,6 +18,7 @@ from typing import Optional, Tuple
 
 import numpy as np
 
+from repro.core.cluster import FaultSpec
 from repro.core.fastsim import SimParams
 from repro.core.workingset import ATTRIBUTIONS
 
@@ -149,6 +150,19 @@ class System:
     admission:
         Optional :class:`AdmissionSpec` enabling the online Section
         IV-C admission-control loop (tenant-churn workloads only).
+    nodes:
+        Number of MCD-OS nodes behind the consistent-hash ring
+        (:mod:`repro.core.cluster`). ``1`` (default) is the paper's
+        single-server prototype; ``K > 1`` shards the object space
+        across K homogeneous nodes, each a full shared cache with these
+        ``allocations``.
+    faults:
+        Optional :class:`~repro.core.cluster.FaultSpec` fault-injection
+        schedule (scheduled + seeded-random ``fail`` / ``recover`` /
+        ``add`` / ``remove`` events, failover retry budget, recovery
+        windows). Setting it — even empty — routes the run through the
+        cluster simulator; per-phase hit rates, remap fractions and
+        recovery time land in ``Report.extras["cluster"]``.
     """
 
     variant: str = "lru"
@@ -162,6 +176,8 @@ class System:
     warm_frac: float = 0.32
     backend: str = "auto"
     admission: Optional[AdmissionSpec] = None
+    nodes: int = 1
+    faults: Optional[FaultSpec] = None
 
     def __post_init__(self) -> None:
         if self.variant not in VARIANTS:
@@ -188,6 +204,29 @@ class System:
                     "admission control models the flat shared-LRU "
                     "system (variant='lru')"
                 )
+        if self.nodes < 1:
+            raise ValueError("nodes must be >= 1")
+        if self.is_cluster:
+            if self.variant != "lru":
+                raise ValueError(
+                    "cluster simulation models the flat shared-LRU "
+                    "system (variant='lru')"
+                )
+            if self.backend not in ("auto", "c", "flat"):
+                raise ValueError(
+                    "cluster systems run on the chunk-fed fastsim "
+                    "backends: backend must be 'auto', 'c' or 'flat'"
+                )
+            if self.admission is not None:
+                raise ValueError(
+                    "admission control and cluster fault injection "
+                    "cannot be combined (one scenario axis at a time)"
+                )
+
+    @property
+    def is_cluster(self) -> bool:
+        """Whether this system runs through the cluster simulator."""
+        return self.nodes > 1 or self.faults is not None
 
     @property
     def n_proxies(self) -> int:
@@ -251,6 +290,8 @@ class System:
                 d[key] = tuple(d[key])
         if d.get("admission") is not None:
             d["admission"] = AdmissionSpec.from_dict(d["admission"])
+        if d.get("faults") is not None:
+            d["faults"] = FaultSpec.from_dict(d["faults"])
         return System(**d)
 
 

@@ -1,6 +1,6 @@
 """AdamW + cosine schedule + global-norm clipping, hand-rolled (no optax
-in this environment). State is a pytree mirroring params, so the ZeRO-1
-sharding rules in ``launch/sharding.py`` apply uniformly.
+in this environment). State is a pytree mirroring params, so ZeRO-1
+style sharding rules apply uniformly.
 """
 
 from __future__ import annotations

@@ -4,8 +4,8 @@ Mixed precision: params are fp32 masters; a bf16 cast copy feeds the
 forward/backward; grads come back fp32 (autodiff through the cast).
 Optional gradient accumulation (lax.scan over microbatches) and int8
 error-feedback gradient compression (see ``compression.py``) slot in
-here. The function is pure — pjit distributes it per the sharding rules
-in ``launch/sharding.py``.
+here. The function is pure — pjit distributes it per whatever
+sharding rules the launcher supplies.
 """
 
 from __future__ import annotations

@@ -1,0 +1,322 @@
+"""Fault-tolerant MCD-OS cluster: ring properties, fault injection,
+failover, and the scenario-layer contract.
+
+Covers the acceptance criteria of the cluster subsystem: virtual-node
+ring balance and minimal disruption (also for the MCD client's
+``consistent_route``), seeded bit-reproducibility, single-node
+equivalence (``nodes=1`` + empty ``FaultSpec`` == the plain Monte-Carlo
+path, bit for bit), and graceful degradation — killing one of K nodes
+mid-trace costs at most that node's request share, then the aggregate
+hit rate recovers to within tolerance of the pre-fault baseline after
+the warm restart.
+"""
+
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import consistent_route
+from repro.core.cluster import (
+    FaultSpec,
+    HashRing,
+    default_ring,
+    key_position,
+    key_positions,
+    simulate_cluster,
+)
+from repro.core.fastsim import SimParams, simulate_trace
+from repro.core.irm import rate_matrix, sample_trace
+from repro.scenario import Estimator, Scenario, System, Workload
+
+
+# ---------------------------------------------------------------------------
+# Ring properties
+# ---------------------------------------------------------------------------
+def _keyspace_shares(ring: HashRing, n_keys: int = 20_000) -> dict:
+    """Fraction of a pseudo-random key sample owned by each node."""
+    owners = ring.owner_of(key_positions(np.arange(n_keys)))
+    counts = {int(m): 0 for m in ring.nodes}
+    for m, c in zip(*np.unique(owners, return_counts=True)):
+        counts[int(m)] = int(c)
+    return {m: c / n_keys for m, c in counts.items()}
+
+
+def test_ring_balance_under_64_vnodes():
+    """Max/mean node load stays near 1 for a uniform key sample — the
+    balance property 64 virtual nodes are there to provide."""
+    for K in (3, 8):
+        shares = _keyspace_shares(HashRing(range(K), vnodes=64))
+        mean = 1.0 / K
+        assert max(shares.values()) / mean < 1.8, shares
+        assert min(shares.values()) / mean > 0.4, shares
+
+
+def test_ring_minimal_disruption_on_remove():
+    """Dropping one of K nodes remaps only that node's keys — about 1/K
+    of the key space and never a key the survivors already owned."""
+    K = 8
+    ring = HashRing(range(K), vnodes=64)
+    smaller = ring.without_node(K - 1)
+    pos = key_positions(np.arange(20_000))
+    before = ring.owner_of(pos)
+    after = smaller.owner_of(pos)
+    moved = before != after
+    # every moved key was owned by the removed node, nothing else moved
+    assert set(np.unique(before[moved]).tolist()) <= {K - 1}
+    assert not np.any((before != K - 1) & moved)
+    # ~1/K of the key space (generous noise bound for 64 vnodes)
+    frac = moved.mean()
+    assert 0.3 / K < frac < 2.5 / K, frac
+
+
+def test_ring_minimal_disruption_on_add():
+    ring = HashRing(range(4), vnodes=64)
+    grown = ring.with_node(9)
+    pos = key_positions(np.arange(20_000))
+    before = ring.owner_of(pos)
+    after = grown.owner_of(pos)
+    moved = before != after
+    # keys only ever move TO the new node
+    assert set(np.unique(after[moved]).tolist()) <= {9}
+    assert 0.3 / 5 < moved.mean() < 2.5 / 5
+
+
+def test_ring_membership_errors():
+    ring = HashRing(range(3))
+    with pytest.raises(ValueError):
+        ring.with_node(1)           # duplicate
+    with pytest.raises(ValueError):
+        ring.without_node(7)        # not a member
+    with pytest.raises(ValueError):
+        HashRing([5]).without_node(5)  # cannot empty the ring
+    with pytest.raises(ValueError):
+        HashRing([])
+
+
+def test_key_position_scalar_matches_vectorized():
+    ids = np.arange(257)
+    vec = key_positions(ids)
+    assert all(int(vec[i]) == key_position(int(i)) for i in ids)
+    # non-integer keys hash too (md5 path), deterministically
+    assert key_position("obj1") == key_position("obj1")
+    assert key_position("obj1") != key_position("obj2")
+
+
+def test_consistent_route_balance_and_minimal_disruption():
+    """The MCD client routing rule inherits the ring's properties:
+    shrinking the server count only remaps the removed server's keys."""
+    keys = [f"user/{i}/object" for i in range(3000)]
+    before = {k: consistent_route(k, 8) for k in keys}
+    after = {k: consistent_route(k, 7) for k in keys}
+    moved = [k for k in keys if before[k] != after[k]]
+    assert all(before[k] == 7 for k in moved)       # only server 7's keys
+    assert 0.3 / 8 < len(moved) / len(keys) < 2.5 / 8
+    counts = np.bincount([before[k] for k in keys], minlength=8)
+    assert counts.max() / counts.mean() < 1.8       # balanced
+    assert counts.min() > 0
+
+
+# ---------------------------------------------------------------------------
+# FaultSpec
+# ---------------------------------------------------------------------------
+def test_fault_spec_validation():
+    with pytest.raises(ValueError):
+        FaultSpec(events=((1.5, "fail", 0),))       # frac out of range
+    with pytest.raises(ValueError):
+        FaultSpec(events=((0.5, "explode", 0),))    # unknown action
+    with pytest.raises(ValueError):
+        FaultSpec(events=((0.5, "fail", -1),))      # bad node id
+    with pytest.raises(ValueError):
+        FaultSpec(retry_budget=-1)
+    with pytest.raises(ValueError):
+        FaultSpec(vnodes=0)
+    assert FaultSpec().is_empty
+    assert not FaultSpec(random_failures=1).is_empty
+
+
+def test_fault_spec_json_round_trip():
+    spec = FaultSpec(
+        events=((0.25, "fail", 1), (0.5, "recover", 1), (0.75, "add", 4)),
+        random_failures=2,
+        mttr_frac=0.1,
+        retry_budget=3,
+        warm_remapped=True,
+    )
+    back = FaultSpec.from_dict(json.loads(json.dumps(spec.to_dict())))
+    assert back == spec
+
+
+def test_fault_spec_materialize_is_seeded():
+    spec = FaultSpec(random_failures=3)
+    a = spec.materialize(100_000, 4, seed=9)
+    b = spec.materialize(100_000, 4, seed=9)
+    c = spec.materialize(100_000, 4, seed=10)
+    assert [e.to_dict() for e in a] == [e.to_dict() for e in b]
+    assert [e.to_dict() for e in a] != [e.to_dict() for e in c]
+    # every random fail has a matching later recover
+    fails = [e for e in a if e.action == "fail"]
+    recovers = [e for e in a if e.action == "recover"]
+    assert len(fails) == len(recovers) == 3
+    assert [e.idx for e in a] == sorted(e.idx for e in a)
+
+
+# ---------------------------------------------------------------------------
+# System / scenario integration
+# ---------------------------------------------------------------------------
+def _cluster_scenario(nodes=3, faults=None, **kw) -> Scenario:
+    base = dict(
+        name="cluster_t",
+        workload=Workload(n_objects=500, alphas=(0.7, 0.9, 1.1)),
+        system=System(
+            allocations=(24, 24, 24),
+            physical_capacity=500,
+            nodes=nodes,
+            faults=faults,
+        ),
+        estimator=Estimator("monte_carlo"),
+        n_requests=120_000,
+        warmup=12_000,
+        seed=13,
+    )
+    base.update(kw)
+    return Scenario(**base)
+
+
+def test_system_cluster_validation():
+    with pytest.raises(ValueError):
+        System(allocations=(8,), nodes=0)
+    with pytest.raises(ValueError):
+        System(allocations=(8,), variant="slru", nodes=2)
+    with pytest.raises(ValueError):
+        System(allocations=(8,), backend="xla", nodes=2)
+    with pytest.raises(ValueError):
+        _cluster_scenario(estimator=Estimator("working_set")).run()
+    assert not System(allocations=(8,)).is_cluster
+    assert System(allocations=(8,), nodes=2).is_cluster
+    assert System(allocations=(8,), faults=FaultSpec()).is_cluster
+
+
+def test_cluster_scenario_json_round_trip_and_scaled():
+    sc = _cluster_scenario(
+        faults=FaultSpec(events=((0.4, "fail", 1), (0.6, "recover", 1)))
+    )
+    back = Scenario.from_json(sc.to_json())
+    assert back == sc
+    small = sc.scaled(requests=0.1, catalogue=0.5)
+    assert small.system.nodes == sc.system.nodes
+    assert small.system.faults == sc.system.faults  # fractions survive
+
+
+def test_cluster_single_node_no_faults_is_exact():
+    """nodes=1 + empty FaultSpec must reproduce the plain single-node
+    Report estimates bit for bit (the cluster layer adds zero noise)."""
+    sc = _cluster_scenario(nodes=1, faults=None)
+    plain = sc.run()
+    clustered = dataclasses.replace(
+        sc, system=dataclasses.replace(sc.system, faults=FaultSpec())
+    ).run()
+    assert plain.same_estimates(clustered)
+    assert "cluster" in clustered.extras
+    assert "cluster" not in plain.extras
+
+
+def test_cluster_run_is_bit_reproducible():
+    spec = FaultSpec(
+        events=((0.5, "remove", 2),), random_failures=1, retry_budget=1
+    )
+    sc = _cluster_scenario(faults=spec)
+    a, b = sc.run(), sc.run()
+    assert a.same_estimates(b)
+    assert a.extras["cluster"] == b.extras["cluster"]
+
+
+def test_cluster_failover_degrades_bounded_then_recovers():
+    """Kill one of K nodes mid-trace: the aggregate hit rate drops by at
+    most the failed node's request share (every request it would have
+    served can at worst become a miss), then returns to within 2% of the
+    pre-fault baseline after the warm recovery window."""
+    spec = FaultSpec(events=((0.4, "fail", 1), (0.7, "recover", 1)))
+    sc = _cluster_scenario(nodes=3, faults=spec, n_requests=240_000,
+                           warmup=24_000)
+    rep = sc.run()
+    cl = rep.extras["cluster"]
+    pre = cl["phases"]["pre_fault"]
+    during = cl["phases"]["during"]
+    post = cl["phases"]["post_recovery"]
+    assert pre is not None and during is not None and post is not None
+
+    # the failed node's request share over the outage window, recomputed
+    # from the ring (state-independent routing makes this exact)
+    from repro.scenario.runner import derive_seeds
+
+    n = sc.n_requests
+    trace = sc.workload.sample(n, derive_seeds(sc.seed)[0])
+    ring = HashRing(range(3), vnodes=spec.vnodes)
+    lo, hi = int(round(0.4 * n)), int(round(0.7 * n))
+    owners = ring.owner_of(key_positions(trace.objects[lo:hi]))
+    share = float((owners == 1).mean())
+
+    degradation = pre["hit_rate"] - during["hit_rate"]
+    assert degradation > 0.01            # the outage is visible...
+    assert degradation <= share + 0.02   # ...but bounded by the key share
+    # warm restart: back to baseline within the acceptance tolerance
+    assert abs(post["hit_rate"] - pre["hit_rate"]) < 0.02
+    assert cl["recovery"]["recovered"]
+    assert cl["retries"]["total"] > 0
+    # node 1 was down for ~30% of the trace
+    down = [p for p in cl["per_node"] if p["node"] == 1][0]
+    assert 0.25 < down["downtime_frac"] < 0.35
+
+
+def test_cluster_degraded_mode_counts_misses():
+    """retry_budget=0 with every node down routes nowhere: requests in
+    the outage window become degraded misses, not errors."""
+    spec = FaultSpec(
+        events=((0.5, "fail", 0), (0.5, "fail", 1)), retry_budget=0
+    )
+    params = SimParams(allocations=(24, 24), physical_capacity=400)
+    lam = rate_matrix(400, (0.8, 1.0))
+    trace = sample_trace(lam, 40_000, seed=3)
+    res, stats = simulate_cluster(
+        params, trace, 400, nodes=2, faults=spec, warmup=4_000
+    )
+    assert stats["retries"]["degraded_requests"] > 0
+    # degraded requests are charged as misses in the aggregate
+    assert res.n_requests == 40_000
+    assert int(res.reqs_by_proxy.sum()) == 40_000 - 4_000
+
+
+def test_cluster_remove_reshards_and_reports_remap():
+    spec = FaultSpec(events=((0.5, "remove", 2),))
+    sc = _cluster_scenario(faults=spec)
+    cl = sc.run().extras["cluster"]
+    (remap,) = cl["remap"]
+    assert remap["action"] == "remove"
+    assert remap["node"] == 2
+    assert 0.05 < remap["fraction"] < 0.75  # ~1/3 of keys at K=3
+
+
+def test_cluster_warm_remapped_reduces_cold_misses():
+    """Ghost-warming remapped keys after a reshard must not hurt — the
+    post-event hit rate with warming >= without (same trace, same ring)."""
+    lam = rate_matrix(300, (0.9, 1.1))
+    trace = sample_trace(lam, 80_000, seed=11)
+    params = SimParams(allocations=(32, 32), physical_capacity=300)
+    out = {}
+    for warm in (False, True):
+        spec = FaultSpec(events=((0.5, "remove", 2),), warm_remapped=warm)
+        _, stats = simulate_cluster(
+            params, trace, 300, nodes=3, faults=spec, warmup=8_000,
+            fault_seed=1,
+        )
+        # mean hit rate over the windows after the reshard
+        win = stats["windows"]
+        post = [
+            hr
+            for start, hr in zip(win["starts"], win["hit_rate"])
+            if start >= 40_000
+        ]
+        out[warm] = float(np.mean(post))
+    assert out[True] >= out[False] - 0.005, out

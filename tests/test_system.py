@@ -81,6 +81,29 @@ def test_consistent_route_stability():
     assert spread == 8  # uses all servers
 
 
+def test_process_command_error_paths():
+    """The MCD-OS wire protocol must reject malformed requests cleanly:
+    unknown commands, out-of-range proxy ids, and nonpositive lengths
+    all raise ValueError instead of corrupting cache state."""
+    srv = MCDOSServer([16, 16, 16], 100)
+    with pytest.raises(ValueError):
+        srv.process_command(0, "delete", 1)      # unknown command
+    with pytest.raises(ValueError):
+        srv.process_command(0, "set", 1)         # set without a length
+    for bad_proxy in (-1, 3, 17):
+        with pytest.raises(ValueError):
+            srv.process_command(bad_proxy, "get", 1)
+        with pytest.raises(ValueError):
+            srv.process_command(bad_proxy, "set", 1, 1)
+    for bad_len in (0, -4):
+        with pytest.raises(ValueError):
+            srv.process_command(0, "set", 1, bad_len)
+    # the failures left the server fully usable
+    assert srv.process_command(0, "get", 1).result is GetResult.MISS
+    srv.process_command(0, "set", 1, 1)
+    assert srv.process_command(0, "get", 1).result is GetResult.HIT_LIST
+
+
 def test_live_engine_decode_round_trip():
     """Engine with a real reduced model: same prompt twice -> identical
     outputs, second request served from shared cache."""
