@@ -1,78 +1,155 @@
-"""Serving-side benefit of object sharing (the framework-integration
-benchmark): multi-tenant engine in accounting mode under overlapping vs
-disjoint workloads — prefill FLOPs saved, sharing ratio, ripple overhead.
+"""Multi-tenant KV prefix-cache serving sweep on the fast engine.
 
-This is the paper's Prop. 3.1 economics transplanted to LLM serving:
-shared prefix blocks are charged l/|P(n)|, so tenants with overlapping
-demand effectively enlarge each other's caches.
+The paper's Prop. 3.1 economics transplanted to LLM serving, at trace
+scale: the ``serving_multitenant`` preset compiles each cell's
+prompt-stream model to a (tenant, KV-block) trace and drives it through
+the fastsim C backend — millions of block events per cell instead of
+the hundreds the per-call reference engine manages. Three axes:
+
+* **tenants** — sharing partners at fixed overlap (each new tenant
+  splits the shared head blocks' charge further, eq. (5));
+* **prefix overlap** — ``shared_frac`` from fully disjoint prompt pools
+  to near-total system-prompt reuse (the overlap-vs-disjoint gain is
+  the headline number);
+* **traffic mix** — uniform, ramped, and head-heavy per-tenant request
+  rates over the same geometry.
+
+Every cell runs admission-gated onboarding (``B = 4 b*`` against
+``sum b* = T b*``), so the artifact also records how many tenants the
+eq. (13) test seats and the realized-vs-predicted SLA gap.
 """
 
 from __future__ import annotations
 
-import numpy as np
+import dataclasses
 
-from repro.cacheblocks import layout_for
-from repro.configs import get_config
-from repro.serving import EngineConfig, ServingEngine, TenantSpec
+from repro.scenario import Scenario, get_preset
 
-from .common import Timer, csv_row, quick_mode, save_artifact
+from .common import FULL, Timer, csv_row, quick_mode, save_artifact
+
+TENANT_SWEEP = (2, 4, 6, 8)
+OVERLAP_SWEEP = (0.0, 0.5, 0.75, 0.9)
+BASE_TENANTS = 6
+BASE_OVERLAP = 0.75
 
 
-def run_scenario(overlap: bool, n_requests: int = 600, seed: int = 0) -> dict:
-    rng = np.random.default_rng(seed)
-    cfg = get_config("qwen3-1.7b").reduced()
-    ecfg = EngineConfig(block_tokens=8, pool_blocks=1024)
-    layout = layout_for(cfg, block_tokens=8)
-    pool_bytes = ecfg.pool_blocks * layout.bytes_per_block
-    engine = ServingEngine(
-        cfg,
-        tenants=[
-            TenantSpec("A", 0.30 * pool_bytes),
-            TenantSpec("B", 0.30 * pool_bytes),
-            TenantSpec("C", 0.30 * pool_bytes),
-        ],
-        engine_cfg=ecfg,
+def requests_factor() -> float:
+    """10M block events per cell at paper scale; ~2M by default."""
+    if FULL:
+        return 1.0
+    return 0.01 if quick_mode() else 0.2
+
+
+def _mix(kind: str, n_tenants: int):
+    if kind == "uniform":
+        return tuple(1.0 for _ in range(n_tenants))
+    if kind == "ramp":  # the preset default
+        return tuple(1.0 + 0.25 * i for i in range(n_tenants))
+    if kind == "head":  # one hot tenant dominates
+        return tuple(4.0 if i == 0 else 1.0 for i in range(n_tenants))
+    raise ValueError(kind)
+
+
+def scenario(n_tenants: int, shared_frac: float, mix: str) -> Scenario:
+    sc = get_preset(
+        "serving_multitenant", n_tenants=n_tenants, shared_frac=shared_frac
+    ).scaled(requests=requests_factor())
+    return dataclasses.replace(
+        sc,
+        name=f"serving/T{n_tenants}/f{shared_frac:g}/{mix}",
+        workload=dataclasses.replace(
+            sc.workload, proxy_rates=_mix(mix, n_tenants)
+        ),
     )
-    # popularity over prompt prefixes: Zipf like the paper's IRM
-    n_prompts = 64
-    ranks = np.arange(1, n_prompts + 1)
-    p = ranks ** -1.0
-    p /= p.sum()
-    shared_prompts = [rng.integers(0, cfg.vocab_size, 64) for _ in range(n_prompts)]
-    private = {
-        t: [rng.integers(0, cfg.vocab_size, 64) for _ in range(n_prompts)]
-        for t in ("A", "B", "C")
+
+
+def _cell(sc: Scenario) -> dict:
+    rep = sc.run()
+    sv = rep.serving
+    adm = sv["admission"]
+    return {
+        "hit_ratio": sv["prefix_hit_block_ratio"],
+        "n_block_events": sv["n_block_events"],
+        "n_serving_requests": sv["n_serving_requests"],
+        "prefill_flops_saved": sv["prefill_flops_saved"],
+        "bytes_shared_lb": sv["bytes_shared_lb"],
+        "latency_mean_s": sv["latency_mean_s"],
+        "latency_p99_s": sv["latency_p99_s"],
+        "latency_cold_s": sv["latency_cold_s"],
+        "tenants_active": len(adm["active_tenants"]),
+        "tenants_declared": sv["tenants"],
+        "n_rejected": adm["n_rejected"],
+        "overbooked": adm["overbooked"],
+        "overbooking_gain": adm["overbooking_gain"],
+        "max_abs_sla_gap": adm["max_abs_sla_gap"],
+        "backend": rep.backend,
+        "throughput_rps": rep.throughput_rps,
+        "serving": sv,
     }
-    for _ in range(n_requests):
-        t = rng.choice(["A", "B", "C"])
-        idx = rng.choice(n_prompts, p=p)
-        prompt = shared_prompts[idx] if overlap else private[t][idx]
-        user = rng.integers(0, cfg.vocab_size, 16)
-        engine.submit(t, np.concatenate([prompt, user]), max_new_tokens=0)
-    return engine.stats()
 
 
 def main() -> dict:
-    n_requests = 120 if quick_mode() else 600
+    cells: dict = {}
+    scenarios: dict = {}
+    specs: dict = {}
+    for t in TENANT_SWEEP:
+        specs[f"T{t}/f{BASE_OVERLAP:g}/ramp"] = (t, BASE_OVERLAP, "ramp")
+    for f in OVERLAP_SWEEP:
+        specs[f"T{BASE_TENANTS}/f{f:g}/ramp"] = (BASE_TENANTS, f, "ramp")
+    for m in ("uniform", "ramp", "head"):
+        specs[f"T{BASE_TENANTS}/f{BASE_OVERLAP:g}/{m}"] = (
+            BASE_TENANTS,
+            BASE_OVERLAP,
+            m,
+        )
+
     with Timer() as tm:
-        shared = run_scenario(overlap=True, n_requests=n_requests)
-        disjoint = run_scenario(overlap=False, n_requests=n_requests)
-    gain = (
-        shared["prefix_hit_token_ratio"]
-        / max(disjoint["prefix_hit_token_ratio"], 1e-9)
-    )
-    payload = {"overlapping": shared, "disjoint": disjoint,
-               "hit_ratio_gain": gain}
+        for key, (t, f, m) in specs.items():
+            sc = scenario(t, f, m)
+            scenarios[key] = sc.to_dict()
+            cells[key] = _cell(sc)
+        # determinism probe: the base cell rerun must be bit-identical
+        base_key = f"T{BASE_TENANTS}/f{BASE_OVERLAP:g}/ramp"
+        rerun = _cell(scenario(BASE_TENANTS, BASE_OVERLAP, "ramp"))
+    drop_wall = lambda c: {k: v for k, v in c.items() if k != "throughput_rps"}
+    if drop_wall(rerun) != drop_wall(cells[base_key]):
+        raise RuntimeError(
+            "serving sweep is not bit-reproducible under a fixed seed"
+        )
+
+    overlap = cells[f"T{BASE_TENANTS}/f0.9/ramp"]["hit_ratio"]
+    disjoint = cells[f"T{BASE_TENANTS}/f0/ramp"]["hit_ratio"]
+    gain = overlap / max(disjoint, 1e-9)
+    total_events = sum(c["n_block_events"] for c in cells.values())
+    payload = {
+        "preset": "serving_multitenant",
+        "scenarios": scenarios,
+        "sweep": cells,
+        "hit_ratio_gain_overlap_vs_disjoint": gain,
+        "base_cell": base_key,
+        "n_total_block_events": total_events,
+        "bitidentical_rerun": True,
+    }
     save_artifact("serving", payload)
-    print("# multi-tenant serving: overlapping vs disjoint workloads")
-    for name, s in (("overlapping", shared), ("disjoint", disjoint)):
-        print(f"  {name:12s} hit_ratio={s['prefix_hit_token_ratio']:.3f} "
-              f"sharing={s['sharing_ratio']:.2f} "
-              f"ripple={s['ripple_evictions']} "
-              f"flops_saved={s['flops_saved']:.3g}")
-    print(f"# object sharing raises prefix hit ratio {gain:.2f}x under "
-          f"overlapping demand (Prop 3.1 in serving form)")
-    csv_row("serving", tm.seconds * 1e6 / (2 * n_requests), f"hit_gain={gain:.3f}")
+
+    print("# multi-tenant serving sweep (tenants x overlap x mix)")
+    for key, c in cells.items():
+        print(
+            f"  {key:16s} hit={c['hit_ratio']:.3f} "
+            f"active={c['tenants_active']}/{c['tenants_declared']} "
+            f"overbook={c['overbooking_gain']:.2f} "
+            f"flops_saved={c['prefill_flops_saved']:.3g} "
+            f"p99={c['latency_p99_s']:.2e}s"
+        )
+    print(
+        f"# object sharing raises the prefix hit ratio {gain:.2f}x "
+        "(90%-shared vs disjoint prompt pools; Prop. 3.1 in serving form)"
+    )
+    csv_row(
+        "serving",
+        tm.seconds * 1e6 / max(total_events, 1),
+        f"hit_gain={gain:.3f}",
+    )
     return payload
 
 

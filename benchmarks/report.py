@@ -401,20 +401,42 @@ def render_admission(d: dict) -> List[str]:
 
 
 def render_serving(d: dict) -> List[str]:
-    sh, dj = d["overlapping"], d["disjoint"]
-    return [
-        f"Prefix hit-token ratio {sh['prefix_hit_token_ratio']:.3f} "
-        f"(overlapping tenants) vs {dj['prefix_hit_token_ratio']:.3f} "
-        f"(disjoint) — object sharing raises it "
-        f"**{d['hit_ratio_gain']:.2f}x** (Prop. 3.1 in serving form).",
+    out = _scenario_note(d) + [
+        f"Overlap-vs-disjoint prefix hit-ratio gain: "
+        f"**{d['hit_ratio_gain_overlap_vs_disjoint']:.2f}x** "
+        f"(90%-shared vs fully disjoint prompt pools, Prop. 3.1 in "
+        f"serving form), over {d['n_total_block_events']:,} compiled "
+        f"block events total; base-cell rerun bit-identical: "
+        f"{d['bitidentical_rerun']}.",
+        "",
+        "| cell | hit ratio | active | overbooking | FLOPs saved | "
+        "p99 latency | SLA gap |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for key, c in d["sweep"].items():
+        out.append(
+            f"| {key} | {c['hit_ratio']:.4f} | "
+            f"{c['tenants_active']}/{c['tenants_declared']} | "
+            f"{c['overbooking_gain']:.2f} | "
+            f"{c['prefill_flops_saved']:.3g} | "
+            f"{c['latency_p99_s']:.2e} s | {c['max_abs_sla_gap']:.4f} |"
+        )
+    out += [
         "",
         _prose(
-            "The same economics transplanted to LLM serving: tenants "
-            "sharing prefix blocks in one paged KV pool hit more "
-            "cached tokens than tenants with disjoint prefixes at "
-            "equal pool size."
+            "The paper's economics transplanted to LLM serving at trace "
+            "scale: each cell compiles a multi-tenant prompt-stream "
+            "model to a (tenant, KV-block) trace and drives it through "
+            "the fastsim C engine, with eq. (13) admission gating the "
+            "onboarding. The hit ratio climbs with both overlap and "
+            "tenant count (every extra sharing partner splits the "
+            "shared blocks' charge further), prefill-FLOPs savings are "
+            "priced via the qwen3-1.7b paged-KV layout, and the "
+            "realized hit rates stay within Monte-Carlo noise of the "
+            "admission controller's dedicated-cache promises."
         ),
     ]
+    return out
 
 
 def render_cluster(d: dict) -> List[str]:
@@ -460,16 +482,6 @@ def render_cluster(d: dict) -> List[str]:
     return out
 
 
-def render_roofline(d: dict) -> List[str]:
-    if not d:
-        return ["No dry-run artifacts (sweep not run)."]
-    return [
-        f"{d['n_cells']} (arch x shape x mesh) cells; bottlenecks: "
-        f"{d['bottleneck_counts']}; {d['fits_hbm']}/{d['n_cells']} fit "
-        "16 GB HBM.",
-    ]
-
-
 def render_generic(d: dict) -> List[str]:
     scalars = {
         k: v
@@ -494,7 +506,6 @@ RENDERERS: Dict[str, Callable[[dict], List[str]]] = {
     "admission": render_admission,
     "cluster": render_cluster,
     "serving": render_serving,
-    "roofline": render_roofline,
 }
 
 TITLES = {
@@ -508,8 +519,8 @@ TITLES = {
     "simthroughput": "Monte-Carlo engine throughput",
     "admission": "Section IV-C — overbooking & admission control",
     "cluster": "Section VI — fault-tolerant MCD-OS cluster (churn & failover)",
-    "serving": "Serving-side sharing (LLM prefix caches)",
-    "roofline": "Roofline report",
+    "serving": "Serving — multi-tenant KV prefix-cache sweep",
+    "serving_smoke": "Serving smoke (CI gate)",
 }
 
 

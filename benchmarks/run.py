@@ -1,5 +1,5 @@
-"""Benchmark harness: one module per paper table/figure + the roofline
-report. Prints ``name,us_per_call,derived`` CSV rows (one per experiment)
+"""Benchmark harness: one module per paper table/figure + the serving
+sweep. Prints ``name,us_per_call,derived`` CSV rows (one per experiment)
 and writes JSON artifacts under ``benchmarks/artifacts/``.
 
 Usage:
@@ -30,8 +30,8 @@ BENCHES = [
     ("large_n_smoke", "benchmarks.large_n_smoke"),        # streaming + RSS guard
     ("admission", "benchmarks.bench_admission"),
     ("cluster", "benchmarks.bench_cluster"),              # K x failure-rate sweep
-    ("serving", "benchmarks.bench_serving"),
-    ("roofline", "benchmarks.bench_roofline"),
+    ("serving", "benchmarks.bench_serving"),      # tenants x overlap x mix
+    ("serving_smoke", "benchmarks.serving_smoke"),
 ]
 
 

@@ -1,6 +1,27 @@
 """Device-side physical cache: paged KV pool + tenant-facing prefix
-cache backed by the paper's object-sharing LRU manager."""
+cache backed by the paper's object-sharing LRU manager.
 
-from .kv_layout import KVLayout, layout_for  # noqa: F401
-from .block_pool import BlockPool  # noqa: F401
-from .prefix_cache import SharedPrefixCache, PrefixLookup  # noqa: F401
+Names resolve lazily (PEP 562): ``kv_layout`` and ``prefix_cache`` are
+pure numpy, but ``block_pool`` imports jax — deferring keeps the layout
+math and the trace compiler usable without the device stack.
+"""
+
+_LAZY = {
+    "KVLayout": ".kv_layout",
+    "layout_for": ".kv_layout",
+    "BlockPool": ".block_pool",
+    "SharedPrefixCache": ".prefix_cache",
+    "PrefixLookup": ".prefix_cache",
+    "InsertStats": ".prefix_cache",
+}
+
+__all__ = sorted(_LAZY)
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+
+        mod = importlib.import_module(_LAZY[name], __name__)
+        return getattr(mod, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -27,7 +27,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.shared_lru import GetResult, RequestStats, SharedLRUCache
+from repro.core.shared_lru import EvictionEvent, GetResult, SharedLRUCache
 
 from .block_pool import BlockPool
 from .kv_layout import KVLayout
@@ -38,6 +38,22 @@ def _chain_hash(prev: bytes, token_block: Sequence[int]) -> bytes:
     h.update(prev)
     h.update(np.asarray(token_block, dtype=np.int64).tobytes())
     return h.digest()
+
+
+@dataclass
+class InsertStats:
+    """Aggregate outcome of :meth:`SharedPrefixCache.insert`.
+
+    ``result``/``evictions`` describe the *last* block's ``set`` (the
+    deepest prefix extension); the totals aggregate every ``set`` in the
+    insert, so callers no longer have to sum per-block stats themselves.
+    """
+
+    result: GetResult
+    evictions: List[EvictionEvent] = field(default_factory=list)
+    total_evictions: int = 0
+    total_ripple: int = 0
+    new_pages: int = 0             # pool pages allocated by this insert
 
 
 @dataclass
@@ -83,6 +99,16 @@ class SharedPrefixCache:
             ghost_retention=ghost_retention,
             ripple_allocations=ripple,
         )
+        if self.manager.B > pool.n_blocks:
+            # The manager's eviction loop only guarantees resident blocks
+            # <= its capacity B; if B exceeds the pool, insert() would hit
+            # pool exhaustion on a perfectly legal cache state. Refuse the
+            # oversubscription up front instead of skipping pages later.
+            raise ValueError(
+                f"cache capacity {self.manager.B} blocks exceeds the "
+                f"physical pool ({pool.n_blocks} blocks); shrink tenant "
+                "allocations or grow the pool"
+            )
         self.manager.physical_evict_hook = self._on_physical_evict
         # object key -> physical page id
         self.pages: Dict[bytes, int] = {}
@@ -125,32 +151,30 @@ class SharedPrefixCache:
 
     def insert(
         self, tenant: str, token_ids: Sequence[int], start_block: int = 0
-    ) -> Tuple[List[int], RequestStats]:
+    ) -> Tuple[List[int], InsertStats]:
         """Write-back after prefill: ``set`` each block object from
         ``start_block`` on; allocates physical pages for new objects.
-        Returns (page ids for the inserted range, last set stats)."""
+        Returns (page ids for the inserted range, aggregate stats)."""
         ti = self.tenant_idx[tenant]
         keys = self._keys_for(token_ids)
         pages: List[int] = []
-        last = RequestStats(GetResult.MISS)
-        n_evt = 0
-        n_rip = 0
+        stats = InsertStats(GetResult.MISS)
         for key in keys[start_block:]:
             # the manager accounts in block units: every object = 1 block.
             # set() FIRST: its ghost evictions free pool pages (via the
             # physical-evict hook) before we allocate the new one — the
-            # manager guarantees resident blocks <= pool size.
+            # __init__ capacity check guarantees resident blocks fit the
+            # pool, so a fresh block always gets a page.
             last = self.manager.set(ti, key, 1)
-            n_evt += last.n_evictions
-            n_rip += last.n_ripple
-            if key in self.manager.length and key not in self.pages:
+            stats.result = last.result
+            stats.evictions = last.evictions
+            stats.total_evictions += last.n_evictions
+            stats.total_ripple += last.n_ripple
+            if key not in self.pages:
                 self.pages[key] = self.pool.alloc(1)[0]
-            if key in self.pages:
-                pages.append(self.pages[key])
-        last_total = RequestStats(last.result, last.evictions)
-        last_total.total_evictions = n_evt   # type: ignore[attr-defined]
-        last_total.total_ripple = n_rip      # type: ignore[attr-defined]
-        return pages, last_total
+                stats.new_pages += 1
+            pages.append(self.pages[key])
+        return pages, stats
 
     def block_table(self, tenant: str, token_ids: Sequence[int]) -> np.ndarray:
         """Physical page ids for a fully-resident prefix (decode path)."""

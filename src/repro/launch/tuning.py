@@ -20,7 +20,7 @@ def kv_chunk(default: int = 1024) -> int:
 def remat_policy(default: str = "full") -> str:
     """'full' (nothing_saveable) is the baseline: 9.8 GB/device temp for
     qwen3 train_4k vs 18.2 GB with 'dots' (> v5e HBM). Costs +1x forward
-    recompute — priced in roofline/costmodel.py."""
+    recompute — priced in serving/costs.py."""
     return os.environ.get("REPRO_REMAT_POLICY", default)
 
 

@@ -16,8 +16,9 @@ Axes
 ----
 * :class:`Workload` — stationary IRM/Zipf (per-proxy heterogeneous
   alphas), shot-noise/non-stationary popularity churn, explicit trace
-  replay, or a ``tenant_churn`` admission episode; object-size
-  distributions via :class:`LengthSpec`.
+  replay, a ``tenant_churn`` admission episode, or a ``serving``
+  multi-tenant KV prefix-cache scenario; object-size distributions via
+  :class:`LengthSpec`.
 * :class:`System` — flat shared LRU, S-LRU, not-shared, pooled; ghost
   retention, RRE slack/batch config; backend selection across the
   reference ``SharedLRUCache`` and the fastsim Python/C/XLA drivers;
@@ -84,6 +85,30 @@ its virtual allocations with the configured estimator — the returned
 ``extras["admission"]``. The ``admission_overbooking`` preset packages
 the paper-scale version.
 
+Serving workloads (KV prefix caching)
+-------------------------------------
+``Workload(kind="serving")`` declares a multi-tenant LLM-serving
+prompt-stream model — per-tenant Zipf popularity over a prompt
+catalogue whose system-prompt/few-shot prefixes come from a partially
+shared pool, plus per-prompt user-suffix variants — and compiles it to
+a (tenant, KV-block) trace: every block-aligned prefix extension is one
+chained-key object, so prefix-block residency runs through the same
+fastsim engines as every other workload (millions of requests/s)
+instead of the per-call reference ``SharedPrefixCache``::
+
+    sc = get_preset("serving_multitenant").scaled(requests=0.1)
+    rep = sc.run()
+    rep.serving["prefix_hit_token_ratio"]   # tokens served from cache
+    rep.serving["prefill_flops_saved"]      # priced via kv_arch
+    rep.serving["admission"]                # gated onboarding record
+
+The trace compiler is proven block-for-block equivalent to driving
+``SharedPrefixCache.lookup/insert`` per request
+(``tests/test_serving_trace.py``); :class:`ServingReport` documents
+every derived metric. With ``System(admission=AdmissionSpec())``,
+tenant onboarding is gated by the eq. (13) predicted-SLA test before
+the trace runs.
+
 Named presets cover every paper experiment (``list_presets()``); the
 older entry points (``SimParams``/``simulate_trace``,
 ``solve_workingset``, ``MCDOSServer.run_trace``) remain supported as the
@@ -92,7 +117,7 @@ low-level layer this package drives.
 
 from repro.core.cluster import FaultSpec  # noqa: F401
 
-from .report import Report  # noqa: F401
+from .report import Report, ServingReport  # noqa: F401
 from .scenario import Scenario  # noqa: F401
 from .system import AdmissionSpec, Estimator, System  # noqa: F401
 from .workload import LengthSpec, Workload  # noqa: F401
@@ -106,6 +131,7 @@ __all__ = [
     "PRESETS",
     "Report",
     "Scenario",
+    "ServingReport",
     "System",
     "Workload",
     "get_preset",

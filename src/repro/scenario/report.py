@@ -52,6 +52,72 @@ def _z_value(level: float) -> float:
 
 
 @dataclass
+class ServingReport:
+    """Serving-side translation of a block-trace run's counters.
+
+    Built by the serving runner and stored as a plain dict in
+    ``Report.extras["serving"]`` (read it back with
+    :meth:`Report.serving`). All byte/FLOP figures use the workload's
+    ``kv_arch`` KV layout and prefill pricing; with ``kv_arch=None``
+    they are in block/"FLOP-unit" terms (1 block = 1 byte = 1 unit).
+    """
+
+    tenants: int                     # declared tenants T
+    active_tenants: Tuple[int, ...]  # onboarded (all, without admission)
+    blocks_per_request: int
+    block_tokens: int
+    bytes_per_block: float
+    kv_arch: Optional[str]
+    n_block_events: int              # driven block events (whole trace)
+    n_serving_requests: float        # block events / blocks_per_request
+    # hit economics
+    prefix_hit_block_ratio: float    # resident-block ratio over the trace
+    prefix_hit_token_ratio: float    # == block ratio (whole-block hits)
+    prefill_tokens_saved: float
+    flops_per_token: float
+    prefill_flops_saved: float
+    # sharing economics (expected, from steady-state occupancy)
+    bytes_shared_lb: float           # sum_k l_k * max(0, sum_i occ - 1)
+    unshared_equivalent_bytes: float  # sum_{i,k} occ * l_k
+    final_virtual_bytes: Optional[Tuple[float, ...]]  # per tenant
+    # latency proxy (single-chip roofline prefill of expected miss tokens)
+    latency_mean_s: float
+    latency_p99_s: float
+    latency_cold_s: float            # fully-cold request (no cached prefix)
+    admission: Optional[dict] = None  # onboarding episode, when gated
+
+    def to_dict(self) -> dict:
+        return {
+            "tenants": int(self.tenants),
+            "active_tenants": [int(t) for t in self.active_tenants],
+            "blocks_per_request": int(self.blocks_per_request),
+            "block_tokens": int(self.block_tokens),
+            "bytes_per_block": float(self.bytes_per_block),
+            "kv_arch": self.kv_arch,
+            "n_block_events": int(self.n_block_events),
+            "n_serving_requests": float(self.n_serving_requests),
+            "prefix_hit_block_ratio": float(self.prefix_hit_block_ratio),
+            "prefix_hit_token_ratio": float(self.prefix_hit_token_ratio),
+            "prefill_tokens_saved": float(self.prefill_tokens_saved),
+            "flops_per_token": float(self.flops_per_token),
+            "prefill_flops_saved": float(self.prefill_flops_saved),
+            "bytes_shared_lb": float(self.bytes_shared_lb),
+            "unshared_equivalent_bytes": float(
+                self.unshared_equivalent_bytes
+            ),
+            "final_virtual_bytes": (
+                None
+                if self.final_virtual_bytes is None
+                else [float(v) for v in self.final_virtual_bytes]
+            ),
+            "latency_mean_s": float(self.latency_mean_s),
+            "latency_p99_s": float(self.latency_p99_s),
+            "latency_cold_s": float(self.latency_cold_s),
+            "admission": self.admission,
+        }
+
+
+@dataclass
 class Report:
     """Unified output of :meth:`repro.scenario.Scenario.run`."""
 
@@ -166,6 +232,13 @@ class Report:
         return mean, mean - half, mean + half
 
     # ------------------------------------------------------------------
+    @property
+    def serving(self) -> Optional[dict]:
+        """The serving-metrics payload (``extras["serving"]``), or None
+        for non-serving scenarios. See :class:`ServingReport` for the
+        field semantics."""
+        return self.extras.get("serving")
+
     @property
     def hit_prob_is_sparse(self) -> bool:
         return isinstance(self.hit_prob, SparseOccupancy)

@@ -17,6 +17,14 @@ Dispatches on the system and estimator:
 * ``working_set`` — solves the paper's eq. (8) fixed point
   (:func:`repro.core.workingset.solve_workingset`) on the workload's
   (time-average) rate matrix. No trace is sampled.
+* ``Workload(kind="serving")`` — compiles the multi-tenant prompt
+  streams to a (tenant, KV-block) trace (:mod:`repro.serving.trace`)
+  and runs it through the Monte-Carlo or working-set path above, then
+  translates the block counters into serving economics
+  (:class:`~repro.scenario.report.ServingReport`, stored in
+  ``Report.extras["serving"]``). With ``System(admission=...)``,
+  tenant onboarding is first gated by the eq. (13) test on the
+  declared rates (:func:`_serving_onboarding`).
 * ``System(admission=...)`` + a ``tenant_churn`` workload — replays the
   Section IV-C admission episode (:func:`_run_admission`): arrivals and
   departures flow through an
@@ -56,7 +64,9 @@ from repro.core.shared_lru import GetResult, SharedLRUCache
 from repro.core.slru import SegmentedSharedLRUCache
 from repro.core.workingset import solve_workingset, solve_workingset_unshared
 
-from .report import Report
+from repro.serving.trace import popularity
+
+from .report import Report, ServingReport
 from .scenario import Scenario
 from .system import System
 from .workload import Workload
@@ -70,6 +80,8 @@ STREAMING_STATE_CELLS = 4_000_000
 
 
 def run_scenario(sc: Scenario) -> Report:
+    if sc.workload.kind == "serving":
+        return _run_serving(sc)
     if sc.system.admission is not None:
         return _run_admission(sc)
     if sc.workload.kind == "tenant_churn":
@@ -931,4 +943,297 @@ def _run_admission(sc: Scenario) -> Report:
         rep,
         scenario=sc.to_dict(),
         extras={**rep.extras, "admission": admission},
+    )
+
+
+# ---------------------------------------------------------------------------
+# Serving workloads: multi-tenant KV prefix-block traces
+# ---------------------------------------------------------------------------
+def _serving_cost(wl: Workload):
+    """(ServingCostModel, bytes_per_block) for a serving workload.
+
+    ``kv_arch=None`` falls back to unit pricing (1 block = 1 byte =
+    1 FLOP-unit); otherwise the architecture's KV layout sizes the
+    blocks and its active-parameter count prices prefill."""
+    from repro.serving.costs import ServingCostModel
+
+    if wl.kv_arch is None:
+        return ServingCostModel.unit(), 1.0
+    from repro.cacheblocks.kv_layout import layout_for
+    from repro.configs import get_config
+
+    cfg = get_config(wl.kv_arch)
+    kvl = layout_for(cfg, block_tokens=wl.block_tokens)
+    # state archs snapshot fixed-size prefix states instead of per-token KV
+    bpb = float(max(kvl.bytes_per_block, kvl.state_bytes, 1))
+    cost = ServingCostModel.for_arch(
+        cfg, bytes_per_token=bpb / wl.block_tokens
+    )
+    return cost, bpb
+
+
+def _union_residency(occ, ids: np.ndarray) -> np.ndarray:
+    """``min(1, sum_i occ[i, k])`` looked up at object ids ``k``.
+
+    The clip makes it the union-residency upper bound: a block resident
+    in any tenant's list (occupancy sums can exceed 1 when shared) is
+    served from cache regardless of who holds it."""
+    flat = np.asarray(ids, dtype=np.int64).ravel()
+    if isinstance(occ, SparseOccupancy):
+        u = np.zeros(flat.size, dtype=np.float64)
+        if occ.indices.size:
+            col = occ.values.sum(axis=0)
+            pos = np.clip(
+                np.searchsorted(occ.indices, flat), 0, occ.indices.size - 1
+            )
+            hit = occ.indices[pos] == flat
+            u[hit] = col[pos[hit]]
+    else:
+        u = np.asarray(occ, dtype=np.float64).sum(axis=0)[flat]
+    return np.minimum(u, 1.0).reshape(np.asarray(ids).shape)
+
+
+def _serving_onboarding(sc: Scenario, layout):
+    """Gate tenant onboarding through the eq. (13) test, then build the
+    effective scenario the trace actually runs.
+
+    Sequential admission in tenant order against the *declared* rate
+    matrix — the serving model assumes the operator knows each tenant's
+    prompt mix up front (the online-estimation variant is the
+    ``tenant_churn`` episode). Admitted tenants run at their eq. (10)
+    virtual allocations; rejected tenants keep their proxy slot (the
+    serving object-id space is a function of T) but send no traffic and
+    hold a minimal 1-block list. Returns ``(effective_scenario,
+    active_tenants, admission_record)``.
+    """
+    wl, system, spec = sc.workload, sc.system, sc.system.admission
+    T = wl.n_proxies
+    B = float(system.capacity())
+    lam = wl.rates()
+    lengths = np.ones(layout.n_objects, dtype=np.float64)
+    b_star = np.asarray(system.allocations, dtype=np.float64)
+    name = [f"tenant{t}" for t in range(T)]
+    ctl = AdmissionController(
+        B,
+        lengths,
+        attribution=spec.attribution,
+        safety_margin=spec.safety_margin,
+    )
+    active: list = []
+    for t in range(T):
+        d = ctl.admit(name[t], float(b_star[t]))
+        if not d.admitted and spec.refresh_on_reject:
+            # Free the sharing surplus the declared rates justify, then
+            # retry once (same policy as the churn episode).
+            ctl.refresh()
+            d = ctl.admit(name[t], float(b_star[t]))
+        if d.admitted:
+            active.append(t)
+            ctl.observe(name[t], lam[t])
+            ctl.refresh()
+    if spec.evict_on_overcommit:
+        for victim in ctl.enforce():
+            active.remove(int(victim.removeprefix("tenant")))
+    active = sorted(active)
+    if not active:
+        raise ValueError(
+            "admission rejected every serving tenant; grow "
+            "physical_capacity or shrink the per-tenant allocations"
+        )
+    b_virtual = {t: ctl.tenants[name[t]].b_virtual for t in active}
+    b_eff = [
+        max(1, round(b_virtual[t])) if t in active else 1 for t in range(T)
+    ]
+    # Integer rounding plus the 1-block slots rejected tenants keep can
+    # nudge the total past B (eq. (11) is a hard engine precondition):
+    # shave the largest admitted allocations back until it fits.
+    over = sum(b_eff) - int(B)
+    while over > 0:
+        t = max(active, key=lambda i: b_eff[i])
+        if b_eff[t] <= 1:
+            break
+        take = min(over, b_eff[t] - 1)
+        b_eff[t] -= take
+        over -= take
+    b_eff = tuple(b_eff)
+    mix = (
+        wl.proxy_rates
+        if wl.proxy_rates is not None
+        else tuple([1.0] * T)
+    )
+    eff_mix = tuple(
+        float(mix[t]) if t in active else 0.0 for t in range(T)
+    )
+    eff = dataclasses.replace(
+        sc,
+        workload=dataclasses.replace(wl, proxy_rates=eff_mix),
+        system=dataclasses.replace(
+            system, allocations=b_eff, admission=None
+        ),
+    )
+    admission: dict = {
+        "decisions": [d.to_dict() for d in ctl.log],
+        "active_tenants": list(active),
+        "tenant_names": [name[t] for t in active],
+        "b_star": {name[t]: float(b_star[t]) for t in active},
+        "b_virtual": {name[t]: float(b_virtual[t]) for t in active},
+        "b_virtual_int": [int(b_eff[t]) for t in active],
+        "capacity": B,
+        "committed": float(ctl.committed),
+        "committed_sla": float(ctl.committed_sla),
+        "overbooked": bool(ctl.overbooked),
+        "overbooking_gain": float(ctl.overbooking_gain),
+        "n_admitted": sum(1 for d in ctl.log if d.action == "admit"),
+        "n_rejected": sum(1 for d in ctl.log if d.action == "reject"),
+        "n_evicted": sum(1 for d in ctl.log if d.action == "evict"),
+    }
+    # eq. (10) promise per admitted tenant: the hit rate of a dedicated
+    # (unshared) b* cache, to compare against the realized rate.
+    idx = np.asarray(active, dtype=np.int64)
+    sol = solve_workingset_unshared(lam[idx], lengths, b_star[idx])
+    admission["predicted_sla_hit_rate"] = [float(x) for x in sol.hit_rate]
+    return eff, active, admission
+
+
+def _serving_report(
+    sc: Scenario,
+    eff: Scenario,
+    rep: Report,
+    layout,
+    active,
+    admission,
+) -> ServingReport:
+    """Translate a block-trace Report into serving economics."""
+    wl = sc.workload
+    cost, bpb = _serving_cost(wl)
+    btok = wl.block_tokens
+    occ = rep.hit_prob
+
+    # -- hit economics from the drive-loop counters (whole trace).
+    n_hits = int(rep.extras.get("n_hit_list", 0)) + int(
+        rep.extras.get("n_hit_cache", 0)
+    )
+    n_miss = int(rep.extras.get("n_miss", 0))
+    n_events = n_hits + n_miss
+    ratio = (
+        n_hits / n_events if n_events else float(rep.overall_hit_rate)
+    )
+    tokens_saved = float(n_hits) * btok
+
+    # -- sharing economics from steady-state occupancy. col[k] is the
+    # expected number of tenant lists holding block k; every holder past
+    # the first is a copy the shared store does not materialize.
+    if isinstance(occ, SparseOccupancy):
+        col = occ.values.sum(axis=0)
+    else:
+        col = np.asarray(occ, dtype=np.float64).sum(axis=0)
+    bytes_shared_lb = float(bpb * np.maximum(col - 1.0, 0.0).sum())
+    unshared_bytes = float(bpb * col.sum())
+
+    # -- latency proxy: roofline prefill time of the expected missing
+    # tokens per request, over the (tenant, prompt) demand distribution
+    # the trace actually ran (rejected tenants carry zero weight).
+    T, R, C = layout.n_tenants, layout.n_prompts, layout.suffix_choices
+    tt = np.repeat(np.arange(T, dtype=np.int64), R * C)
+    rr = np.tile(np.repeat(np.arange(R, dtype=np.int64), C), T)
+    cc = np.tile(np.arange(C, dtype=np.int64), T * R)
+    objs = layout.request_objects(tt, rr, cc)
+    miss_blocks = (1.0 - _union_residency(occ, objs)).sum(axis=1)
+    miss_blocks = miss_blocks.reshape(T, R, C).mean(axis=2)
+    miss_tok = miss_blocks * btok
+    lat = np.maximum(
+        miss_tok * cost.flops_per_token / cost.peak_flops,
+        miss_tok * cost.kv_bytes_per_token / cost.hbm_bw,
+    )
+    emix = eff.workload.proxy_rates
+    shares = (
+        np.full(T, 1.0 / T)
+        if emix is None
+        else np.asarray(emix, dtype=np.float64)
+    )
+    shares = shares / max(shares.sum(), 1e-300)
+    w = (shares[:, None] * popularity(layout, wl.alphas)).ravel()
+    order = np.argsort(lat.ravel())
+    lat_sorted, cw = lat.ravel()[order], np.cumsum(w[order])
+    p99_idx = min(
+        int(np.searchsorted(cw, 0.99 * cw[-1])), lat_sorted.size - 1
+    )
+    return ServingReport(
+        tenants=T,
+        active_tenants=tuple(int(t) for t in active),
+        blocks_per_request=int(layout.blocks_per_request),
+        block_tokens=int(btok),
+        bytes_per_block=float(bpb),
+        kv_arch=wl.kv_arch,
+        n_block_events=n_events,
+        n_serving_requests=n_events / layout.blocks_per_request,
+        prefix_hit_block_ratio=float(ratio),
+        prefix_hit_token_ratio=float(ratio),
+        prefill_tokens_saved=tokens_saved,
+        flops_per_token=float(cost.flops_per_token),
+        prefill_flops_saved=cost.prefill_flops(tokens_saved),
+        bytes_shared_lb=bytes_shared_lb,
+        unshared_equivalent_bytes=unshared_bytes,
+        final_virtual_bytes=(
+            tuple(float(v) * bpb for v in rep.final_vlen)
+            if rep.final_vlen is not None
+            else None
+        ),
+        latency_mean_s=float((lat.ravel() * w).sum() / max(w.sum(), 1e-300)),
+        latency_p99_s=float(lat_sorted[p99_idx]),
+        latency_cold_s=cost.prefill_time_s(
+            layout.blocks_per_request * btok
+        ),
+        admission=admission,
+    )
+
+
+def _run_serving(sc: Scenario) -> Report:
+    """Run a serving workload: compile → drive → translate.
+
+    The compiled block trace goes through the ordinary Monte-Carlo (any
+    fastsim backend, streaming, ensembles, reference) or working-set
+    path; this wrapper only gates onboarding (when ``admission`` is
+    set) and attaches the :class:`ServingReport` afterwards.
+    """
+    wl, system = sc.workload, sc.system
+    if system.is_cluster:
+        raise ValueError(
+            "serving workloads do not support cluster systems yet"
+        )
+    if system.variant not in ("lru", "noshare"):
+        raise ValueError(
+            "serving workloads support variants 'lru' (shared prefix "
+            f"store) and 'noshare' (dedicated) only, got {system.variant!r}"
+        )
+    layout = wl.serving_layout()
+    eff, active, admission = (
+        _serving_onboarding(sc, layout)
+        if system.admission is not None
+        else (sc, list(range(wl.n_proxies)), None)
+    )
+    rep = (
+        _run_working_set(eff)
+        if eff.estimator.kind == "working_set"
+        else _run_monte_carlo(eff)
+    )
+    if admission is not None:
+        realized = (
+            rep.realized_hit_rate
+            if rep.realized_hit_rate is not None
+            else rep.hit_rate
+        )
+        admission["realized_hit_rate"] = [
+            float(realized[t]) for t in active
+        ]
+        gaps = np.asarray(admission["realized_hit_rate"]) - np.asarray(
+            admission["predicted_sla_hit_rate"]
+        )
+        admission["max_abs_sla_gap"] = float(np.max(np.abs(gaps)))
+        admission["min_sla_margin"] = float(np.min(gaps))
+    serving = _serving_report(sc, eff, rep, layout, active, admission)
+    return dataclasses.replace(
+        rep,
+        scenario=sc.to_dict(),
+        extras={**rep.extras, "serving": serving.to_dict()},
     )

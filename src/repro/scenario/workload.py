@@ -23,6 +23,16 @@ object-size population that drive an experiment:
   operator's online popularity estimates. Requires
   ``System(admission=...)`` — the event stream is driven by the
   admission runner, not by ``sample()``.
+* ``kind="serving"`` — multi-tenant LLM prompt streams compiled to a
+  block trace (see :mod:`repro.serving.trace`): each tenant (one entry
+  of ``alphas`` = its Zipf exponent over a per-tenant prompt catalogue)
+  draws prompts whose hottest ``shared_frac`` fraction are shared
+  system-prompt/few-shot prefixes; every request expands to
+  ``prefix_blocks + suffix_blocks`` chained block objects, so prefix
+  residency runs on the fastsim backends. ``n_objects`` is *derived*
+  from the geometry; ``n_requests`` counts block events. Lengths are
+  whole blocks (unit); byte/FLOP metrics come from ``kv_arch``'s KV
+  layout in ``Report.extras["serving"]``.
 
 Object lengths come from a :class:`LengthSpec` (unit, fixed, Zipf-ranked,
 lognormal, or explicit), sampled deterministically from the scenario
@@ -43,9 +53,15 @@ from repro.core.irm import (
     sample_trace,
     sample_trace_chunks,
 )
+from repro.serving.trace import (
+    ServingLayout,
+    compile_trace,
+    iter_event_batches,
+    serving_rates,
+)
 
 LENGTH_KINDS = ("unit", "fixed", "zipf", "lognormal", "explicit")
-WORKLOAD_KINDS = ("irm", "shot_noise", "trace", "tenant_churn")
+WORKLOAD_KINDS = ("irm", "shot_noise", "trace", "tenant_churn", "serving")
 TENANT_ACTIONS = ("arrive", "depart")
 
 
@@ -144,6 +160,20 @@ class Workload:
         ``tenant_churn`` only — estimation requests sampled from the
         active tenants each round (the traffic the operator's
         :class:`~repro.core.irm.PopularityEstimator` sees).
+    n_prompts / shared_frac / prefix_blocks / suffix_blocks /
+    suffix_choices:
+        ``serving`` only — per-tenant prompt-catalogue size, fraction of
+        it (the head ranks) drawn from the shared prefix pool, blocks
+        per prompt-prefix chain, blocks per user-suffix tail, and the
+        finite per-(tenant, prompt) suffix population. ``n_objects`` is
+        derived from this geometry (every block-aligned chain position
+        is one object); construction overwrites whatever was passed.
+    kv_arch / block_tokens:
+        ``serving`` only — model architecture name (``repro.configs``)
+        and tokens per KV block, used by the serving report to price
+        blocks in bytes (``kv_layout``) and cached tokens in prefill
+        FLOPs. ``kv_arch=None`` keeps unit pricing (1 block = 1 byte =
+        1 FLOP-unit).
     """
 
     kind: str = "irm"
@@ -164,6 +194,14 @@ class Workload:
     # traffic per round
     tenant_events: Optional[Tuple[Tuple[int, str, int], ...]] = None
     round_requests: int = 0
+    # serving only: prompt-stream geometry (n_objects is derived)
+    n_prompts: int = 0
+    shared_frac: float = 0.0
+    prefix_blocks: int = 0
+    suffix_blocks: int = 0
+    suffix_choices: int = 1
+    kv_arch: Optional[str] = None
+    block_tokens: int = 16
 
     def __post_init__(self) -> None:
         if self.kind not in WORKLOAD_KINDS:
@@ -182,6 +220,23 @@ class Workload:
             if self.round_requests < 1:
                 raise ValueError("tenant_churn needs round_requests >= 1")
             self._check_tenant_events()
+        if self.kind == "serving":
+            if self.lengths.kind != "unit":
+                raise ValueError(
+                    "serving workloads account in whole KV blocks (unit "
+                    "lengths); byte metrics come from kv_arch's layout "
+                    "in the serving report"
+                )
+            if self.kv_arch is not None:
+                from repro.configs import get_config
+
+                get_config(self.kv_arch)   # raises on unknown arch
+                if self.block_tokens < 1:
+                    raise ValueError("block_tokens must be >= 1")
+            # geometry validation + the derived catalogue size
+            object.__setattr__(
+                self, "n_objects", self.serving_layout().n_objects
+            )
         if self.kind == "trace":
             if self.trace_proxies is None or self.trace_objects is None:
                 raise ValueError("trace workload needs trace_proxies/objects")
@@ -257,6 +312,20 @@ class Workload:
             return int(max(self.trace_proxies)) + 1 if self.trace_proxies else 1
         return len(self.alphas)
 
+    # -- serving geometry ----------------------------------------------
+    def serving_layout(self) -> ServingLayout:
+        """Object-space geometry of a ``serving`` workload (validates)."""
+        if self.kind != "serving":
+            raise ValueError(f"not a serving workload: kind={self.kind!r}")
+        return ServingLayout(
+            n_tenants=len(self.alphas),
+            n_prompts=self.n_prompts,
+            shared_frac=self.shared_frac,
+            prefix_blocks=self.prefix_blocks,
+            suffix_blocks=self.suffix_blocks,
+            suffix_choices=self.suffix_choices,
+        )
+
     # -- tenant_churn episode structure --------------------------------
     def events(self) -> Tuple[Tuple[int, str, int], ...]:
         """The normalized tenant-event stream, sorted by round (stable:
@@ -305,6 +374,10 @@ class Workload:
     def _rates(self) -> np.ndarray:
         if self.kind == "trace":
             return self._empirical_rates(len(self.trace_proxies))
+        if self.kind == "serving":
+            return serving_rates(
+                self.serving_layout(), self.alphas, self.proxy_rates
+            )
         return rate_matrix(self.n_objects, list(self.alphas), self.proxy_rates)
 
     def _empirical_rates(self, n: int) -> np.ndarray:
@@ -389,6 +462,12 @@ class Workload:
                     f"trace has {len(P)} requests, {n_requests} asked"
                 )
             return IRMTrace(P[:n_requests], O[:n_requests])
+        if self.kind == "serving":
+            p, o = compile_trace(
+                self.serving_layout(), self.alphas, self.proxy_rates,
+                n_requests, seed,
+            )
+            return IRMTrace(p, o)
         t = sample_trace(self.rates(), n_requests, seed=seed)
         if self.kind == "shot_noise":
             return IRMTrace(t.proxies, self._rotate(t.objects, 0))
@@ -415,6 +494,28 @@ class Workload:
                 e = min(s + chunk_size, n_requests)
                 yield IRMTrace(P[s:e], O[s:e])
             return
+        if self.kind == "serving":
+            # re-slice the canonical request batches to chunk_size: the
+            # stream is identical to sample() whatever the chunking.
+            buf_p: List[np.ndarray] = []
+            buf_o: List[np.ndarray] = []
+            buffered = 0
+            for p, o in iter_event_batches(
+                self.serving_layout(), self.alphas, self.proxy_rates,
+                n_requests, seed,
+            ):
+                buf_p.append(p)
+                buf_o.append(o)
+                buffered += len(p)
+                while buffered >= chunk_size:
+                    P = np.concatenate(buf_p)
+                    O = np.concatenate(buf_o)
+                    yield IRMTrace(P[:chunk_size], O[:chunk_size])
+                    buf_p, buf_o = [P[chunk_size:]], [O[chunk_size:]]
+                    buffered -= chunk_size
+            if buffered:
+                yield IRMTrace(np.concatenate(buf_p), np.concatenate(buf_o))
+            return
         start = 0
         for chunk in sample_trace_chunks(
             self.rates(), n_requests, chunk_size=chunk_size, seed=seed
@@ -433,7 +534,10 @@ class Workload:
     def scaled(self, requests: float, catalogue: float) -> "Workload":
         """Scale the catalogue (and phase length, with requests)."""
         kw = {}
-        if catalogue != 1.0 and self.kind != "trace":
+        if catalogue != 1.0 and self.kind == "serving":
+            # n_objects is derived; the catalogue knob is the prompt pool
+            kw["n_prompts"] = max(1, round(self.n_prompts * catalogue))
+        elif catalogue != 1.0 and self.kind != "trace":
             if self.lengths.kind == "explicit":
                 raise ValueError(
                     "cannot catalogue-scale a workload with explicit "

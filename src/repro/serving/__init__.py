@@ -1,3 +1,31 @@
-"""Multi-tenant serving engine with object-sharing prefix cache."""
+"""Multi-tenant serving: engine, trace compiler, and cost layer.
 
-from .engine import EngineConfig, ServingEngine, TenantSpec, Request  # noqa: F401
+Submodules are loaded lazily (PEP 562) so the pure-numpy pieces —
+``trace`` (the scenario-layer block-trace compiler) and ``costs`` (the
+analytic FLOP/latency pricing) — stay importable on machines without
+jax; only ``ServingEngine`` and friends pull in the device stack.
+"""
+
+_LAZY = {
+    "EngineConfig": ".engine",
+    "ServingEngine": ".engine",
+    "TenantSpec": ".engine",
+    "Request": ".engine",
+    "ServingLayout": ".trace",
+    "compile_trace": ".trace",
+    "serving_rates": ".trace",
+    "ServingCostModel": ".costs",
+    "cell_costs": ".costs",
+    "prefill_flops_per_token": ".costs",
+}
+
+__all__ = sorted(_LAZY)
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+
+        mod = importlib.import_module(_LAZY[name], __name__)
+        return getattr(mod, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

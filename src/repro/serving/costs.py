@@ -1,4 +1,16 @@
-"""Closed-form FLOP/byte model for every (arch x shape) cell.
+"""Serving cost layer: closed-form FLOP/byte pricing for prefix caching.
+
+Two halves:
+
+* the analytic **cell cost model** (absorbed from the former
+  ``repro.roofline`` seed module): FLOPs/bytes for every (arch x shape)
+  cell, validated against XLA cost_analysis on unrolled reduced configs
+  by ``tests/test_costmodel.py``;
+* the **serving pricing** built on it: per-prompt-token prefill FLOPs
+  and a roofline latency proxy (compute vs HBM terms on the TPU v5e
+  hardware model), used by the scenario layer to translate prefix-block
+  hit counters into FLOPs-saved / latency numbers in
+  ``Report.extras["serving"]``.
 
 Why analytic: XLA's HloCostAnalysis counts a while-loop body ONCE
 regardless of trip count, so any scan-based model (layers, attention
@@ -6,9 +18,7 @@ chunks, sLSTM time steps) under-reports by orders of magnitude. This
 module models exactly what the implementation executes — including its
 known inefficiencies (full T x S causal attention without block skipping,
 capacity-factor MoE overcompute), because the roofline must price the
-*implementation*, not the ideal. ``tests/test_costmodel.py`` validates it
-against XLA cost_analysis on reduced configs compiled with every scan
-unrolled (REPRO_SCAN_UNROLL=1), where XLA's numbers are trustworthy.
+*implementation*, not the ideal.
 
 Conventions: matmul (m,k)x(k,n) = 2mkn FLOPs; backward = 2x forward
 (dgrad+wgrad); remat(dots policy) adds only elementwise recompute
@@ -19,9 +29,14 @@ chip count for per-device.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict
+from typing import Dict, Optional
 
 from repro.configs import ArchConfig, ShapeConfig
+
+# Hardware model (TPU v5e, per chip).
+PEAK_FLOPS = 197e12       # bf16 / chip
+HBM_BW = 819e9            # bytes/s / chip
+ICI_BW = 50e9             # bytes/s / link
 
 
 @dataclass
@@ -206,3 +221,55 @@ def _kv_cache_bytes(cfg: ArchConfig, B: int, S: int) -> float:
         elif kind == "slstm":
             total += B * cfg.d_model * 4 * 4
     return total
+
+
+# ---------------------------------------------------------------------------
+# Serving pricing: translate prefix-block hit counters into FLOPs saved
+# and a prefill-latency proxy.
+
+def prefill_flops_per_token(cfg: ArchConfig) -> float:
+    """MODEL_FLOPS prefill pricing: 2 FLOPs per active param per token.
+
+    This is the marginal compute a cached prefix token skips; the cell
+    model above prices whole (arch x shape) steps, this prices the
+    per-token delta the serving report needs."""
+    return 2.0 * cfg.n_active_params
+
+
+@dataclass(frozen=True)
+class ServingCostModel:
+    """Per-prompt-token pricing for the serving report.
+
+    ``prefill_time_s`` is a single-chip roofline latency proxy: prefill
+    of ``t`` uncached tokens costs ``max(compute, HBM)`` seconds with
+    the compute term ``t * flops_per_token / peak_flops`` and the memory
+    term ``t * kv_bytes_per_token / hbm_bw`` (KV write traffic). With
+    ``unit()`` pricing (no arch bound), "time" is simply the token
+    count, so latency proxies stay meaningful but unitless.
+    """
+
+    flops_per_token: float
+    kv_bytes_per_token: float = 0.0
+    peak_flops: float = PEAK_FLOPS
+    hbm_bw: float = HBM_BW
+
+    @classmethod
+    def for_arch(cls, cfg: ArchConfig, bytes_per_token: float = 0.0
+                 ) -> "ServingCostModel":
+        return cls(
+            flops_per_token=prefill_flops_per_token(cfg),
+            kv_bytes_per_token=float(bytes_per_token),
+        )
+
+    @classmethod
+    def unit(cls) -> "ServingCostModel":
+        return cls(flops_per_token=1.0, kv_bytes_per_token=0.0,
+                   peak_flops=1.0, hbm_bw=1.0)
+
+    def prefill_flops(self, tokens: float) -> float:
+        return float(tokens) * self.flops_per_token
+
+    def prefill_time_s(self, tokens: float) -> float:
+        t = float(tokens)
+        return max(t * self.flops_per_token / self.peak_flops,
+                   t * self.kv_bytes_per_token / self.hbm_bw)

@@ -143,8 +143,8 @@ class ServingEngine:
         suffix = len(tokens) - cached
         # write back the blocks we will prefill
         _, st = self.cache.insert(tenant, tokens, start_block=look.cached_blocks)
-        evict = look.evictions + getattr(st, "total_evictions", 0)
-        ripple = look.ripple_evictions + getattr(st, "total_ripple", 0)
+        evict = look.evictions + st.total_evictions
+        ripple = look.ripple_evictions + st.total_ripple
 
         output = None
         if self.model is not None and self.params is not None:

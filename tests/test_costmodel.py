@@ -27,7 +27,7 @@ def test_costmodel_matches_xla_unrolled():
         import jax.numpy as jnp
         from repro.configs import get_config, ShapeConfig
         from repro.models import make_model
-        from repro.roofline import cell_costs
+        from repro.serving.costs import cell_costs
 
         def xla_flops(fn, *args):
             ca = jax.jit(fn).lower(*args).compile().cost_analysis()

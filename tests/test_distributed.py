@@ -1,5 +1,5 @@
 """Distribution machinery: lazy mesh construction, elastic resharding,
-and the roofline cost model."""
+and the analytic cost model (now in repro.serving.costs)."""
 
 import os
 import subprocess
@@ -49,11 +49,11 @@ def test_elastic_reshard_roundtrip():
                                   np.asarray(state["w"]))
 
 
-def test_roofline_costmodel_sane():
+def test_costmodel_sane():
     """Cost model basics: train > prefill > decode flops; MoE active <
     total; kv cache bytes positive for decode."""
     from repro.configs import SHAPES, get_config
-    from repro.roofline import cell_costs
+    from repro.serving.costs import cell_costs
 
     cfg = get_config("qwen3-1.7b")
     tr = cell_costs(cfg, SHAPES["train_4k"])

@@ -66,6 +66,46 @@ def test_eviction_frees_pool_pages():
     assert total == pool.n_blocks         # free-list conservation
 
 
+def test_insert_stats():
+    from repro.cacheblocks import InsertStats
+    from repro.core.shared_lru import GetResult
+
+    cache, pool, layout = _cache()
+    pages, st = cache.insert("t0", np.arange(12))
+    assert isinstance(st, InsertStats)
+    assert len(pages) == 3 and st.new_pages == 3
+    assert st.result is GetResult.MISS
+    assert st.total_evictions == 0 and st.total_ripple == 0
+    # re-inserting resident blocks allocates nothing
+    pages2, st2 = cache.insert("t1", np.arange(12))
+    assert pages2 == pages and st2.new_pages == 0
+    assert pool.used_blocks == 3
+
+
+def test_insert_stats_counts_evictions():
+    cache, pool, layout = _cache(n_tenants=1, pool_blocks=4, tenant_blocks=4)
+    cache.manager.ghost_retention = False
+    cache.insert("t0", np.arange(16))  # fills the 4-block allocation
+    _, st = cache.insert("t0", np.array([50, 51, 52, 53, 60, 61, 62, 63]))
+    assert st.new_pages == 2
+    assert st.total_evictions >= 2      # LRU blocks pushed out
+    assert pool.used_blocks <= 4        # hook freed the evicted pages
+
+
+def test_capacity_must_fit_pool():
+    # a manager capacity beyond the pool would make insert() exhaust the
+    # pool on a legal cache state; the constructor refuses it up front
+    cfg = get_config("qwen3-1.7b").reduced()
+    layout = layout_for(cfg, block_tokens=4)
+    pool = BlockPool(4, 4, cfg.n_kv_heads, cfg.head_dim, 1)
+    with pytest.raises(ValueError, match="exceeds the physical pool"):
+        SharedPrefixCache(
+            pool, layout,
+            {"t0": 8 * layout.bytes_per_block},
+            physical_capacity_bytes=8 * layout.bytes_per_block,
+        )
+
+
 def test_pool_free_list():
     pool = BlockPool(8, 4, 2, 16, 1)
     ids = pool.alloc(5)

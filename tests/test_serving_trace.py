@@ -1,0 +1,333 @@
+"""Serving trace compiler: id mapping, canonical sampling, and
+block-for-block equivalence with the reference SharedPrefixCache.
+
+The load-bearing property is the id<->key bijection: serving object ids
+are assigned so every id determines its full chain, and
+``ServingLayout.request_tokens`` makes block ``j``'s token content
+``[id_j] * block_tokens`` — so equal chains hash to equal vLLM-style
+rolling keys in :class:`SharedPrefixCache` exactly when they collide to
+equal ids in the compiled trace. Equivalence is asserted on cache STATE
+(residency, per-tenant membership, virtual lengths, pool usage), not on
+hit counters: after the first missing block of a chain the reference
+``insert`` issues ``set``s where the trace drive issues ``get``s, which
+classify the same attach differently while leaving identical state.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.fastsim import FastSharedLRU, GetResult
+from repro.scenario import Estimator, Scenario, System, Workload
+from repro.scenario.system import AdmissionSpec
+from repro.serving.trace import (
+    ServingLayout,
+    compile_trace,
+    iter_event_batches,
+    popularity,
+    sample_request_stream,
+    serving_rates,
+)
+
+LAYOUT = ServingLayout(
+    n_tenants=2,
+    n_prompts=6,
+    shared_frac=0.5,
+    prefix_blocks=3,
+    suffix_blocks=1,
+    suffix_choices=2,
+)
+ALPHAS = (0.8, 1.1)
+
+
+def _workload(**kw):
+    base = dict(
+        kind="serving",
+        alphas=ALPHAS,
+        n_prompts=LAYOUT.n_prompts,
+        shared_frac=LAYOUT.shared_frac,
+        prefix_blocks=LAYOUT.prefix_blocks,
+        suffix_blocks=LAYOUT.suffix_blocks,
+        suffix_choices=LAYOUT.suffix_choices,
+    )
+    base.update(kw)
+    return Workload(**base)
+
+
+# ---------------------------------------------------------------------------
+# id mapping
+# ---------------------------------------------------------------------------
+def test_layout_object_counts():
+    lay = LAYOUT
+    assert lay.n_shared == 3 and lay.n_private == 3
+    # shared entries counted once, private per tenant; suffixes per
+    # (tenant, prompt, choice)
+    assert lay.n_prefix_objects == (3 + 2 * 3) * 3
+    assert lay.n_suffix_objects == 2 * 6 * 2 * 1
+    assert lay.n_objects == lay.n_prefix_objects + lay.n_suffix_objects
+
+
+def test_shared_entries_collide_private_entries_do_not():
+    lay = LAYOUT
+    t0 = lay.request_objects([0], [0], [0])[0]
+    t1 = lay.request_objects([1], [0], [0])[0]
+    # entry 0 is shared: both tenants hit the same prefix chain
+    assert np.array_equal(t0[: lay.prefix_blocks], t1[: lay.prefix_blocks])
+    # suffixes are always tenant-private
+    assert t0[lay.prefix_blocks] != t1[lay.prefix_blocks]
+    # private entries never collide across tenants
+    p0 = lay.request_objects([0], [lay.n_shared], [0])[0]
+    p1 = lay.request_objects([1], [lay.n_shared], [0])[0]
+    assert not np.intersect1d(p0, p1).size
+
+
+def test_request_tokens_realize_the_id_bijection():
+    lay = LAYOUT
+    bt = 4
+    objs = lay.request_objects([1], [4], [1])[0]
+    toks = lay.request_tokens(1, 4, 1, bt)
+    assert toks.shape == (lay.blocks_per_request * bt,)
+    assert np.array_equal(toks.reshape(-1, bt)[:, 0], objs)
+    # every block is constant-valued: equal ids <=> equal token blocks
+    assert (toks.reshape(-1, bt) == objs[:, None]).all()
+
+
+def test_all_ids_in_range_and_chains_unique():
+    lay = LAYOUT
+    tt, rr, cc = [], [], []
+    for t in range(lay.n_tenants):
+        for r in range(lay.n_prompts):
+            for c in range(lay.suffix_choices):
+                tt.append(t), rr.append(r), cc.append(c)
+    objs = lay.request_objects(tt, rr, cc)
+    assert objs.min() >= 0 and objs.max() < lay.n_objects
+    # the full chain identifies the request geometry: distinct
+    # (tenant-or-shared, entry, choice) -> distinct final block id
+    finals = objs[:, -1]
+    assert np.unique(finals).size == finals.size
+
+
+# ---------------------------------------------------------------------------
+# canonical sampling
+# ---------------------------------------------------------------------------
+def test_rates_sum_to_traffic_shares():
+    lam = serving_rates(LAYOUT, ALPHAS, (1.0, 3.0))
+    assert lam.shape == (2, LAYOUT.n_objects)
+    np.testing.assert_allclose(lam.sum(axis=1), [0.25, 0.75], atol=1e-12)
+    pop = popularity(LAYOUT, ALPHAS)
+    np.testing.assert_allclose(pop.sum(axis=1), 1.0, atol=1e-12)
+
+
+def test_compile_deterministic_and_chunk_invariant():
+    wl = _workload()
+    tr1 = wl.sample(5000, seed=123)
+    tr2 = wl.sample(5000, seed=123)
+    assert np.array_equal(tr1.proxies, tr2.proxies)
+    assert np.array_equal(tr1.objects, tr2.objects)
+    chunks = list(wl.iter_chunks(5000, 123, chunk_size=777))
+    assert np.array_equal(
+        np.concatenate([c.proxies for c in chunks]), tr1.proxies
+    )
+    assert np.array_equal(
+        np.concatenate([c.objects for c in chunks]), tr1.objects
+    )
+    # a different seed actually changes the stream
+    tr3 = wl.sample(5000, seed=124)
+    assert not np.array_equal(tr1.objects, tr3.objects)
+
+
+def test_batches_match_direct_compile():
+    proxies, objects = compile_trace(LAYOUT, ALPHAS, None, 4000, seed=9)
+    got_p, got_o = [], []
+    for p, o in iter_event_batches(LAYOUT, ALPHAS, None, 4000, seed=9):
+        got_p.append(p), got_o.append(o)
+    assert np.array_equal(np.concatenate(got_p), proxies)
+    assert np.array_equal(np.concatenate(got_o), objects)
+
+
+def test_workload_roundtrip_and_scaling():
+    wl = _workload(kv_arch="qwen3-1.7b", block_tokens=8)
+    assert wl.n_objects == LAYOUT.n_objects  # derived, not declared
+    assert Workload.from_dict(wl.to_dict()) == wl
+    shrunk = wl.scaled(1.0, catalogue=0.5)
+    assert shrunk.n_prompts == 3
+    assert shrunk.n_objects == shrunk.serving_layout().n_objects
+
+
+def test_serving_validation():
+    from repro.scenario.workload import LengthSpec
+
+    with pytest.raises(ValueError, match="unit"):
+        _workload(lengths=LengthSpec("zipf_sizes"))
+    with pytest.raises(KeyError):
+        _workload(kv_arch="no-such-arch")
+
+
+# ---------------------------------------------------------------------------
+# block-for-block equivalence with the reference SharedPrefixCache
+# ---------------------------------------------------------------------------
+def test_trace_drive_matches_shared_prefix_cache():
+    pytest.importorskip("jax")
+    from repro.cacheblocks import BlockPool, SharedPrefixCache, layout_for
+    from repro.configs import get_config
+
+    lay, bt = LAYOUT, 4
+    n_requests = 400
+    alloc_blocks = [10, 10]
+    # the reference floors manager capacity at sum(allocations) (paper
+    # eq. (11)); ghost churn at B == sum(b) still exercises the
+    # physical-evict hook
+    cap_blocks = 20
+
+    cfg = get_config("qwen3-1.7b").reduced()
+    kvl = layout_for(cfg, block_tokens=bt)
+    pool = BlockPool(cap_blocks, bt, cfg.n_kv_heads, cfg.head_dim, 1)
+    ref = SharedPrefixCache(
+        pool,
+        kvl,
+        {f"t{i}": b * kvl.bytes_per_block for i, b in enumerate(alloc_blocks)},
+        physical_capacity_bytes=cap_blocks * kvl.bytes_per_block,
+    )
+    # SharedPrefixCache floors its manager capacity at sum(allocations)
+    fast = FastSharedLRU(
+        lay.n_objects, alloc_blocks, physical_capacity=ref.manager.B
+    )
+
+    tenants, entries, choices = sample_request_stream(
+        lay, ALPHAS, None, n_requests, seed=77
+    )
+    chains = lay.request_objects(tenants, entries, choices)
+    id_to_key = {}
+    for req in range(n_requests):
+        t, objs = int(tenants[req]), chains[req]
+        toks = lay.request_tokens(
+            int(tenants[req]), int(entries[req]), int(choices[req]), bt
+        )
+        # reference: chained lookup, then write-back of the missing tail
+        look = ref.lookup(f"t{t}", toks)
+        ref.insert(f"t{t}", toks, start_block=look.cached_blocks)
+        for obj, key in zip(objs, look.keys):
+            prev = id_to_key.setdefault(int(obj), key)
+            assert prev == key  # the id<->key bijection holds
+        # compiled-trace drive: get, set on miss — one event per block
+        for k in objs:
+            res, _ = fast.get(t, int(k))
+            if res is GetResult.MISS:
+                fast.set(t, int(k), 1)
+
+        # STATE equivalence after every request
+        for i in range(lay.n_tenants):
+            assert fast.vlen(i) == pytest.approx(ref.manager.vlen(i))
+        resident = [k for k in id_to_key if fast.in_physical(k)]
+        assert len(resident) == pool.used_blocks
+        for k, key in id_to_key.items():
+            assert fast.in_physical(k) == (key in ref.pages)
+            for i in range(lay.n_tenants):
+                assert fast.in_list(i, k) == ref.manager.in_list(i, key)
+    fast.check_invariants()
+    # the workload must actually have exercised sharing + eviction
+    assert pool.used_blocks <= cap_blocks
+    assert any(len(s) > 1 for s in ref.manager.holders.values())
+
+
+def _small_scenario(variant="lru", backend="auto", n=20_000, **syskw):
+    wl = _workload()
+    return Scenario(
+        name="serving-eq",
+        description="serving equivalence probe",
+        workload=wl,
+        system=System(
+            variant=variant,
+            allocations=(12, 12),
+            physical_capacity=24,
+            backend=backend,
+            **syskw,
+        ),
+        estimator=Estimator("monte_carlo"),
+        n_requests=n,
+        seed=31,
+    )
+
+
+def test_scenario_backends_agree_on_serving_trace():
+    # the reference SharedLRUCache drive and the C engine must produce
+    # identical counters and occupancy on the same compiled trace
+    rep_c = _small_scenario(backend="auto").run()
+    rep_ref = _small_scenario(backend="reference").run()
+    assert rep_c.backend in ("c", "flat")
+    for key in ("n_hit_list", "n_hit_cache", "n_miss"):
+        assert rep_c.extras[key] == rep_ref.extras[key]
+    np.testing.assert_allclose(rep_c.hit_prob, rep_ref.hit_prob)
+    np.testing.assert_allclose(rep_c.final_vlen, rep_ref.final_vlen)
+    np.testing.assert_allclose(
+        rep_c.serving["prefix_hit_block_ratio"],
+        rep_ref.serving["prefix_hit_block_ratio"],
+    )
+
+
+# ---------------------------------------------------------------------------
+# serving report + admission gating
+# ---------------------------------------------------------------------------
+def test_serving_report_populated_and_deterministic():
+    rep = _small_scenario().run()
+    sv = rep.serving
+    assert sv["n_block_events"] == 20_000
+    assert 0.0 < sv["prefix_hit_block_ratio"] < 1.0
+    assert sv["prefix_hit_token_ratio"] == sv["prefix_hit_block_ratio"]
+    assert sv["prefill_tokens_saved"] > 0
+    assert sv["prefill_flops_saved"] > 0
+    assert sv["bytes_shared_lb"] > 0           # cross-tenant sharing happened
+    assert sv["unshared_equivalent_bytes"] > sv["bytes_shared_lb"]
+    assert 0 < sv["latency_mean_s"] <= sv["latency_p99_s"] <= sv["latency_cold_s"]
+    assert sv["admission"] is None
+    rep2 = _small_scenario().run()
+    assert rep2.serving == sv                  # bit-identical rerun
+    # sharing beats dedicated partitions on the same geometry
+    rep_ns = _small_scenario(variant="noshare").run()
+    assert sv["prefix_hit_block_ratio"] > rep_ns.serving["prefix_hit_block_ratio"]
+
+
+def test_admission_gated_onboarding():
+    wl = _workload()
+    sc = Scenario(
+        name="serving-adm",
+        description="gated onboarding",
+        workload=wl,
+        system=System(
+            variant="lru",
+            allocations=(18, 18),
+            physical_capacity=24,   # room for ~1.3 dedicated tenants
+            admission=AdmissionSpec(),
+        ),
+        estimator=Estimator("monte_carlo"),
+        n_requests=20_000,
+        seed=31,
+    )
+    rep = sc.run()
+    adm = rep.serving["admission"]
+    assert adm["active_tenants"]
+    assert len(adm["predicted_sla_hit_rate"]) == len(adm["active_tenants"])
+    assert len(adm["realized_hit_rate"]) == len(adm["active_tenants"])
+    assert sum(adm["b_virtual_int"]) <= adm["capacity"]
+    assert {d["action"] for d in adm["decisions"]} <= {
+        "admit", "reject", "evict", "depart"
+    }
+    # the scenario dict on the report is the ORIGINAL gated scenario
+    assert rep.scenario["system"]["admission"] is not None
+
+
+def test_working_set_estimator_on_serving():
+    sc = dataclasses.replace(
+        _small_scenario(), estimator=Estimator("working_set")
+    )
+    rep = sc.run()
+    sv = rep.serving
+    assert rep.estimator == "working_set"
+    assert sv["n_block_events"] == 0
+    assert 0.0 < sv["prefix_hit_block_ratio"] < 1.0
+    # analytic and simulated views of the same system should agree coarsely
+    mc = _small_scenario().run()
+    assert abs(
+        sv["prefix_hit_block_ratio"] - mc.serving["prefix_hit_block_ratio"]
+    ) < 0.15
