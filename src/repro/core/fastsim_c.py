@@ -38,6 +38,7 @@ import numpy as np
 _SRC = Path(__file__).with_name("_fastsim_c.c")
 _lib: Optional[ctypes.CDLL] = None
 _tried = False
+_load_error: Optional[Exception] = None
 
 _I64P = ctypes.POINTER(ctypes.c_int64)
 _I32P = ctypes.POINTER(ctypes.c_int32)
@@ -59,6 +60,69 @@ HIST_LEN = 1024
 INITIAL_SLOT_CAP = 1 << 16
 
 
+_KNOWN_SANITIZERS = ("address", "undefined")
+
+
+def _sanitizers() -> tuple:
+    """Sanitizers requested via ``REPRO_C_SANITIZE`` (sorted tuple).
+
+    ``REPRO_C_SANITIZE=address,undefined`` builds the C hot loop under
+    ASan/UBSan — the nightly ``c-sanitize`` CI job runs the fastsim and
+    streaming suites this way. Unknown names fail loudly rather than
+    silently running unsanitized.
+    """
+    raw = os.environ.get("REPRO_C_SANITIZE", "").strip()
+    if not raw:
+        return ()
+    sans = tuple(sorted({t.strip() for t in raw.split(",") if t.strip()}))
+    unknown = [s for s in sans if s not in _KNOWN_SANITIZERS]
+    if unknown:
+        raise ValueError(
+            f"REPRO_C_SANITIZE: unknown sanitizer(s) {unknown}; "
+            f"supported: {', '.join(_KNOWN_SANITIZERS)}"
+        )
+    return sans
+
+
+def _san_cflags(sans: tuple) -> list:
+    """Extra CFLAGS for the requested sanitizers."""
+    if not sans:
+        return []
+    flags = [
+        f"-fsanitize={','.join(sans)}",
+        "-fno-omit-frame-pointer",
+        "-g",
+    ]
+    if "undefined" in sans:
+        flags.append("-fno-sanitize-recover=undefined")
+    return flags
+
+
+def _fail(sans: tuple, why: str) -> Optional[ctypes.CDLL]:
+    """Unavailability outcome: silent Python fallback normally, loud
+    error when a sanitized build was explicitly requested — a sanitize
+    CI run that quietly fell back to the Python loops would test
+    nothing. The error is cached so every later call re-raises."""
+    global _load_error
+    if not sans:
+        return None
+    _load_error = RuntimeError(
+        f"REPRO_C_SANITIZE={','.join(sans)} requested but the sanitized "
+        f"C backend is unavailable ({why}); ASan builds also need the "
+        "sanitizer runtime preloaded into the host interpreter, e.g. "
+        'LD_PRELOAD="$(gcc -print-file-name=libasan.so) '
+        '$(gcc -print-file-name=libstdc++.so)"'
+    )
+    raise _load_error
+
+
+def _so_name(tag: str, sans: tuple) -> str:
+    """Content-addressed .so name; the sanitizer suffix keeps sanitized
+    and plain builds of the same source coexisting in one cache dir."""
+    suffix = "".join(f"_{s}" for s in sans)
+    return f"fastsim_{tag}{suffix}.so"
+
+
 def _compiler() -> Optional[str]:
     for cc in (os.environ.get("CC"), "cc", "gcc", "clang"):
         if not cc:
@@ -73,7 +137,9 @@ def _compiler() -> Optional[str]:
     return None
 
 
-def _build_so(cc: str, src: Path, dest_dir: Path, name: str) -> Path:
+def _build_so(
+    cc: str, src: Path, dest_dir: Path, name: str, extra_cflags=()
+) -> Path:
     """Compile ``src`` into ``dest_dir/name``, safely under concurrency.
 
     The object is compiled to a unique temp name (pid + random suffix —
@@ -89,7 +155,8 @@ def _build_so(cc: str, src: Path, dest_dir: Path, name: str) -> Path:
     tmp = dest_dir / f".{name}.{os.getpid()}.{uuid.uuid4().hex[:8]}.tmp"
     try:
         subprocess.run(
-            [cc, "-O2", "-shared", "-fPIC", "-o", str(tmp), str(src)],
+            [cc, "-O2", *extra_cflags, "-shared", "-fPIC", "-o", str(tmp),
+             str(src)],
             capture_output=True,
             check=True,
             timeout=120,
@@ -110,14 +177,17 @@ def _build_so(cc: str, src: Path, dest_dir: Path, name: str) -> Path:
 def _load() -> Optional[ctypes.CDLL]:
     global _lib, _tried
     if _tried:
+        if _load_error is not None:
+            raise _load_error
         return _lib
     _tried = True
+    sans = _sanitizers()  # unknown names raise before anything builds
     try:
         src = _SRC.read_bytes()
     except OSError:
-        return None
+        return _fail(sans, "C source _fastsim_c.c is unreadable")
     tag = hashlib.sha256(src).hexdigest()[:16]
-    name = f"fastsim_{tag}.so"
+    name = _so_name(tag, sans)
     cand_dirs = [
         _SRC.parent / "_cbuild",
         Path(tempfile.gettempdir()) / "repro_fastsim_cbuild",
@@ -133,16 +203,18 @@ def _load() -> Optional[ctypes.CDLL]:
                 continue
     cc = _compiler()
     if cc is None:
-        return None
+        return _fail(sans, "no C compiler found")
+    last: Optional[Exception] = None
     for d in cand_dirs:
         try:
-            so = _build_so(cc, _SRC, d, name)
+            so = _build_so(cc, _SRC, d, name, _san_cflags(sans))
             _lib = ctypes.CDLL(str(so))
             _configure(_lib)
             return _lib
-        except Exception:
+        except Exception as e:
+            last = e
             continue
-    return None
+    return _fail(sans, f"build/load failed: {last!r}")
 
 
 def _configure(lib: ctypes.CDLL) -> None:

@@ -1,0 +1,446 @@
+"""Tests for the ``tools.analyze`` static-analysis suite.
+
+Each rule gets fixture snippets that must trip it and clean snippets
+that must not; the waiver machinery gets a honored-waiver case; the
+parity rule gets a mutation test (copy the real backend sources, bend a
+C ``#define``, assert detection). The capstone asserts the shipped tree
+itself analyzes clean — the CI ``static-analysis`` job's contract.
+"""
+
+import shutil
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO))
+
+from tools.analyze import (  # noqa: E402
+    RULES,
+    WAIVERS_PATH,
+    apply_waivers,
+    load_waivers,
+    run_rules,
+)
+from tools.analyze import determinism, jaxpurity, parity, schema  # noqa: E402
+from tools.analyze.findings import Finding, Waiver, _parse_waiver_toml  # noqa: E402
+
+CORE = "src/repro/core"
+
+
+def _tree(tmp_path, files):
+    for rel, text in files.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(text)
+    return tmp_path
+
+
+def _codes(findings):
+    return {f.code for f in findings}
+
+
+# ---------------------------------------------------------------------------
+# determinism
+# ---------------------------------------------------------------------------
+def test_determinism_trips_on_each_violation(tmp_path):
+    root = _tree(
+        tmp_path,
+        {
+            "src/repro/core/bad.py": (
+                "import random\n"
+                "import time\n"
+                "import numpy as np\n"
+                "def f():\n"
+                "    random.random()\n"
+                "    time.time()\n"
+                "    np.random.rand(3)\n"
+                "    np.random.default_rng()\n"
+                "    np.random.RandomState(0)\n"
+                "    return np.array({1, 2, 3})\n"
+            ),
+        },
+    )
+    codes = _codes(determinism.run(root))
+    assert codes == {
+        "stdlib-random",
+        "wall-clock",
+        "np-random-module",
+        "unseeded-default-rng",
+        "np-random-state",
+        "set-order-array",
+    }
+
+
+def test_determinism_clean_snippets(tmp_path):
+    root = _tree(
+        tmp_path,
+        {
+            "src/repro/core/good.py": (
+                "import time\n"
+                "import numpy as np\n"
+                "def f(seed):\n"
+                "    ss = np.random.SeedSequence(seed)\n"
+                "    rng = np.random.default_rng(ss.spawn(1)[0])\n"
+                "    t0 = time.perf_counter()\n"
+                "    a = np.array(sorted({3, 1, 2}))\n"
+                "    return rng.integers(10), a, time.perf_counter() - t0\n"
+            ),
+            # set-order feeding arrays is fine OUTSIDE engine paths
+            "src/repro/training/loose.py": (
+                "import numpy as np\n"
+                "def g(xs):\n"
+                "    return np.array(list(set(xs)))\n"
+            ),
+            # a local named like a stdlib module is not the module
+            "src/repro/core/shadow.py": (
+                "def h(random, time):\n"
+                "    return random.random() + time.time()\n"
+            ),
+        },
+    )
+    assert determinism.run(root) == []
+
+
+# ---------------------------------------------------------------------------
+# parity
+# ---------------------------------------------------------------------------
+@pytest.fixture()
+def backend_copy(tmp_path):
+    dest = tmp_path / CORE
+    dest.mkdir(parents=True)
+    for name in ("fastsim.py", "_fastsim_c.c", "fastsim_c.py",
+                 "fastsim_jax.py"):
+        shutil.copy(REPO / CORE / name, dest / name)
+    return tmp_path
+
+
+def test_parity_clean_on_real_backends(backend_copy):
+    assert parity.run(backend_copy) == []
+
+
+def test_parity_detects_mutated_define(backend_copy):
+    c = backend_copy / CORE / "_fastsim_c.c"
+    src = c.read_text()
+    assert "#define NIL (-1)" in src
+    c.write_text(src.replace("#define NIL (-1)", "#define NIL (-2)"))
+    findings = parity.run(backend_copy)
+    assert "nil-sentinel" in _codes(findings)
+
+
+def test_parity_detects_enum_drift(backend_copy):
+    py = backend_copy / CORE / "fastsim_c.py"
+    src = py.read_text()
+    assert "SC_COUNT = 14" in src
+    py.write_text(src.replace("SC_COUNT = 14", "SC_COUNT = 15"))
+    findings = parity.run(backend_copy)
+    assert "sc-enum" in _codes(findings)
+
+
+def test_parity_detects_hist_mismatch(backend_copy):
+    py = backend_copy / CORE / "fastsim_c.py"
+    src = py.read_text()
+    assert "HIST_LEN = 1024" in src
+    py.write_text(src.replace("HIST_LEN = 1024", "HIST_LEN = 512"))
+    assert "hist-buckets" in _codes(parity.run(backend_copy))
+
+
+def test_parity_detects_dtype_drift(backend_copy):
+    c = backend_copy / CORE / "_fastsim_c.c"
+    src = c.read_text()
+    mutated = src.replace("const int32_t *P", "const int64_t *P")
+    assert mutated != src
+    c.write_text(mutated)
+    assert "c-signature" in _codes(parity.run(backend_copy))
+
+
+# ---------------------------------------------------------------------------
+# schema
+# ---------------------------------------------------------------------------
+SCHEMA_BAD = '''
+from dataclasses import dataclass
+
+@dataclass(frozen=True)
+class Spec:
+    alpha: float
+    beta: float
+    gamma: int = 3
+
+    def to_dict(self):
+        return {"alpha": self.alpha, "beta": self.beta}
+
+    @staticmethod
+    def from_dict(d):
+        return Spec(alpha=d["alpha"], beta=d["beta"])
+'''
+
+SCHEMA_GOOD = '''
+from dataclasses import asdict, dataclass
+
+@dataclass(frozen=True)
+class Spec:
+    alpha: float
+    beta: float
+
+    def to_dict(self):
+        return asdict(self)
+
+    @staticmethod
+    def from_dict(d):
+        return Spec(**d)
+'''
+
+
+def test_schema_trips_on_dropped_field(tmp_path):
+    root = _tree(tmp_path, {"src/repro/scenario/spec.py": SCHEMA_BAD})
+    findings = schema.run(root)
+    codes = _codes(findings)
+    assert "field-not-serialized" in codes
+    assert "field-not-deserialized" in codes
+    assert all("gamma" in f.message for f in findings)
+
+
+def test_schema_clean_on_asdict_splat(tmp_path):
+    root = _tree(tmp_path, {"src/repro/scenario/spec.py": SCHEMA_GOOD})
+    assert schema.run(root) == []
+
+
+def test_schema_flags_missing_serializer(tmp_path):
+    root = _tree(
+        tmp_path,
+        {
+            "src/repro/scenario/spec.py": (
+                "from dataclasses import dataclass\n"
+                "@dataclass\n"
+                "class Runtime:\n"
+                "    x: int\n"
+            )
+        },
+    )
+    assert _codes(schema.run(root)) == {"missing-serializer"}
+
+
+def test_schema_clean_on_shipped_tree():
+    findings = apply_waivers(schema.run(REPO), load_waivers(WAIVERS_PATH))
+    unwaived = [f for f in findings if not f.waived]
+    assert unwaived == []
+
+
+# ---------------------------------------------------------------------------
+# jaxpurity
+# ---------------------------------------------------------------------------
+JAX_BAD = '''
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+@jax.jit
+def f(x):
+    y = x + 1
+    if y > 0:
+        y = y * 2
+    z = float(y)
+    w = y.item()
+    v = np.log(y)
+    return jnp.where(y > 0, y, 0), z, w, v
+'''
+
+JAX_GOOD = '''
+import functools
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def f(x, *, flag, mode=None):
+    if mode is None:
+        mode = "fast"
+    if flag:
+        x = x * 2
+    n = x.shape[0]
+    if n > 4:
+        x = x[:4]
+    scale = np.float64(2.0)
+    return jnp.where(x > 0, x * scale, 0.0)
+
+def host_side(result):
+    # not a traced scope: concretization is fine here
+    return float(np.asarray(result).sum())
+'''
+
+
+def test_jaxpurity_trips_on_each_leak(tmp_path):
+    root = _tree(tmp_path, {"src/repro/kernels/bad.py": JAX_BAD})
+    codes = _codes(jaxpurity.run(root))
+    assert codes == {
+        "tracer-branch",
+        "python-coercion",
+        "item-call",
+        "numpy-on-tracer",
+    }
+
+
+def test_jaxpurity_statics_and_host_code_clean(tmp_path):
+    root = _tree(tmp_path, {"src/repro/kernels/good.py": JAX_GOOD})
+    assert jaxpurity.run(root) == []
+
+
+def test_jaxpurity_partial_indirection(tmp_path):
+    # the repo idiom: f = functools.partial(impl, **statics); jax.jit(f)
+    root = _tree(
+        tmp_path,
+        {
+            "src/repro/kernels/indirect.py": (
+                "import functools\n"
+                "import jax\n"
+                "def _impl(x, *, k):\n"
+                "    return x.item()\n"
+                "def build(k):\n"
+                "    f = functools.partial(_impl, k=k)\n"
+                "    return jax.jit(f)\n"
+            )
+        },
+    )
+    assert _codes(jaxpurity.run(root)) == {"item-call"}
+
+
+# ---------------------------------------------------------------------------
+# waivers
+# ---------------------------------------------------------------------------
+def test_waiver_honored(tmp_path):
+    f = Finding("determinism", "wall-clock", "src/x.py", 3, "time.time()")
+    g = Finding("determinism", "wall-clock", "src/y.py", 9, "time.time()")
+    w = Waiver(
+        rule="determinism", path="src/x.py", reason="telemetry", code="wall-clock"
+    )
+    apply_waivers([f, g], [w])
+    assert f.waived and f.waiver_reason == "telemetry"
+    assert not g.waived
+    assert w.used == 1
+
+
+def test_waiver_contains_narrowing():
+    f = Finding("schema", "missing-from", "src/x.py", 1, "dataclass A ...")
+    w = Waiver(rule="schema", path="src/x.py", reason="r", contains="dataclass B")
+    assert not w.matches(f)
+
+
+def test_fallback_toml_parser_agrees_on_shipped_file():
+    text = WAIVERS_PATH.read_text()
+    entries = _parse_waiver_toml(text)
+    assert len(entries) == len(load_waivers(WAIVERS_PATH))
+    try:
+        import tomllib
+    except ModuleNotFoundError:
+        return
+    assert tomllib.loads(text).get("waiver", []) == entries
+
+
+def test_waiver_requires_reason(tmp_path):
+    bad = tmp_path / "w.toml"
+    bad.write_text('[[waiver]]\nrule = "schema"\npath = "x.py"\n')
+    with pytest.raises(ValueError):
+        load_waivers(bad)
+
+
+# ---------------------------------------------------------------------------
+# driver / shipped tree
+# ---------------------------------------------------------------------------
+def test_rule_registry_complete():
+    assert set(RULES) == {"determinism", "parity", "schema", "jaxpurity", "docs"}
+
+
+def test_unknown_rule_rejected():
+    with pytest.raises(KeyError):
+        run_rules(REPO, ["nope"])
+
+
+def test_shipped_tree_is_clean():
+    """The CI static-analysis contract: all rules, waivers applied,
+    nothing unwaived, no stale waivers."""
+    waivers = load_waivers(WAIVERS_PATH)
+    findings = run_rules(REPO, None, waivers)
+    unwaived = [f.render() for f in findings if not f.waived]
+    assert unwaived == []
+    stale = [w.reason for w in waivers if w.used == 0]
+    assert stale == []
+
+
+def test_cli_exit_codes(tmp_path):
+    env_root = str(REPO)
+    clean = subprocess.run(
+        [sys.executable, "-m", "tools.analyze", "--rule", "parity"],
+        cwd=env_root,
+        capture_output=True,
+        text=True,
+    )
+    assert clean.returncode == 0, clean.stdout + clean.stderr
+    bad = subprocess.run(
+        [sys.executable, "-m", "tools.analyze", "--rule", "nope"],
+        cwd=env_root,
+        capture_output=True,
+        text=True,
+    )
+    assert bad.returncode == 2
+
+
+def test_cli_nonzero_on_violation(tmp_path):
+    _tree(
+        tmp_path,
+        {
+            "src/repro/core/bad.py": (
+                "import numpy as np\n"
+                "def f():\n"
+                "    return np.random.rand()\n"
+            ),
+            "tools/__init__.py": "",
+        },
+    )
+    run = subprocess.run(
+        [
+            sys.executable,
+            "-m",
+            "tools.analyze",
+            "--rule",
+            "determinism",
+            "--root",
+            str(tmp_path),
+            "--json",
+        ],
+        cwd=str(REPO),
+        capture_output=True,
+        text=True,
+    )
+    assert run.returncode == 1
+    assert "np-random-module" in run.stdout
+
+
+# ---------------------------------------------------------------------------
+# sanitizer wiring (unit level; the full ASan run is the CI c-sanitize job)
+# ---------------------------------------------------------------------------
+def test_sanitizer_env_parsing(monkeypatch):
+    from repro.core import fastsim_c
+
+    monkeypatch.delenv("REPRO_C_SANITIZE", raising=False)
+    assert fastsim_c._sanitizers() == ()
+    monkeypatch.setenv("REPRO_C_SANITIZE", "undefined,address")
+    assert fastsim_c._sanitizers() == ("address", "undefined")
+    monkeypatch.setenv("REPRO_C_SANITIZE", "bogus")
+    with pytest.raises(ValueError):
+        fastsim_c._sanitizers()
+
+
+def test_sanitizer_cflags_and_name():
+    from repro.core import fastsim_c
+
+    assert fastsim_c._san_cflags(()) == []
+    flags = fastsim_c._san_cflags(("address", "undefined"))
+    assert "-fsanitize=address,undefined" in flags
+    assert "-fno-sanitize-recover=undefined" in flags
+    assert fastsim_c._so_name("abc", ()) == "fastsim_abc.so"
+    assert (
+        fastsim_c._so_name("abc", ("address", "undefined"))
+        == "fastsim_abc_address_undefined.so"
+    )

@@ -1,0 +1,58 @@
+"""repro-analyze: repo-specific static analysis for the caching repro.
+
+Five rules, one driver (``python -m tools.analyze``), one waiver file
+(``tools/analyze/waivers.toml``). Each rule module exposes ``NAME``,
+``DESCRIPTION``, and ``run(root: Path) -> List[Finding]``; the driver
+applies waivers and fails on any unwaived finding. See
+``docs/analysis.md`` for the invariants behind each rule.
+"""
+
+from __future__ import annotations
+
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence
+
+from . import determinism, docsrule, jaxpurity, parity, schema
+from .findings import Finding, Waiver, apply_waivers, load_waivers
+
+RULES = {
+    mod.NAME: mod
+    for mod in (determinism, parity, schema, jaxpurity, docsrule)
+}
+
+WAIVERS_PATH = Path(__file__).resolve().parent / "waivers.toml"
+
+
+def run_rules(
+    root: Path,
+    rules: Optional[Sequence[str]] = None,
+    waivers: Optional[List[Waiver]] = None,
+) -> List[Finding]:
+    """Run the selected rules (default: all) and apply waivers.
+
+    Returns every finding, waived ones marked; callers decide whether
+    unwaived findings are fatal.
+    """
+    selected = list(RULES) if rules is None else list(rules)
+    unknown = [r for r in selected if r not in RULES]
+    if unknown:
+        raise KeyError(
+            f"unknown rule(s) {unknown}; available: {sorted(RULES)}"
+        )
+    findings: List[Finding] = []
+    for name in selected:
+        findings.extend(RULES[name].run(root))
+    if waivers is not None:
+        apply_waivers(findings, waivers)
+    return findings
+
+
+__all__ = [
+    "RULES",
+    "WAIVERS_PATH",
+    "Finding",
+    "Waiver",
+    "apply_waivers",
+    "load_waivers",
+    "run_rules",
+]

@@ -1,0 +1,94 @@
+"""CLI driver: ``python -m tools.analyze [--rule NAME]... [--json]``.
+
+Exit status is 0 when every finding is waived (or there are none), 1
+when any unwaived finding remains, 2 on usage/config errors. The CI
+``static-analysis`` job runs all rules; the ``docs`` job runs
+``--rule docs`` (the old ``tools/check_docs.py`` behavior).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from . import RULES, WAIVERS_PATH, load_waivers, run_rules
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m tools.analyze",
+        description="repo-specific static analysis (see docs/analysis.md)",
+    )
+    parser.add_argument(
+        "--rule",
+        action="append",
+        metavar="NAME",
+        help="run only this rule (repeatable); default: all rules",
+    )
+    parser.add_argument(
+        "--root",
+        type=Path,
+        default=Path(__file__).resolve().parent.parent.parent,
+        help="repo root to analyze (default: this checkout)",
+    )
+    parser.add_argument(
+        "--json",
+        action="store_true",
+        help="emit findings as a JSON array on stdout",
+    )
+    parser.add_argument(
+        "--no-waivers",
+        action="store_true",
+        help="ignore waivers.toml (show the raw findings)",
+    )
+    parser.add_argument(
+        "--list",
+        action="store_true",
+        help="list available rules and exit",
+    )
+    args = parser.parse_args(argv)
+
+    if args.list:
+        for name in sorted(RULES):
+            print(f"{name:14s} {RULES[name].DESCRIPTION}")
+        return 0
+
+    try:
+        waivers = [] if args.no_waivers else load_waivers(WAIVERS_PATH)
+    except ValueError as e:
+        print(f"ERROR: bad waivers.toml: {e}", file=sys.stderr)
+        return 2
+    try:
+        findings = run_rules(args.root, args.rule, waivers)
+    except KeyError as e:
+        print(f"ERROR: {e.args[0]}", file=sys.stderr)
+        return 2
+
+    findings.sort(key=lambda f: (f.path, f.line, f.rule, f.code))
+    unwaived = [f for f in findings if not f.waived]
+
+    if args.json:
+        print(json.dumps([f.to_dict() for f in findings], indent=2))
+    else:
+        for f in findings:
+            print(f.render())
+        ran = args.rule or sorted(RULES)
+        waived = len(findings) - len(unwaived)
+        print(
+            f"tools.analyze: {len(findings)} finding(s) "
+            f"({waived} waived) across rule(s) {', '.join(ran)}"
+        )
+        stale = [w for w in waivers if w.used == 0 and w.rule in ran]
+        for w in stale:
+            print(
+                f"warning: unused waiver (rule={w.rule}, path={w.path}): "
+                f"{w.reason}",
+                file=sys.stderr,
+            )
+    return 1 if unwaived else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

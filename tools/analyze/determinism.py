@@ -1,0 +1,269 @@
+"""Determinism lint: all randomness through seeded generators, no
+wall clocks in engine state, no set-order-dependent array construction.
+
+The repo's reproducibility contract (ROADMAP standing invariants, and
+the JSON round-trip guarantee of ``repro.scenario``) is that a scenario
+plus a seed reproduces every estimate bit for bit. That only holds while
+*every* random draw flows through ``numpy.random.SeedSequence``-derived
+generators the way ``repro.scenario.runner.derive_seeds`` does, and no
+engine-path value depends on the wall clock or on hash-order iteration.
+
+Codes
+-----
+``np-random-module``
+    Module-level ``np.random.*`` convenience calls (``np.random.rand``,
+    ``randint``, ``seed``, ``shuffle``, ...). These share one hidden
+    global ``RandomState`` — any library call can perturb the stream.
+``np-random-state``
+    Legacy ``np.random.RandomState`` construction. The repo standardizes
+    on ``default_rng`` / ``SeedSequence`` (``Generator`` API).
+``unseeded-default-rng``
+    ``np.random.default_rng()`` with no arguments: seeds from OS
+    entropy, never reproducible.
+``stdlib-random``
+    Any use of the stdlib ``random`` module (global hidden state, and
+    its Mersenne stream is not ``SeedSequence``-derivable).
+``wall-clock``
+    ``time.time`` / ``time.time_ns`` / ``datetime.now`` reaching code
+    under ``src/repro``. ``time.perf_counter`` (elapsed-time
+    measurement) is always allowed — wall-clock *values* entering
+    results are not. Intentional timestamps must be waived with a
+    reason.
+``set-order-array``
+    ``np.array`` / ``asarray`` / ``fromiter`` / ``concatenate`` /
+    ``stack`` / ``sort`` fed (directly or through ``list()`` /
+    ``tuple()``) from a ``set`` expression without ``sorted()`` — in
+    engine paths, where element order lands in simulation state. Set
+    iteration order depends on insertion history and (for str keys) on
+    per-process hash randomization.
+"""
+
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional
+
+from .findings import Finding
+
+NAME = "determinism"
+DESCRIPTION = (
+    "unseeded/global RNG, wall-clock reads, and set-order-dependent "
+    "array construction in src/repro"
+)
+
+SCOPE = "src/repro"
+# Paths (relative to SCOPE) where set-order iteration feeding arrays is
+# treated as engine state. Everything else only gets the RNG/clock lint.
+ENGINE_PATHS = ("core", "serving", "scenario", "cacheblocks")
+
+# numpy.random names that are legitimate seeded-generator machinery.
+ALLOWED_NP_RANDOM = {
+    "default_rng",
+    "Generator",
+    "SeedSequence",
+    "BitGenerator",
+    "PCG64",
+    "PCG64DXSM",
+    "Philox",
+    "MT19937",
+    "SFC64",
+}
+
+WALL_CLOCK = {
+    "time.time",
+    "time.time_ns",
+    "datetime.datetime.now",
+    "datetime.datetime.utcnow",
+    "datetime.datetime.today",
+    "datetime.date.today",
+}
+
+ARRAY_BUILDERS = {
+    "array",
+    "asarray",
+    "ascontiguousarray",
+    "fromiter",
+    "concatenate",
+    "stack",
+    "sort",
+}
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` attribute chain as a dotted string, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+class _Aliases(ast.NodeVisitor):
+    """First pass: module / name aliases so ``np.random.rand`` and
+    ``from numpy.random import rand`` resolve to the same canonical
+    dotted path."""
+
+    def __init__(self) -> None:
+        self.map: Dict[str, str] = {}
+
+    def visit_Import(self, node: ast.Import) -> None:
+        for a in node.names:
+            self.map[a.asname or a.name.split(".")[0]] = (
+                a.name if a.asname else a.name.split(".")[0]
+            )
+
+    def visit_ImportFrom(self, node: ast.ImportFrom) -> None:
+        if node.level or not node.module:
+            return  # relative imports stay repo-internal
+        for a in node.names:
+            if a.name == "*":
+                continue
+            self.map[a.asname or a.name] = f"{node.module}.{a.name}"
+
+
+def _resolve(aliases: Dict[str, str], node: ast.AST):
+    """(canonical dotted path, head-was-imported) for a call target.
+
+    The ``known`` flag guards stdlib matches: ``time.time()`` only
+    counts when ``time`` is actually an imported module in this file,
+    not a local variable that happens to share the name.
+    """
+    dotted = _dotted(node)
+    if dotted is None:
+        return None, False
+    head, _, rest = dotted.partition(".")
+    known = head in aliases
+    head = aliases.get(head, head)
+    return (f"{head}.{rest}" if rest else head), known
+
+
+def _contains_set_expr(node: ast.AST) -> Optional[ast.AST]:
+    """A set-typed subexpression not shielded by ``sorted()``, or None."""
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call):
+            fn = sub.func
+            if isinstance(fn, ast.Name) and fn.id == "sorted":
+                return None  # sorted() anywhere makes the order defined
+    for sub in ast.walk(node):
+        if isinstance(sub, (ast.Set, ast.SetComp)):
+            return sub
+        if (
+            isinstance(sub, ast.Call)
+            and isinstance(sub.func, ast.Name)
+            and sub.func.id in ("set", "frozenset")
+        ):
+            return sub
+    return None
+
+
+class _Checker(ast.NodeVisitor):
+    def __init__(
+        self, rel: str, aliases: Dict[str, str], engine_path: bool
+    ) -> None:
+        self.rel = rel
+        self.aliases = aliases
+        self.engine_path = engine_path
+        self.findings: List[Finding] = []
+
+    def _add(self, node: ast.AST, code: str, message: str) -> None:
+        self.findings.append(
+            Finding(NAME, code, self.rel, getattr(node, "lineno", 0), message)
+        )
+
+    def visit_Call(self, node: ast.Call) -> None:
+        resolved, known = _resolve(self.aliases, node.func)
+        if resolved:
+            self._check_resolved_call(node, resolved, known)
+        self.generic_visit(node)
+
+    def _check_resolved_call(
+        self, node: ast.Call, resolved: str, known: bool
+    ) -> None:
+        if resolved.startswith("numpy.random."):
+            attr = resolved.split(".", 2)[2]
+            if attr == "RandomState":
+                self._add(
+                    node,
+                    "np-random-state",
+                    "legacy np.random.RandomState — use "
+                    "np.random.default_rng with a SeedSequence-derived "
+                    "seed (see runner.derive_seeds)",
+                )
+            elif attr == "default_rng":
+                if not node.args and not node.keywords:
+                    self._add(
+                        node,
+                        "unseeded-default-rng",
+                        "np.random.default_rng() without a seed draws OS "
+                        "entropy — pass a SeedSequence-derived seed",
+                    )
+            elif "." not in attr and attr not in ALLOWED_NP_RANDOM:
+                self._add(
+                    node,
+                    "np-random-module",
+                    f"module-level np.random.{attr}() uses the hidden "
+                    "global RandomState — use a SeedSequence-derived "
+                    "Generator (see runner.derive_seeds)",
+                )
+        elif (
+            known
+            and resolved.startswith("random.")
+            and resolved.count(".") == 1
+        ):
+            self._add(
+                node,
+                "stdlib-random",
+                f"stdlib {resolved}() has global hidden state — use a "
+                "SeedSequence-derived numpy Generator",
+            )
+        elif known and resolved in WALL_CLOCK:
+            self._add(
+                node,
+                "wall-clock",
+                f"{resolved}() reads the wall clock — results must be a "
+                "function of (scenario, seed) only; waive with a reason "
+                "if this is intentional telemetry",
+            )
+        elif self.engine_path and resolved.startswith("numpy."):
+            attr = resolved.split(".", 1)[1]
+            if attr in ARRAY_BUILDERS and node.args:
+                bad = _contains_set_expr(node.args[0])
+                if bad is not None:
+                    self._add(
+                        node,
+                        "set-order-array",
+                        f"np.{attr}() consumes a set — iteration order "
+                        "is insertion/hash dependent; wrap in sorted()",
+                    )
+
+
+def _py_files(root: Path) -> Iterable[Path]:
+    scope = root / SCOPE
+    if not scope.is_dir():
+        return []
+    return sorted(scope.rglob("*.py"))
+
+
+def run(root: Path) -> List[Finding]:
+    findings: List[Finding] = []
+    scope = root / SCOPE
+    for path in _py_files(root):
+        rel = path.relative_to(root).as_posix()
+        try:
+            tree = ast.parse(path.read_text())
+        except SyntaxError as e:
+            findings.append(
+                Finding(NAME, "syntax-error", rel, e.lineno or 0, str(e))
+            )
+            continue
+        aliases = _Aliases()
+        aliases.visit(tree)
+        top = path.relative_to(scope).parts[0]
+        checker = _Checker(rel, aliases.map, top in ENGINE_PATHS)
+        checker.visit(tree)
+        findings.extend(checker.findings)
+    return findings

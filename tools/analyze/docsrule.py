@@ -1,0 +1,125 @@
+"""Docs health rule (the old ``tools/check_docs.py``, as an analyzer).
+
+Two checks, unchanged in behavior from the standalone script the CI
+``docs`` job used to call directly:
+
+``broken-link``
+    Every relative markdown link in README.md, ROADMAP.md, CHANGES.md,
+    EXPERIMENTS.md, and ``docs/*.md`` must point at a file (or
+    directory) that exists. External (``http``/``https``/``mailto``)
+    and pure-anchor links are skipped.
+``experiments-drift``
+    ``benchmarks.report.build()`` must reproduce the committed
+    EXPERIMENTS.md byte for byte from the committed
+    ``benchmarks/artifacts/*.json`` — i.e. nobody edited the generated
+    report by hand or committed artifacts without regenerating.
+
+This rule stays stdlib-only (``benchmarks.report`` imports nothing
+beyond json/pathlib), so the CI ``docs`` job keeps running without
+``pip install``.
+"""
+
+from __future__ import annotations
+
+import difflib
+import re
+import sys
+from pathlib import Path
+from typing import List
+
+from .findings import Finding
+
+NAME = "docs"
+DESCRIPTION = (
+    "markdown link integrity and EXPERIMENTS.md drift vs committed "
+    "benchmark artifacts"
+)
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def _check_links(root: Path) -> List[Finding]:
+    findings: List[Finding] = []
+    md_files = [
+        root / "README.md",
+        root / "ROADMAP.md",
+        root / "CHANGES.md",
+        root / "EXPERIMENTS.md",
+        *sorted((root / "docs").glob("*.md")),
+    ]
+    for md in md_files:
+        rel = md.relative_to(root).as_posix()
+        if not md.exists():
+            findings.append(
+                Finding(NAME, "broken-link", rel, 0, "file missing")
+            )
+            continue
+        for n, line in enumerate(md.read_text().splitlines(), 1):
+            for target in LINK_RE.findall(line):
+                if target.startswith(EXTERNAL) or target.startswith("#"):
+                    continue
+                path = target.split("#", 1)[0]
+                if not path:
+                    continue
+                if not (md.parent / path).resolve().exists():
+                    findings.append(
+                        Finding(
+                            NAME,
+                            "broken-link",
+                            rel,
+                            n,
+                            f"broken link -> {target}",
+                        )
+                    )
+    return findings
+
+
+def _check_experiments_drift(root: Path) -> List[Finding]:
+    sys.path.insert(0, str(root))
+    try:
+        from benchmarks.report import build
+    except ImportError as e:
+        return [
+            Finding(
+                NAME,
+                "experiments-drift",
+                "EXPERIMENTS.md",
+                0,
+                f"cannot import benchmarks.report: {e}",
+            )
+        ]
+    finally:
+        sys.path.remove(str(root))
+    exp = root / "EXPERIMENTS.md"
+    if not exp.exists():
+        return []  # already reported as broken-link above
+    committed = exp.read_text()
+    rendered = build()
+    if committed == rendered:
+        return []
+    diff = list(
+        difflib.unified_diff(
+            committed.splitlines(),
+            rendered.splitlines(),
+            "EXPERIMENTS.md (committed)",
+            "benchmarks.report (rendered)",
+            lineterm="",
+        )
+    )
+    head = "\n".join(diff[:40])
+    return [
+        Finding(
+            NAME,
+            "experiments-drift",
+            "EXPERIMENTS.md",
+            0,
+            "EXPERIMENTS.md drifted from the committed artifacts — rerun "
+            "`PYTHONPATH=src python -m benchmarks.report` and commit the "
+            f"result. First diff lines:\n{head}",
+        )
+    ]
+
+
+def run(root: Path) -> List[Finding]:
+    return _check_links(root) + _check_experiments_drift(root)

@@ -1,0 +1,444 @@
+"""JAX purity lint: no tracer-leaking patterns inside traced scopes.
+
+PR 5's AOT-compile cache (``fastsim_jax._AOT_CACHE``) and the
+``donate_argnums`` buffer reuse both rely on the jitted drivers being
+*pure traces*: every value derived from a traced argument must stay in
+jax-land until the trace returns. Four patterns silently break that —
+they either raise ``TracerConversionError`` only on shapes the tests
+never hit, or worse, bake a concrete value into the compiled artifact so
+the cache replays stale data:
+
+``item-call``
+    ``x.item()`` on a traced value forces a device sync inside the
+    trace (or fails under AOT lowering).
+``python-coercion``
+    ``float(x)`` / ``int(x)`` / ``bool(x)`` / ``complex(x)`` on a traced
+    value concretizes the tracer.
+``numpy-on-tracer``
+    ``np.*`` calls consuming a traced value — numpy eagerly materializes
+    and the result is invisible to jax transformations. Use ``jnp.*``.
+``tracer-branch``
+    Python ``if`` / ``while`` / conditional expressions on a traced
+    value — control flow must go through ``lax.cond`` / ``lax.select``
+    / ``jnp.where``.
+
+What counts as *traced*
+-----------------------
+A function is a traced scope when it is jit-decorated (``@jax.jit`` or
+``@functools.partial(jax.jit, ...)``), mentioned inside a ``jax.jit(...)``
+or ``pl.pallas_call(...)`` call (directly or through a
+``functools.partial`` binding), or nested inside another traced scope
+(``lax.while_loop`` / ``scan`` / ``cond`` bodies).
+
+Inside a traced scope its parameters are tainted **except** statics:
+names listed in ``static_argnames``, keywords bound by the
+``functools.partial`` that wrapped it, and keyword-only parameters
+(the repo convention — jit entry points bind compile-time config as
+keyword-only and ``partial`` it in, exactly so Python ``if`` on those
+flags stays legal). Attribute reads of ``.shape`` / ``.dtype`` /
+``.ndim`` / ``.size`` and ``is None`` comparisons launder the taint:
+they are static under tracing.
+"""
+
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from .findings import Finding
+
+NAME = "jaxpurity"
+DESCRIPTION = (
+    "tracer-leaking patterns (.item(), float()/int(), np.* on traced "
+    "values, Python branches on tracers) in fastsim_jax.py and kernels/"
+)
+
+SCOPE = (
+    "src/repro/core/fastsim_jax.py",
+    "src/repro/kernels",
+)
+
+STATIC_ATTRS = {"shape", "dtype", "ndim", "size"}
+COERCIONS = {"float", "int", "bool", "complex"}
+JIT_TAILS = ("jit",)
+PALLAS_TAILS = ("pallas_call",)
+LAX_CALLEE_TAILS = ("while_loop", "fori_loop", "scan", "cond", "switch")
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _call_tail(node: ast.Call) -> str:
+    d = _dotted(node.func)
+    return d.rsplit(".", 1)[-1] if d else ""
+
+
+def _str_elements(node: ast.AST) -> Set[str]:
+    out: Set[str] = set()
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Constant) and isinstance(sub.value, str):
+            out.add(sub.value)
+    return out
+
+
+def _is_partial(node: ast.AST) -> bool:
+    return isinstance(node, ast.Call) and _call_tail(node) == "partial"
+
+
+class _TracedCollector:
+    """Module-wide pass: which functions are traced, and which of their
+    parameter names are static."""
+
+    def __init__(self, tree: ast.Module) -> None:
+        self.traced: Dict[str, Set[str]] = {}  # fn name -> static names
+        # var = functools.partial(F, kw=...) bindings, any scope. The
+        # map is scope-flat, so one variable name may bind different
+        # partials in different functions — keep every candidate.
+        self.partials: Dict[str, List[Tuple[str, Set[str]]]] = {}
+        self._scan(tree)
+
+    def _mark(self, name: str, statics: Set[str]) -> None:
+        self.traced.setdefault(name, set()).update(statics)
+
+    def _mark_callable_expr(self, node: ast.AST, extra: Set[str]) -> None:
+        """Mark a function referenced by a callable expression: a bare
+        name, a partial over one, or a variable bound to a partial."""
+        if isinstance(node, ast.Name):
+            if node.id in self.partials:
+                for target, kws in self.partials[node.id]:
+                    self._mark(target, kws | extra)
+            else:
+                self._mark(node.id, set(extra))
+        elif _is_partial(node):
+            kws = {kw.arg for kw in node.keywords if kw.arg}
+            for a in node.args:
+                if isinstance(a, ast.Name):
+                    self._mark(a.id, kws | extra)
+                elif isinstance(a, ast.Attribute):
+                    pass  # jax.jit etc. — not a local function
+                else:
+                    self._mark_callable_expr(a, kws | extra)
+
+    def _scan(self, tree: ast.Module) -> None:
+        # partial bindings first, so indirections resolve
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Assign) and _is_partial(node.value):
+                fn_args = [
+                    a for a in node.value.args if isinstance(a, ast.Name)
+                ]
+                if not fn_args:
+                    continue
+                kws = {kw.arg for kw in node.value.keywords if kw.arg}
+                for t in node.targets:
+                    if isinstance(t, ast.Name):
+                        self.partials.setdefault(t.id, []).append(
+                            (fn_args[0].id, kws)
+                        )
+        for node in ast.walk(tree):
+            if isinstance(node, ast.FunctionDef):
+                self._scan_decorators(node)
+            elif isinstance(node, ast.Call):
+                self._scan_call(node)
+
+    def _scan_decorators(self, fn: ast.FunctionDef) -> None:
+        for dec in fn.decorator_list:
+            d = _dotted(dec.func if isinstance(dec, ast.Call) else dec)
+            statics: Set[str] = set()
+            jit = False
+            if d and d.rsplit(".", 1)[-1] in JIT_TAILS:
+                jit = True
+                if isinstance(dec, ast.Call):
+                    statics |= self._static_argnames(dec)
+            elif isinstance(dec, ast.Call) and _call_tail(dec) == "partial":
+                inner = dec.args[0] if dec.args else None
+                di = _dotted(inner) if inner is not None else None
+                if di and di.rsplit(".", 1)[-1] in JIT_TAILS:
+                    jit = True
+                    statics |= self._static_argnames(dec)
+            if jit:
+                self._mark(fn.name, statics)
+
+    @staticmethod
+    def _static_argnames(call: ast.Call) -> Set[str]:
+        for kw in call.keywords:
+            if kw.arg in ("static_argnames", "static_argnums"):
+                return _str_elements(kw.value)
+        return set()
+
+    def _scan_call(self, node: ast.Call) -> None:
+        tail = _call_tail(node)
+        if tail in JIT_TAILS or tail in PALLAS_TAILS:
+            statics = self._static_argnames(node)
+            if node.args:
+                self._mark_callable_expr(node.args[0], statics)
+
+
+class _FnChecker:
+    """Forward taint pass over one traced function body."""
+
+    def __init__(
+        self,
+        rel: str,
+        fn: ast.FunctionDef,
+        statics: Set[str],
+        inherited: Set[str],
+        findings: List[Finding],
+    ) -> None:
+        self.rel = rel
+        self.findings = findings
+        self.env: Set[str] = set(inherited)
+        args = fn.args
+        for a in list(args.args) + list(args.posonlyargs):
+            if a.arg not in statics and a.arg != "self":
+                self.env.add(a.arg)
+        if args.vararg and args.vararg.arg not in statics:
+            self.env.add(args.vararg.arg)
+        # keyword-only params are partial-bound compile-time config by
+        # repo convention -> static, never tainted
+        for a in args.kwonlyargs:
+            self.env.discard(a.arg)
+        for name in statics:
+            self.env.discard(name)
+        self._body(fn.body)
+
+    def _flag(self, node: ast.AST, code: str, msg: str) -> None:
+        self.findings.append(
+            Finding(NAME, code, self.rel, getattr(node, "lineno", 0), msg)
+        )
+
+    # -- statements --------------------------------------------------------
+    def _body(self, stmts: Sequence[ast.stmt]) -> None:
+        for s in stmts:
+            self._stmt(s)
+
+    def _stmt(self, s: ast.stmt) -> None:
+        if isinstance(s, ast.FunctionDef):
+            # nested def in a traced scope: lax callee / helper — its
+            # params are tracers, closure taint carries over
+            _FnChecker(self.rel, s, set(), self.env, self.findings)
+        elif isinstance(s, ast.Assign):
+            t = self._eval(s.value)
+            for tgt in s.targets:
+                self._bind(tgt, t, s.value)
+        elif isinstance(s, ast.AnnAssign):
+            if s.value is not None:
+                self._bind(s.target, self._eval(s.value), s.value)
+        elif isinstance(s, ast.AugAssign):
+            t = self._eval(s.value) or self._eval(s.target)
+            self._bind(s.target, t, s.value)
+        elif isinstance(s, (ast.If, ast.While)):
+            if self._eval(s.test):
+                self._flag(
+                    s,
+                    "tracer-branch",
+                    "Python control flow on a traced value — use "
+                    "lax.cond / lax.select / jnp.where",
+                )
+            self._body(s.body)
+            self._body(s.orelse)
+        elif isinstance(s, ast.For):
+            if self._eval(s.iter):
+                self._bind(s.target, True, s.iter)
+            else:
+                self._bind(s.target, False, s.iter)
+            self._body(s.body)
+            self._body(s.orelse)
+        elif isinstance(s, ast.Return):
+            if s.value is not None:
+                self._eval(s.value)
+        elif isinstance(s, ast.Expr):
+            self._eval(s.value)
+        elif isinstance(s, (ast.With,)):
+            for item in s.items:
+                self._eval(item.context_expr)
+            self._body(s.body)
+        elif isinstance(s, ast.Try):
+            self._body(s.body)
+            for h in s.handlers:
+                self._body(h.body)
+            self._body(s.orelse)
+            self._body(s.finalbody)
+        elif isinstance(s, (ast.Assert,)):
+            self._eval(s.test)
+
+    def _bind(self, target: ast.AST, tainted: bool, value: ast.AST) -> None:
+        if isinstance(target, ast.Name):
+            if tainted:
+                self.env.add(target.id)
+            else:
+                self.env.discard(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            elts = None
+            if isinstance(value, (ast.Tuple, ast.List)) and len(
+                value.elts
+            ) == len(target.elts):
+                elts = value.elts
+            for i, t in enumerate(target.elts):
+                et = self._eval(elts[i]) if elts is not None else tainted
+                self._bind(t, et, value)
+        # Subscript / Attribute targets mutate an existing container;
+        # its taint status is unchanged.
+
+    # -- expressions -------------------------------------------------------
+    def _eval(self, e: ast.AST) -> bool:
+        """Taint of expression ``e``; flags emitted as a side effect."""
+        if isinstance(e, ast.Name):
+            return e.id in self.env
+        if isinstance(e, ast.Constant):
+            return False
+        if isinstance(e, ast.Attribute):
+            base = self._eval(e.value)
+            if e.attr in STATIC_ATTRS:
+                return False
+            return base
+        if isinstance(e, ast.Subscript):
+            self._eval(e.slice)
+            return self._eval(e.value)
+        if isinstance(e, ast.Call):
+            return self._eval_call(e)
+        if isinstance(e, ast.Compare):
+            if all(
+                isinstance(op, (ast.Is, ast.IsNot)) for op in e.ops
+            ):
+                self._eval(e.left)
+                for c in e.comparators:
+                    self._eval(c)
+                return False
+            t = self._eval(e.left)
+            for c in e.comparators:
+                t = self._eval(c) or t
+            return t
+        if isinstance(e, (ast.BinOp,)):
+            lt = self._eval(e.left)
+            rt = self._eval(e.right)
+            return lt or rt
+        if isinstance(e, ast.UnaryOp):
+            return self._eval(e.operand)
+        if isinstance(e, ast.BoolOp):
+            return any([self._eval(v) for v in e.values])
+        if isinstance(e, ast.IfExp):
+            if self._eval(e.test):
+                self._flag(
+                    e,
+                    "tracer-branch",
+                    "conditional expression on a traced value — use "
+                    "jnp.where / lax.select",
+                )
+            bt = self._eval(e.body)
+            ot = self._eval(e.orelse)
+            return bt or ot
+        if isinstance(e, (ast.Tuple, ast.List, ast.Set)):
+            return any([self._eval(v) for v in e.elts])
+        if isinstance(e, ast.Dict):
+            t = False
+            for k, v in zip(e.keys, e.values):
+                if k is not None:
+                    self._eval(k)
+                t = self._eval(v) or t
+            return t
+        if isinstance(e, ast.Starred):
+            return self._eval(e.value)
+        if isinstance(e, (ast.ListComp, ast.SetComp, ast.GeneratorExp)):
+            t = False
+            for gen in e.generators:
+                t = self._eval(gen.iter) or t
+            return t
+        if isinstance(e, ast.Lambda):
+            return False
+        if isinstance(e, ast.JoinedStr):
+            for v in e.values:
+                if isinstance(v, ast.FormattedValue):
+                    self._eval(v.value)
+            return False
+        return False
+
+    def _eval_call(self, e: ast.Call) -> bool:
+        arg_taints = [self._eval(a) for a in e.args]
+        kw_taints = [self._eval(kw.value) for kw in e.keywords]
+        any_arg = any(arg_taints) or any(kw_taints)
+        fn = e.func
+        # x.item() on a tracer
+        if isinstance(fn, ast.Attribute) and fn.attr == "item":
+            if self._eval(fn.value):
+                self._flag(
+                    e,
+                    "item-call",
+                    ".item() on a traced value forces a sync inside the "
+                    "trace (and fails under AOT lowering)",
+                )
+                return False
+        # float(x) / int(x) / bool(x)
+        if isinstance(fn, ast.Name) and fn.id in COERCIONS:
+            if any_arg:
+                self._flag(
+                    e,
+                    "python-coercion",
+                    f"{fn.id}() concretizes a traced value — keep it in "
+                    "jax-land (jnp cast / astype)",
+                )
+            return False
+        # np.foo(tracer)
+        d = _dotted(fn)
+        if d is not None:
+            head = d.split(".", 1)[0]
+            if head in ("np", "numpy") and any_arg:
+                self._flag(
+                    e,
+                    "numpy-on-tracer",
+                    f"{d}() consumes a traced value — numpy materializes "
+                    "eagerly; use the jnp equivalent",
+                )
+                return True
+        recv_taint = (
+            self._eval(fn.value) if isinstance(fn, ast.Attribute) else False
+        )
+        return any_arg or recv_taint
+
+
+def _scope_files(root: Path) -> List[Path]:
+    out: List[Path] = []
+    for rel in SCOPE:
+        p = root / rel
+        if p.is_file():
+            out.append(p)
+        elif p.is_dir():
+            out.extend(sorted(p.rglob("*.py")))
+    return out
+
+
+def run(root: Path) -> List[Finding]:
+    findings: List[Finding] = []
+    for path in _scope_files(root):
+        rel = path.relative_to(root).as_posix()
+        try:
+            tree = ast.parse(path.read_text())
+        except SyntaxError as e:
+            findings.append(
+                Finding(NAME, "syntax-error", rel, e.lineno or 0, str(e))
+            )
+            continue
+        collector = _TracedCollector(tree)
+        if not collector.traced:
+            continue
+        for node in ast.walk(tree):
+            if (
+                isinstance(node, ast.FunctionDef)
+                and node.name in collector.traced
+            ):
+                _FnChecker(
+                    rel,
+                    node,
+                    collector.traced[node.name],
+                    set(),
+                    findings,
+                )
+    return findings

@@ -1,0 +1,610 @@
+"""Backend-parity checker: the three fastsim ports share one constant
+surface, and an edit to one of them without its siblings fails here
+*before* the differential tests even run.
+
+The engine has three whole-trace backends — the pure-Python loops in
+``fastsim.py``, the C hot loop ``_fastsim_c.c`` bound by
+``fastsim_c.py``, and the XLA driver ``fastsim_jax.py`` — all proven
+event-for-event equivalent to the ``shared_lru`` reference spec by the
+differential tests. That proof is only as good as the inputs the tests
+exercise; the *structural* agreements below are checkable from source:
+
+``hist-buckets``
+    ``fastsim.HIST_BUCKETS == fastsim_c.HIST_LEN``, and
+    ``fastsim_jax.HIST_MAX`` must be the *imported* ``HIST_BUCKETS``
+    (not an independent numeric redefinition).
+``nil-sentinel``
+    ``fastsim.NIL`` equals the C ``#define NIL``.
+``sc-enum``
+    The C ``SC_*`` scalar-block enum (names, order, implied values,
+    ``SC_COUNT``) equals the ``SC_*`` constants in ``fastsim_c.py``.
+``c-signature``
+    The parameter sequence of the C entry points (``drive_chunk``,
+    ``noshare_chunk``) matches the ctypes ``argtypes`` declared in
+    ``fastsim_c._configure`` — position by position, pointer width by
+    pointer width.
+``state-dtype``
+    Buffers the ctypes runners allocate (``self.head = np.full(...,
+    dtype=np.int64)`` ...) carry the numpy dtype the C parameter of the
+    same name declares (``int64_t *head``).
+``counter-surface``
+    The ``finish()`` payloads of the Python, C, and XLA drivers all
+    carry the shared counter keys ``_assemble`` consumes, and the
+    ``counters()`` mid-stream surface is identical between the Python
+    and C flat drivers.
+``jax-state-keys``
+    Every ``st["..."]`` key the XLA kernels touch exists in
+    ``_init_state`` (a renamed state leaf in one place but not the
+    other is a silent break of the carried-state contract).
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from pathlib import Path
+from typing import Dict, List, Optional, Set, Tuple
+
+from .findings import Finding
+
+NAME = "parity"
+DESCRIPTION = (
+    "cross-checks the shared constant surface of the fastsim "
+    "Python/C/XLA backends (enums, histogram buckets, signatures, "
+    "dtypes, counter names)"
+)
+
+CORE = "src/repro/core"
+PY_REF = f"{CORE}/fastsim.py"
+C_SRC = f"{CORE}/_fastsim_c.c"
+C_BIND = f"{CORE}/fastsim_c.py"
+JAX_SRC = f"{CORE}/fastsim_jax.py"
+
+# C pointer/scalar type -> the ctypes argtype name fastsim_c.py uses.
+C_TO_CTYPES = {
+    ("int64_t", True): "_I64P",
+    ("int32_t", True): "_I32P",
+    ("uint64_t", True): "_U64P",
+    ("uint8_t", True): "_U8P",
+    ("int64_t", False): "c_int64",
+}
+# C pointer type -> numpy dtype attribute expected on same-named buffers.
+C_TO_NP = {
+    "int64_t": "int64",
+    "int32_t": "int32",
+    "uint64_t": "uint64",
+    "uint8_t": "uint8",
+}
+
+# finish() keys every backend's flat driver must deliver (the surface
+# fastsim._assemble consumes; the C/Python sparse drivers add the
+# tot_time_slots/slot_keys pair on top, the dense XLA driver tot_time).
+REQUIRED_FINISH_KEYS = {
+    "horizon",
+    "vlen",
+    "n_hit_list",
+    "n_hit_cache",
+    "n_miss",
+    "hits_p",
+    "reqs_p",
+    "hist",
+    "n_sets",
+    "n_prim",
+    "n_rip",
+}
+
+
+def _f(code: str, path: str, line: int, msg: str) -> Finding:
+    return Finding(NAME, code, path, line, msg)
+
+
+# ---------------------------------------------------------------------------
+# C-side extraction (regex over comment-stripped source)
+# ---------------------------------------------------------------------------
+def _strip_c_comments(src: str) -> str:
+    src = re.sub(r"/\*.*?\*/", " ", src, flags=re.S)
+    return re.sub(r"//[^\n]*", " ", src)
+
+
+def _c_define(src: str, name: str) -> Optional[int]:
+    m = re.search(
+        rf"#define\s+{re.escape(name)}\s+\(?\s*(-?\d+)\s*\)?", src
+    )
+    return int(m.group(1)) if m else None
+
+
+def _c_enum_names(src: str) -> List[str]:
+    """Names of the first ``enum { ... }`` block, in declaration order."""
+    m = re.search(r"\benum\s*\{([^}]*)\}", _strip_c_comments(src))
+    if not m:
+        return []
+    names = []
+    for tok in m.group(1).split(","):
+        tok = tok.strip()
+        if not tok:
+            continue
+        names.append(tok.split("=")[0].strip())
+    return names
+
+
+def _c_params(src: str, func: str) -> Optional[List[Tuple[str, bool, str]]]:
+    """``(base_type, is_pointer, name)`` per parameter of ``func``."""
+    clean = _strip_c_comments(src)
+    m = re.search(rf"\b{re.escape(func)}\s*\(", clean)
+    if not m:
+        return None
+    depth, i = 1, m.end()
+    while depth and i < len(clean):
+        if clean[i] == "(":
+            depth += 1
+        elif clean[i] == ")":
+            depth -= 1
+        i += 1
+    params = []
+    for raw in clean[m.end(): i - 1].split(","):
+        tok = raw.split()
+        if not tok:
+            continue
+        tokens = [t for t in tok if t != "const"]
+        joined = " ".join(tokens)
+        ptr = "*" in joined
+        base = tokens[0]
+        name = tokens[-1].lstrip("*")
+        params.append((base, ptr, name))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Python-side extraction (AST)
+# ---------------------------------------------------------------------------
+def _module_int_consts(tree: ast.Module) -> Dict[str, int]:
+    """Top-level ``NAME = <int>`` and tuple-unpacked int assignments."""
+    out: Dict[str, int] = {}
+    for node in tree.body:
+        if not isinstance(node, ast.Assign):
+            continue
+        targets, values = None, None
+        if len(node.targets) == 1 and isinstance(node.targets[0], ast.Tuple):
+            if isinstance(node.value, ast.Tuple):
+                targets = node.targets[0].elts
+                values = node.value.elts
+        else:
+            targets = node.targets
+            values = [node.value] * len(node.targets)
+        if targets is None:
+            continue
+        for t, v in zip(targets, values):
+            if not isinstance(t, ast.Name):
+                continue
+            try:
+                val = ast.literal_eval(v)
+            except (ValueError, TypeError):
+                continue
+            if isinstance(val, int) and not isinstance(val, bool):
+                out[t.id] = val
+    return out
+
+
+def _find_class(tree: ast.Module, name: str) -> Optional[ast.ClassDef]:
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ClassDef) and node.name == name:
+            return node
+    return None
+
+
+def _find_func(scope: ast.AST, name: str) -> Optional[ast.FunctionDef]:
+    for node in ast.walk(scope):
+        if isinstance(node, ast.FunctionDef) and node.name == name:
+            return node
+    return None
+
+
+def _self_np_dtypes(cls: ast.ClassDef) -> Dict[str, str]:
+    """``self.X = np.<ctor>(..., dtype=np.T)`` buffer dtypes in __init__."""
+    init = _find_func(cls, "__init__")
+    if init is None:
+        return {}
+    out: Dict[str, str] = {}
+    for node in ast.walk(init):
+        if not isinstance(node, ast.Assign) or len(node.targets) != 1:
+            continue
+        t = node.targets[0]
+        if not (
+            isinstance(t, ast.Attribute)
+            and isinstance(t.value, ast.Name)
+            and t.value.id == "self"
+        ):
+            continue
+        call = node.value
+        if not isinstance(call, ast.Call):
+            continue
+        for kw in call.keywords:
+            if kw.arg != "dtype":
+                continue
+            v = kw.value
+            if isinstance(v, ast.Attribute) and isinstance(
+                v.value, ast.Name
+            ):
+                out[t.attr] = v.attr
+    return out
+
+
+def _returned_dict_keys(fn: ast.FunctionDef) -> Set[str]:
+    """String keys of every dict literal returned by (or assigned in)
+    the function body."""
+    keys: Set[str] = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Dict):
+            for k in node.keys:
+                if isinstance(k, ast.Constant) and isinstance(k.value, str):
+                    keys.add(k.value)
+    return keys
+
+
+def _argtypes_names(tree: ast.Module, entry: str) -> Optional[List[str]]:
+    """The declared ctypes argtypes list of ``lib.<entry>`` as names."""
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Assign) or len(node.targets) != 1:
+            continue
+        t = node.targets[0]
+        if not (
+            isinstance(t, ast.Attribute)
+            and t.attr == "argtypes"
+            and isinstance(t.value, ast.Attribute)
+            and t.value.attr == entry
+        ):
+            continue
+        if not isinstance(node.value, ast.List):
+            return None
+        names = []
+        for el in node.value.elts:
+            if isinstance(el, ast.Name):
+                names.append(el.id)
+            elif isinstance(el, ast.Attribute):
+                names.append(el.attr)
+            else:
+                names.append("<?>")
+        return names
+    return None
+
+
+def _str_subscript_keys(fn: ast.AST) -> Set[str]:
+    """All ``x["key"]`` string-constant subscript keys inside ``fn``."""
+    keys: Set[str] = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Subscript):
+            s = node.slice
+            if isinstance(s, ast.Constant) and isinstance(s.value, str):
+                keys.add(s.value)
+    return keys
+
+
+# ---------------------------------------------------------------------------
+# The rule
+# ---------------------------------------------------------------------------
+def _check_signature(
+    rel_c: str,
+    rel_py: str,
+    entry: str,
+    c_params: Optional[List[Tuple[str, bool, str]]],
+    argtypes: Optional[List[str]],
+    out: List[Finding],
+) -> None:
+    if c_params is None:
+        out.append(_f("c-signature", rel_c, 0, f"C entry {entry}() not found"))
+        return
+    if argtypes is None:
+        out.append(
+            _f(
+                "c-signature",
+                rel_py,
+                0,
+                f"no ctypes argtypes declared for lib.{entry}",
+            )
+        )
+        return
+    expected = []
+    for base, ptr, name in c_params:
+        exp = C_TO_CTYPES.get((base, ptr))
+        expected.append(exp or f"<unmapped {base}{'*' if ptr else ''}>")
+    if len(expected) != len(argtypes):
+        out.append(
+            _f(
+                "c-signature",
+                rel_py,
+                0,
+                f"{entry}: C declares {len(expected)} parameters but "
+                f"argtypes lists {len(argtypes)} — the ports drifted",
+            )
+        )
+        return
+    for i, (exp, got) in enumerate(zip(expected, argtypes)):
+        if exp != got:
+            pname = c_params[i][2]
+            out.append(
+                _f(
+                    "c-signature",
+                    rel_py,
+                    0,
+                    f"{entry} arg {i} ({pname}): C wants {exp}, "
+                    f"argtypes declares {got}",
+                )
+            )
+
+
+def _check_dtypes(
+    rel: str,
+    runner: str,
+    c_params: Optional[List[Tuple[str, bool, str]]],
+    dtypes: Dict[str, str],
+    out: List[Finding],
+) -> None:
+    if not c_params:
+        return
+    for base, ptr, name in c_params:
+        if not ptr or name not in dtypes:
+            continue
+        want = C_TO_NP.get(base)
+        got = dtypes[name]
+        if want is not None and got != want:
+            out.append(
+                _f(
+                    "state-dtype",
+                    rel,
+                    0,
+                    f"{runner}.{name} is allocated as np.{got} but the C "
+                    f"side reads {base}* — memory corruption on call",
+                )
+            )
+
+
+def run(root: Path) -> List[Finding]:
+    out: List[Finding] = []
+    paths = {p: root / p for p in (PY_REF, C_SRC, C_BIND, JAX_SRC)}
+    missing = [rel for rel, p in paths.items() if not p.exists()]
+    for rel in missing:
+        out.append(
+            _f("missing-file", rel, 0, "backend source file not found")
+        )
+    if missing:
+        return out
+
+    c_src = paths[C_SRC].read_text()
+    py_tree = ast.parse(paths[PY_REF].read_text())
+    bind_tree = ast.parse(paths[C_BIND].read_text())
+    jax_tree = ast.parse(paths[JAX_SRC].read_text())
+
+    py_consts = _module_int_consts(py_tree)
+    bind_consts = _module_int_consts(bind_tree)
+
+    # -- hist-buckets ------------------------------------------------------
+    hb = py_consts.get("HIST_BUCKETS")
+    hl = bind_consts.get("HIST_LEN")
+    if hb is None:
+        out.append(_f("hist-buckets", PY_REF, 0, "HIST_BUCKETS not found"))
+    if hl is None:
+        out.append(_f("hist-buckets", C_BIND, 0, "HIST_LEN not found"))
+    if hb is not None and hl is not None and hb != hl:
+        out.append(
+            _f(
+                "hist-buckets",
+                C_BIND,
+                0,
+                f"HIST_LEN={hl} != fastsim.HIST_BUCKETS={hb}: eviction "
+                "histograms clamp differently across backends",
+            )
+        )
+    # fastsim_jax must alias the import, not redefine the number
+    jax_hist_ok = False
+    imports_hb = any(
+        isinstance(n, ast.ImportFrom)
+        and any(a.name == "HIST_BUCKETS" for a in n.names)
+        for n in ast.walk(jax_tree)
+    )
+    for node in jax_tree.body:
+        if isinstance(node, ast.Assign) and any(
+            isinstance(t, ast.Name) and t.id == "HIST_MAX"
+            for t in node.targets
+        ):
+            if (
+                isinstance(node.value, ast.Name)
+                and node.value.id == "HIST_BUCKETS"
+                and imports_hb
+            ):
+                jax_hist_ok = True
+            else:
+                out.append(
+                    _f(
+                        "hist-buckets",
+                        JAX_SRC,
+                        node.lineno,
+                        "HIST_MAX must be the imported fastsim."
+                        "HIST_BUCKETS, not an independent value",
+                    )
+                )
+                jax_hist_ok = True  # reported; don't double-report below
+    if not jax_hist_ok:
+        out.append(
+            _f(
+                "hist-buckets",
+                JAX_SRC,
+                0,
+                "HIST_MAX = HIST_BUCKETS (imported from .fastsim) not found",
+            )
+        )
+
+    # -- nil-sentinel ------------------------------------------------------
+    c_nil = _c_define(c_src, "NIL")
+    py_nil = py_consts.get("NIL")
+    if c_nil is None:
+        out.append(_f("nil-sentinel", C_SRC, 0, "#define NIL not found"))
+    elif py_nil is None:
+        out.append(_f("nil-sentinel", PY_REF, 0, "NIL constant not found"))
+    elif c_nil != py_nil:
+        out.append(
+            _f(
+                "nil-sentinel",
+                C_SRC,
+                0,
+                f"C #define NIL {c_nil} != fastsim.NIL {py_nil}: the "
+                "intrusive-list sentinel must be identical",
+            )
+        )
+
+    # -- sc-enum -----------------------------------------------------------
+    enum_names = _c_enum_names(c_src)
+    sc_names = [n for n in enum_names if n.startswith("SC_")]
+    if not sc_names:
+        out.append(_f("sc-enum", C_SRC, 0, "SC_* scalar enum not found"))
+    else:
+        for i, cname in enumerate(sc_names):
+            pyval = bind_consts.get(cname)
+            if pyval is None:
+                out.append(
+                    _f(
+                        "sc-enum",
+                        C_BIND,
+                        0,
+                        f"C enum declares {cname} (index {i}) but "
+                        "fastsim_c.py does not define it",
+                    )
+                )
+            elif pyval != i:
+                out.append(
+                    _f(
+                        "sc-enum",
+                        C_BIND,
+                        0,
+                        f"{cname}: C enum index {i} != fastsim_c.py "
+                        f"value {pyval} — the scalar block layouts "
+                        "disagree",
+                    )
+                )
+        extra = [
+            n
+            for n in bind_consts
+            if n.startswith("SC_") and n not in sc_names
+        ]
+        for n in sorted(extra):
+            out.append(
+                _f(
+                    "sc-enum",
+                    C_BIND,
+                    0,
+                    f"fastsim_c.py defines {n} with no C enum counterpart",
+                )
+            )
+
+    # -- c-signature + state-dtype ----------------------------------------
+    drive_params = _c_params(c_src, "drive_chunk")
+    noshare_params = _c_params(c_src, "noshare_chunk")
+    _check_signature(
+        C_SRC,
+        C_BIND,
+        "drive_chunk",
+        drive_params,
+        _argtypes_names(bind_tree, "drive_chunk"),
+        out,
+    )
+    _check_signature(
+        C_SRC,
+        C_BIND,
+        "noshare_chunk",
+        noshare_params,
+        _argtypes_names(bind_tree, "noshare_chunk"),
+        out,
+    )
+    flat_cls = _find_class(bind_tree, "FlatChunkRunner")
+    noshare_cls = _find_class(bind_tree, "NoshareChunkRunner")
+    if flat_cls is not None:
+        _check_dtypes(
+            C_BIND,
+            "FlatChunkRunner",
+            drive_params,
+            _self_np_dtypes(flat_cls),
+            out,
+        )
+    if noshare_cls is not None:
+        _check_dtypes(
+            C_BIND,
+            "NoshareChunkRunner",
+            noshare_params,
+            _self_np_dtypes(noshare_cls),
+            out,
+        )
+
+    # -- counter-surface ---------------------------------------------------
+    def finish_keys(
+        tree: ast.Module, cls: str, meth: str, rel: str
+    ) -> Optional[Set[str]]:
+        c = _find_class(tree, cls)
+        fn = _find_func(c, meth) if c is not None else None
+        if fn is None:
+            out.append(
+                _f(
+                    "counter-surface",
+                    rel,
+                    0,
+                    f"{cls}.{meth} not found",
+                )
+            )
+            return None
+        return _returned_dict_keys(fn)
+
+    surfaces = {
+        PY_REF: finish_keys(py_tree, "_FlatDriver", "finish", PY_REF),
+        C_BIND: finish_keys(bind_tree, "FlatChunkRunner", "finish", C_BIND),
+        JAX_SRC: finish_keys(jax_tree, "_RunnerBase", "_finish_one", JAX_SRC),
+    }
+    for rel, keys in surfaces.items():
+        if keys is None:
+            continue
+        gone = REQUIRED_FINISH_KEYS - keys
+        if gone:
+            out.append(
+                _f(
+                    "counter-surface",
+                    rel,
+                    0,
+                    f"finish() payload is missing shared counter key(s) "
+                    f"{sorted(gone)}",
+                )
+            )
+    py_counters = finish_keys(py_tree, "_FlatDriver", "counters", PY_REF)
+    c_counters = finish_keys(bind_tree, "FlatChunkRunner", "counters", C_BIND)
+    if py_counters is not None and c_counters is not None:
+        if py_counters != c_counters:
+            out.append(
+                _f(
+                    "counter-surface",
+                    C_BIND,
+                    0,
+                    "FlatChunkRunner.counters() keys "
+                    f"{sorted(c_counters)} != _FlatDriver.counters() "
+                    f"keys {sorted(py_counters)}",
+                )
+            )
+
+    # -- jax-state-keys ----------------------------------------------------
+    init_fn = _find_func(jax_tree, "_init_state")
+    if init_fn is None:
+        out.append(_f("jax-state-keys", JAX_SRC, 0, "_init_state not found"))
+    else:
+        state_keys = _returned_dict_keys(init_fn)
+        used: Set[str] = set()
+        for fname in ("_drive_impl", "_drive_batched_impl", "_finish_one"):
+            fn = _find_func(jax_tree, fname)
+            if fn is not None:
+                used |= _str_subscript_keys(fn)
+        unknown = used - state_keys
+        if unknown:
+            out.append(
+                _f(
+                    "jax-state-keys",
+                    JAX_SRC,
+                    0,
+                    f"kernel reads state key(s) {sorted(unknown)} that "
+                    "_init_state never creates",
+                )
+            )
+    return out

@@ -1,0 +1,225 @@
+"""Schema round-trip auditor: every dataclass field in the scenario /
+cluster / admission schemas must be reachable from its serializer pair.
+
+The repo's JSON round-trip contract (ROADMAP standing invariant, proven
+by the scenario round-trip tests) says ``from_dict(to_dict(x)) == x``
+for the declarative schema types. The runtime tests only prove it for
+fields that existed when the test was written; this rule proves the
+*shape* statically, so a field added to ``Workload`` / ``System`` /
+``Estimator`` / ``FaultSpec`` without touching the serializers fails CI
+instead of silently vanishing on the next save/load cycle.
+
+Codes
+-----
+``missing-serializer``
+    A dataclass in scope has neither a ``to_dict``/``to_json`` nor a
+    ``from_dict``/``from_json``. Runtime-only types (controller state
+    holding ndarrays, for instance) are expected to waive this with a
+    reason.
+``missing-from``
+    One-way schema: ``to_dict`` exists but no ``from_dict``. Legitimate
+    for report-only payloads consumed as plain dicts — waive with the
+    reason.
+``field-not-serialized``
+    A field the ``to_dict`` side never touches (no ``asdict(self)``, no
+    ``self.field`` read, no ``"field"`` key).
+``field-not-deserialized``
+    A field the ``from_dict`` side never touches (no ``**``-splat into
+    the constructor, no ``field=`` keyword, no ``"field"`` key).
+
+Detection is deliberately permissive: ``asdict(self)`` or a ``**d``
+splat counts as full coverage, and any mention of the field — attribute
+read, string key, keyword argument — counts for that side. The point is
+catching fields *nobody thought about*, with zero false positives on
+reasonable serializer styles.
+"""
+
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import List, Optional, Set, Tuple
+
+from .findings import Finding
+
+NAME = "schema"
+DESCRIPTION = (
+    "dataclass fields in repro.scenario / repro.core.{cluster,admission} "
+    "must round-trip through their to_dict/from_dict pair"
+)
+
+SCOPE_GLOBS = (
+    "src/repro/scenario/*.py",
+    "src/repro/core/cluster.py",
+    "src/repro/core/admission.py",
+)
+
+TO_NAMES = ("to_dict", "to_json")
+FROM_NAMES = ("from_dict", "from_json")
+
+
+def _f(code: str, path: str, line: int, msg: str) -> Finding:
+    return Finding(NAME, code, path, line, msg)
+
+
+def _is_dataclass_decorated(cls: ast.ClassDef) -> bool:
+    for dec in cls.decorator_list:
+        target = dec.func if isinstance(dec, ast.Call) else dec
+        if isinstance(target, ast.Name) and target.id == "dataclass":
+            return True
+        if isinstance(target, ast.Attribute) and target.attr == "dataclass":
+            return True
+    return False
+
+
+def _annotation_src(node: ast.AST) -> str:
+    try:
+        return ast.unparse(node)
+    except Exception:  # pragma: no cover - unparse is total on parse output
+        return ""
+
+
+def _dataclass_fields(cls: ast.ClassDef) -> List[Tuple[str, int]]:
+    """(name, lineno) of each dataclass field declared in the body."""
+    fields = []
+    for node in cls.body:
+        if not isinstance(node, ast.AnnAssign):
+            continue
+        if not isinstance(node.target, ast.Name):
+            continue
+        if "ClassVar" in _annotation_src(node.annotation):
+            continue
+        fields.append((node.target.id, node.lineno))
+    return fields
+
+
+def _find_method(cls: ast.ClassDef, names) -> Optional[ast.FunctionDef]:
+    for node in cls.body:
+        if isinstance(node, ast.FunctionDef) and node.name in names:
+            return node
+    return None
+
+
+def _mentions(fn: ast.FunctionDef) -> Tuple[Set[str], bool]:
+    """(mentioned names, full-coverage flag) for a serializer body.
+
+    Full coverage: ``asdict(...)`` / ``astuple(...)`` on the to side, or
+    a ``**``-splat (``Cls(**d)``) / ``dataclasses.replace`` on the from
+    side — either way every declared field flows through.
+    """
+    names: Set[str] = set()
+    full = False
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Constant) and isinstance(node.value, str):
+            names.add(node.value)
+        elif isinstance(node, ast.Attribute):
+            names.add(node.attr)
+        elif isinstance(node, ast.Call):
+            target = node.func
+            called = (
+                target.id
+                if isinstance(target, ast.Name)
+                else target.attr
+                if isinstance(target, ast.Attribute)
+                else ""
+            )
+            if called in ("asdict", "astuple", "replace"):
+                full = True
+            for kw in node.keywords:
+                if kw.arg is None:  # **splat
+                    full = True
+                else:
+                    names.add(kw.arg)
+    return names, full
+
+
+def _scope_files(root: Path) -> List[Path]:
+    out: List[Path] = []
+    for pattern in SCOPE_GLOBS:
+        out.extend(sorted(root.glob(pattern)))
+    return out
+
+
+def run(root: Path) -> List[Finding]:
+    findings: List[Finding] = []
+    for path in _scope_files(root):
+        rel = path.relative_to(root).as_posix()
+        try:
+            tree = ast.parse(path.read_text())
+        except SyntaxError as e:
+            findings.append(
+                _f("syntax-error", rel, e.lineno or 0, str(e))
+            )
+            continue
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.ClassDef):
+                continue
+            if not _is_dataclass_decorated(node):
+                continue
+            fields = _dataclass_fields(node)
+            to_fn = _find_method(node, TO_NAMES)
+            from_fn = _find_method(node, FROM_NAMES)
+            if to_fn is None and from_fn is None:
+                findings.append(
+                    _f(
+                        "missing-serializer",
+                        rel,
+                        node.lineno,
+                        f"dataclass {node.name} has no "
+                        "to_dict/from_dict pair — it cannot round-trip; "
+                        "waive if it is runtime-only state",
+                    )
+                )
+                continue
+            if from_fn is None:
+                findings.append(
+                    _f(
+                        "missing-from",
+                        rel,
+                        node.lineno,
+                        f"dataclass {node.name} serializes one-way "
+                        "(to_dict without from_dict); waive if it is a "
+                        "report-only payload",
+                    )
+                )
+            if to_fn is None:
+                findings.append(
+                    _f(
+                        "missing-from",
+                        rel,
+                        node.lineno,
+                        f"dataclass {node.name} deserializes one-way "
+                        "(from_dict without to_dict)",
+                    )
+                )
+            if to_fn is not None:
+                mentioned, full = _mentions(to_fn)
+                if not full:
+                    for fname, fline in fields:
+                        if fname not in mentioned:
+                            findings.append(
+                                _f(
+                                    "field-not-serialized",
+                                    rel,
+                                    fline,
+                                    f"{node.name}.{fname} never reaches "
+                                    f"{to_fn.name}() — a saved scenario "
+                                    "silently drops it",
+                                )
+                            )
+            if from_fn is not None:
+                mentioned, full = _mentions(from_fn)
+                if not full:
+                    for fname, fline in fields:
+                        if fname not in mentioned:
+                            findings.append(
+                                _f(
+                                    "field-not-deserialized",
+                                    rel,
+                                    fline,
+                                    f"{node.name}.{fname} never reaches "
+                                    f"{from_fn.name}() — a loaded "
+                                    "scenario resets it to the default",
+                                )
+                            )
+    return findings

@@ -1,97 +1,18 @@
 #!/usr/bin/env python
-"""Docs health check, run by the CI ``docs`` job.
-
-1. **Intra-repo links**: every relative markdown link in README.md,
-   ROADMAP.md, CHANGES.md, EXPERIMENTS.md, and ``docs/*.md`` must point
-   at a file (or directory) that exists in the repo. External
-   (``http``/``https``/``mailto``) and pure-anchor links are skipped.
-2. **EXPERIMENTS.md drift**: ``python -m benchmarks.report`` must
-   reproduce the committed EXPERIMENTS.md byte for byte from the
-   committed ``benchmarks/artifacts/*.json`` — i.e. nobody edited the
-   generated report by hand or committed artifacts without
-   regenerating.
-
-Usage: ``python tools/check_docs.py`` from the repo root (exit 0 = ok).
+"""Back-compat shim: the docs health check moved into the analysis
+driver as a rule. ``python tools/check_docs.py`` is now exactly
+``python -m tools.analyze --rule docs`` (same checks, same exit codes);
+prefer the latter. See docs/analysis.md.
 """
 
 from __future__ import annotations
 
-import difflib
-import re
 import sys
 from pathlib import Path
 
-REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
 
-# [text](target) — excluding images is unnecessary; they must exist too.
-LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
-EXTERNAL = ("http://", "https://", "mailto:")
-
-
-def check_links() -> list:
-    errors = []
-    md_files = [
-        REPO / "README.md",
-        REPO / "ROADMAP.md",
-        REPO / "CHANGES.md",
-        REPO / "EXPERIMENTS.md",
-        *sorted((REPO / "docs").glob("*.md")),
-    ]
-    for md in md_files:
-        if not md.exists():
-            errors.append(f"{md.relative_to(REPO)}: file missing")
-            continue
-        for n, line in enumerate(md.read_text().splitlines(), 1):
-            for target in LINK_RE.findall(line):
-                if target.startswith(EXTERNAL) or target.startswith("#"):
-                    continue
-                path = target.split("#", 1)[0]
-                if not path:
-                    continue
-                resolved = (md.parent / path).resolve()
-                if not resolved.exists():
-                    errors.append(
-                        f"{md.relative_to(REPO)}:{n}: broken link "
-                        f"-> {target}"
-                    )
-    return errors
-
-
-def check_experiments_drift() -> list:
-    sys.path.insert(0, str(REPO))
-    from benchmarks.report import build  # noqa: E402
-
-    committed = (REPO / "EXPERIMENTS.md").read_text()
-    rendered = build()
-    if committed == rendered:
-        return []
-    diff = list(
-        difflib.unified_diff(
-            committed.splitlines(),
-            rendered.splitlines(),
-            "EXPERIMENTS.md (committed)",
-            "benchmarks.report (rendered)",
-            lineterm="",
-        )
-    )
-    head = "\n".join(diff[:40])
-    return [
-        "EXPERIMENTS.md drifted from the committed artifacts — rerun "
-        "`PYTHONPATH=src python -m benchmarks.report` and commit the "
-        f"result. First diff lines:\n{head}"
-    ]
-
-
-def main() -> int:
-    errors = check_links() + check_experiments_drift()
-    if errors:
-        for e in errors:
-            print(f"ERROR: {e}")
-        print(f"\n{len(errors)} docs problem(s)")
-        return 1
-    print("docs ok: links resolve, EXPERIMENTS.md matches artifacts")
-    return 0
-
+from tools.analyze.__main__ import main  # noqa: E402
 
 if __name__ == "__main__":
-    sys.exit(main())
+    sys.exit(main(["--rule", "docs"]))
