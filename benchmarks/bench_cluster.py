@@ -1,7 +1,8 @@
-"""Fault-tolerant cluster: K x failure-rate sweep + the failover episode.
+"""Fault-tolerant cluster: sweeps, failover episode, K=100 churn, and
+the parallel-executor speedup measurement.
 
-Two parts, both on the Section VI-C Zipf workload (1e6-object catalogue
-at full scale, J=9 heterogeneous proxies):
+Four parts, all on the Section VI-C Zipf workload (1e6-object
+catalogue at full scale, J=9 heterogeneous proxies):
 
 1. **K x failure-rate sweep** — shard the workload across K MCD-OS
    nodes behind the consistent-hash ring and inject ``f`` seeded-random
@@ -12,6 +13,20 @@ at full scale, J=9 heterogeneous proxies):
 2. **Failover episode** — the ``cluster_failover`` preset (kill node 1
    at 40% of the trace, warm-recover at 60%): per-phase hit rates,
    remap fractions, and the recovery time-to-baseline.
+3. **K=100 reshard-churn sweep** — a remove wave then an add wave
+   across a 100-node ring, with ghost warm-up of remapped keys on and
+   off: per-event remap fractions, the windowed hit-rate curve through
+   the churn, and the time back to baseline. Membership churn only
+   (no fail events): the failover-table construction is quadratic in
+   ring positions and a 100-node ring never needs it here.
+4. **Parallel executor speedup** — the same K=16 run through
+   ``executor="sequential"`` and ``executor="parallel"`` (8 workers,
+   C backend): asserts bit-identity of estimates and telemetry, then
+   records the honest wall-clock ratio next to ``os.cpu_count()``.
+   The ratio is a *measurement*, not an assertion — on a single-core
+   host the pool cannot beat the sequential pass (the CI smoke job
+   gates its speedup floor on the visible core count for the same
+   reason).
 
 Artifact: ``benchmarks/artifacts/cluster.json`` (rendered into
 EXPERIMENTS.md §Cluster by ``python -m benchmarks.report``).
@@ -20,17 +35,120 @@ EXPERIMENTS.md §Cluster by ``python -m benchmarks.report``).
 from __future__ import annotations
 
 import dataclasses
+import os
+import time
 
 from repro.core.cluster import FaultSpec
 from repro.scenario import get_preset
 
 from .common import FULL, Timer, csv_row, fig2_scale_factors, quick_mode, save_artifact
 
+# Reshard-churn sweep: a wave of four removals, then a wave of four
+# additions (fresh node ids above the initial range), spread so every
+# event lands in its own windowed-hit-rate segment.
+CHURN_K = 100
+CHURN_EVENTS = (
+    (0.30, "remove", 3),
+    (0.34, "remove", 17),
+    (0.38, "remove", 41),
+    (0.42, "remove", 76),
+    (0.55, "add", 100),
+    (0.60, "add", 101),
+    (0.65, "add", 102),
+    (0.70, "add", 103),
+)
+
+SPEEDUP_K = 16
+SPEEDUP_WORKERS = 8
+SPEEDUP_TARGET = 3.0  # the acceptance floor on a multi-core host
+
 
 def _sweep_grids():
     if quick_mode():
         return (2, 4), (0, 2)
     return (2, 4, 8), (0, 1, 3)
+
+
+def _with_cluster(base, *, nodes, faults, executor="sequential", workers=None):
+    return dataclasses.replace(
+        base,
+        name=f"cluster_K{nodes}_{executor}",
+        system=dataclasses.replace(
+            base.system,
+            nodes=nodes,
+            faults=faults,
+            executor=executor,
+            workers=workers,
+        ),
+    )
+
+
+def _churn_run(base, warm: bool) -> dict:
+    spec = FaultSpec(events=CHURN_EVENTS, warm_remapped=warm)
+    sc = _with_cluster(base, nodes=CHURN_K, faults=spec)
+    rep = sc.run()
+    cl = rep.extras["cluster"]
+    return {
+        "warm_remapped": warm,
+        "overall_hit_rate": float(rep.overall_hit_rate),
+        # remap-fraction curve: one point per membership event
+        "remap_curve": [
+            {
+                "idx": r["idx"],
+                "action": r["action"],
+                "node": r["node"],
+                "fraction": r["fraction"],
+            }
+            for r in cl["remap"]
+        ],
+        # windowed hit rate through the churn (the recovery shape)
+        "windows": cl["windows"],
+        "recovery": cl["recovery"],
+        "ghosts_injected": cl["warm_remapped"]["injected"],
+        "requests": rep.n_requests,
+    }
+
+
+def _speedup_run(base) -> dict:
+    """Sequential vs parallel wall clock on the identical K=16 run.
+
+    Bit-identity is asserted; the speedup is recorded honestly next to
+    the visible core count (a 1-core container measures ~<=1x no
+    matter how correct the pool is)."""
+    seq_sc = _with_cluster(base, nodes=SPEEDUP_K, faults=FaultSpec())
+    par_sc = _with_cluster(
+        base,
+        nodes=SPEEDUP_K,
+        faults=FaultSpec(),
+        executor="parallel",
+        workers=SPEEDUP_WORKERS,
+    )
+    t0 = time.perf_counter()
+    seq = seq_sc.run()
+    t_seq = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    par = par_sc.run()
+    t_par = time.perf_counter() - t0
+
+    if not par.same_estimates(seq):
+        raise RuntimeError("parallel executor diverged from sequential")
+    if par.extras["cluster"] != seq.extras["cluster"]:
+        raise RuntimeError("parallel cluster telemetry diverged")
+
+    speedup = t_seq / max(t_par, 1e-9)
+    return {
+        "K": SPEEDUP_K,
+        "workers": SPEEDUP_WORKERS,
+        "backend": seq.backend,
+        "cpu_count": os.cpu_count(),
+        "sequential_seconds": round(t_seq, 4),
+        "parallel_seconds": round(t_par, 4),
+        "speedup": round(speedup, 3),
+        "target_speedup": SPEEDUP_TARGET,
+        "meets_target": speedup >= SPEEDUP_TARGET,
+        "bit_identical": True,
+        "requests": seq.n_requests + par.n_requests,
+    }
 
 
 def main() -> dict:
@@ -80,11 +198,25 @@ def main() -> dict:
         episode = episode_rep.extras["cluster"]
         total_requests += episode_rep.n_requests
 
+        # K=100 reshard churn, ghost warm-up off and on
+        churn = {
+            "K": CHURN_K,
+            "events": [list(e) for e in CHURN_EVENTS],
+            "runs": [_churn_run(base, warm) for warm in (False, True)],
+        }
+        total_requests += sum(r["requests"] for r in churn["runs"])
+
+        # sequential vs parallel executor on the identical K=16 run
+        speedup = _speedup_run(base)
+        total_requests += speedup["requests"]
+
     payload = {
         "preset": "cluster_failover",
         "scenario": base.to_dict(),
         "sweep": cells,
         "episode": episode,
+        "churn": churn,
+        "speedup": speedup,
         "full_scale": FULL,
     }
     save_artifact("cluster", payload)
@@ -104,11 +236,29 @@ def main() -> dict:
         f"recovered={episode['recovery']['recovered']} "
         f"(+{episode['recovery']['requests_to_baseline']} requests)"
     )
+    for r in churn["runs"]:
+        fracs = [p["fraction"] for p in r["remap_curve"]]
+        print(
+            f"# K={CHURN_K} churn warm={r['warm_remapped']}: "
+            f"hit={r['overall_hit_rate']:.4f} "
+            f"remap_frac={min(fracs):.4f}..{max(fracs):.4f} "
+            f"ghosts={r['ghosts_injected']} "
+            f"recovered={r['recovery']['recovered']}"
+        )
+    print(
+        f"# parallel executor: K={speedup['K']} "
+        f"workers={speedup['workers']} cores={speedup['cpu_count']} "
+        f"seq={speedup['sequential_seconds']}s "
+        f"par={speedup['parallel_seconds']}s "
+        f"speedup={speedup['speedup']}x "
+        f"(target {speedup['target_speedup']}x, bit-identical)"
+    )
     csv_row(
         "cluster",
         tm.seconds * 1e6 / max(total_requests, 1),
         f"cells={len(cells)};episode_recovered="
-        f"{episode['recovery']['recovered']}",
+        f"{episode['recovery']['recovered']};"
+        f"speedup={speedup['speedup']}x@{speedup['cpu_count']}cores",
     )
     return payload
 

@@ -15,7 +15,14 @@ enforces three hard assertions:
   the failed node's cache, so the recovery window is short);
 * the run is *deterministic* — a second run under the same seed
   reproduces every estimate bit for bit (the fault engine, ring, and
-  failover client add no hidden entropy).
+  failover client add no hidden entropy);
+* the *parallel executor is exact* — the same K=16 trace through
+  ``executor="parallel"`` (8 workers) reproduces the sequential
+  reference bit for bit, estimates and telemetry both, and on hosts
+  with at least ``SPEEDUP_MIN_CORES`` visible cores it also clears a
+  loose wall-clock speedup floor (the floor is skipped — bit-identity
+  is not — on smaller containers, where W forked workers sharing one
+  core can only lose).
 
 Used by the CI ``cluster-smoke`` job (and runnable standalone:
 ``PYTHONPATH=src python -m benchmarks.cluster_smoke``).
@@ -24,6 +31,8 @@ Used by the CI ``cluster-smoke`` job (and runnable standalone:
 from __future__ import annotations
 
 import dataclasses
+import os
+import time
 
 import numpy as np
 
@@ -38,6 +47,18 @@ from .common import Timer, csv_row, save_artifact
 REQUESTS_FACTOR = 0.02
 CATALOGUE_FACTOR = 0.02
 RECOVERY_TOL = 0.02
+
+# Parallel-executor leg: K=16 over 8 workers on a 4x-longer trace (the
+# pool's fork/teardown cost must be amortized before a wall-clock
+# ratio means anything). The floor is deliberately loose — the
+# contract is bit-identity; the floor only proves the pool is not
+# degenerate — and applies only where the hardware can express a
+# speedup at all.
+PARALLEL_K = 16
+PARALLEL_WORKERS = 8
+PARALLEL_REQUESTS_MULT = 4
+SPEEDUP_FLOOR = 1.3
+SPEEDUP_MIN_CORES = 4
 
 
 def scenario() -> Scenario:
@@ -104,6 +125,47 @@ def main() -> dict:
             "recovery detector never found a window back at baseline"
         )
 
+    # --- parallel executor: exactness always, speed where possible ---
+    par_base = dataclasses.replace(
+        sc,
+        name="cluster_smoke_parallel",
+        n_requests=sc.n_requests * PARALLEL_REQUESTS_MULT,
+        warmup=sc.warmup * PARALLEL_REQUESTS_MULT,
+        system=dataclasses.replace(
+            sc.system, nodes=PARALLEL_K, faults=FaultSpec()
+        ),
+    )
+    t0 = time.perf_counter()
+    seq16 = par_base.run()
+    t_seq = time.perf_counter() - t0
+    par_sc = dataclasses.replace(
+        par_base,
+        system=dataclasses.replace(
+            par_base.system, executor="parallel", workers=PARALLEL_WORKERS
+        ),
+    )
+    t0 = time.perf_counter()
+    par16 = par_sc.run()
+    t_par = time.perf_counter() - t0
+    if not par16.same_estimates(seq16):
+        raise RuntimeError(
+            f"parallel executor (K={PARALLEL_K}, "
+            f"workers={PARALLEL_WORKERS}) is not bit-identical to the "
+            "sequential reference"
+        )
+    if par16.extras["cluster"] != seq16.extras["cluster"]:
+        raise RuntimeError(
+            "parallel cluster telemetry differs from sequential"
+        )
+    cores = os.cpu_count() or 1
+    speedup = t_seq / max(t_par, 1e-9)
+    if cores >= SPEEDUP_MIN_CORES and speedup < SPEEDUP_FLOOR:
+        raise RuntimeError(
+            f"parallel executor speedup {speedup:.2f}x on {cores} cores "
+            f"is below the {SPEEDUP_FLOOR}x floor (K={PARALLEL_K}, "
+            f"workers={PARALLEL_WORKERS})"
+        )
+
     payload = {
         "scenario": sc.to_dict(),
         "backend": rep.backend,
@@ -117,6 +179,17 @@ def main() -> dict:
         "degraded_requests": cl["retries"]["degraded_requests"],
         "retries": cl["retries"]["total"],
         "deterministic": True,
+        "parallel": {
+            "K": PARALLEL_K,
+            "workers": PARALLEL_WORKERS,
+            "cpu_count": cores,
+            "sequential_seconds": round(t_seq, 3),
+            "parallel_seconds": round(t_par, 3),
+            "speedup": round(speedup, 3),
+            "speedup_floor": SPEEDUP_FLOOR,
+            "floor_enforced": cores >= SPEEDUP_MIN_CORES,
+            "bit_identical": True,
+        },
         "wall_seconds": round(tm.seconds, 3),
     }
     save_artifact("cluster_smoke", payload)
@@ -127,10 +200,16 @@ def main() -> dict:
         f"in {cl['recovery']['requests_to_baseline']} requests, "
         f"deterministic across reruns"
     )
+    print(
+        f"# parallel executor: K={PARALLEL_K} workers={PARALLEL_WORKERS} "
+        f"bit-identical, speedup={speedup:.2f}x on {cores} cores "
+        f"(floor {SPEEDUP_FLOOR}x enforced at >= {SPEEDUP_MIN_CORES})"
+    )
     csv_row(
         "cluster_smoke",
         tm.seconds * 1e6 / max(3 * sc.n_requests, 1),
-        f"hits_lost={hits_lost};pre={pre:.4f};post={post:.4f}",
+        f"hits_lost={hits_lost};pre={pre:.4f};post={post:.4f};"
+        f"par_speedup={speedup:.2f}x@{cores}cores",
     )
     return payload
 

@@ -468,6 +468,47 @@ def render_cluster(d: dict) -> List[str]:
         f"**{rec['recovered']}** "
         f"(+{rec['requests_to_baseline']:,} requests after the warm "
         "restart).",
+    ]
+    churn = d.get("churn")
+    if churn:
+        out += [
+            "",
+            f"Reshard churn at K={churn['K']} "
+            f"({len(churn['events'])} membership events: a remove wave "
+            "then an add wave):",
+            "",
+            "| ghost warm-up | hit rate | remap fraction/event | "
+            "ghosts injected | recovered | to baseline |",
+            "|---|---|---|---|---|---|",
+        ]
+        for r in churn["runs"]:
+            fr = [p["fraction"] for p in r["remap_curve"]]
+            rec2 = r["recovery"]
+            out.append(
+                f"| {'on' if r['warm_remapped'] else 'off'} | "
+                f"{r['overall_hit_rate']:.4f} | "
+                f"{min(fr):.4f}..{max(fr):.4f} | "
+                f"{r['ghosts_injected']:,} | {rec2['recovered']} | "
+                f"{rec2['requests_to_baseline']:,} requests |"
+            )
+    sp = d.get("speedup")
+    if sp:
+        out += [
+            "",
+            f"Parallel executor (K={sp['K']}, {sp['workers']} workers, "
+            f"{sp['backend']} backend, {sp['cpu_count']} visible "
+            f"core(s)): sequential {sp['sequential_seconds']}s vs "
+            f"parallel {sp['parallel_seconds']}s — "
+            f"**{sp['speedup']}x** wall clock, bit-identical estimates "
+            "and telemetry. Measured against the "
+            f"{sp['target_speedup']}x multi-core target: "
+            f"{'met' if sp['meets_target'] else 'not met on this host'} "
+            "— the ratio is recorded honestly next to the visible core "
+            "count (forked workers sharing one core serialize), and "
+            "the CI smoke job enforces its floor only on multi-core "
+            "hosts.",
+        ]
+    out += [
         "",
         _prose(
             "Consistent hashing keeps the fault blast radius at one "
@@ -476,9 +517,30 @@ def render_cluster(d: dict) -> List[str]:
             "and during an outage the failover client degrades only "
             "the failed node's key share (bounded by its ring "
             "fraction) before the warm restart pulls the cluster back "
-            "to baseline within a few windows."
+            "to baseline within a few windows. At K=100 each "
+            "membership event remaps ~1/K of the key space (the "
+            "minimal-disruption property at scale), so even an "
+            "eight-event churn storm moves under a tenth of the keys "
+            "end to end, and ghost warm-up of the remapped arcs trims "
+            "the post-reshard cold-miss dip."
         ),
     ]
+    return out
+
+
+def render_cluster_smoke(d: dict) -> List[str]:
+    out = render_generic(d)
+    p = d.get("parallel")
+    if p:
+        out += [
+            "",
+            f"Parallel executor leg: K={p['K']} over {p['workers']} "
+            "workers, bit-identical to the sequential reference "
+            f"(estimates and telemetry); wall-clock speedup "
+            f"{p['speedup']}x on {p['cpu_count']} visible core(s), "
+            f"{p['speedup_floor']}x floor "
+            f"{'enforced' if p['floor_enforced'] else 'not enforced on this host'}.",
+        ]
     return out
 
 
@@ -505,6 +567,7 @@ RENDERERS: Dict[str, Callable[[dict], List[str]]] = {
     "simthroughput": render_simthroughput,
     "admission": render_admission,
     "cluster": render_cluster,
+    "cluster_smoke": render_cluster_smoke,
     "serving": render_serving,
 }
 
@@ -519,6 +582,7 @@ TITLES = {
     "simthroughput": "Monte-Carlo engine throughput",
     "admission": "Section IV-C — overbooking & admission control",
     "cluster": "Section VI — fault-tolerant MCD-OS cluster (churn & failover)",
+    "cluster_smoke": "Cluster smoke (CI gate)",
     "serving": "Serving — multi-tenant KV prefix-cache sweep",
     "serving_smoke": "Serving smoke (CI gate)",
 }

@@ -38,16 +38,29 @@ The result aggregates per-node engines into one cluster-level
 :class:`~repro.core.fastsim.SimResult` (weighted by each node's share
 of every object's post-warmup demand, so a single-node cluster with no
 faults is bit-identical to :func:`~repro.core.fastsim.simulate_trace`)
-plus a JSON-safe stats dict: per-phase hit rates (pre-fault / during /
-post-recovery), a windowed hit-rate series, per-event remap fractions,
-retry/degraded counts, and the recovery time-to-baseline.
+plus a JSON-safe stats payload (:class:`ClusterStats`): per-phase hit
+rates (pre-fault / during / post-recovery), a windowed hit-rate series,
+per-event remap fractions, retry/degraded counts, and the recovery
+time-to-baseline.
+
+Because nodes are independent given the route, the per-node feeding
+pass is embarrassingly parallel. ``executor="parallel"`` fans it out
+over a process pool (:class:`ClusterExecutor`): the routing pass, the
+warm-up orchestration and the counter merge stay in the parent, worker
+processes own disjoint node subsets and receive the same per-segment
+feed schedule the sequential path runs, so the result — every counter,
+every telemetry field — is bit-identical to ``executor="sequential"``
+(the reference; ``tests/test_cluster_parallel.py`` proves it).
 """
 
 from __future__ import annotations
 
 import hashlib
+import multiprocessing
+import os
 import time
-from dataclasses import dataclass
+import traceback
+from dataclasses import dataclass, field
 from functools import lru_cache
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -65,6 +78,7 @@ from .irm import IRMTrace
 
 DEFAULT_VNODES = 64
 FAULT_ACTIONS = ("fail", "recover", "add", "remove")
+EXECUTORS = ("sequential", "parallel")
 
 _MASK64 = (1 << 64) - 1
 
@@ -387,6 +401,307 @@ def _counter_delta(after: dict, before: dict) -> dict:
     return {k: after[k] - before[k] for k in after}
 
 
+def _feed_array(drv, proxies: np.ndarray, objects: np.ndarray, chunk_size) -> None:
+    """Feed one (proxy, object) slice, split into ``chunk_size`` pieces.
+
+    The drivers are incremental, so splitting a feed changes nothing but
+    peak temporary memory (the PR-3 streaming invariant) — ``None``
+    feeds in one call, exactly the pre-chunking behavior."""
+    n = len(objects)
+    if not chunk_size or n <= int(chunk_size):
+        if n:
+            drv.feed(proxies, objects)
+        return
+    step = int(chunk_size)
+    for a in range(0, n, step):
+        drv.feed(proxies[a : a + step], objects[a : a + step])
+
+
+class _FeedPlan:
+    """Read-only inputs of the per-node feeding pass.
+
+    One instance is shared by every executor worker: under the ``fork``
+    start method the trace arrays and route tables are inherited
+    copy-on-write (never copied, never re-pickled); under ``spawn`` the
+    plan is pickled once per worker. Nothing in it is mutated after
+    construction."""
+
+    __slots__ = (
+        "params", "n_objects", "lengths", "engine", "chunk_size",
+        "proxies", "objects", "sel", "local_warm", "local_rf", "n_segs",
+    )
+
+    def __init__(
+        self, params, n_objects, lengths, engine, chunk_size,
+        proxies, objects, sel, local_warm, local_rf, n_segs,
+    ):
+        self.params = params
+        self.n_objects = n_objects
+        self.lengths = lengths
+        self.engine = engine
+        self.chunk_size = chunk_size
+        self.proxies = proxies
+        self.objects = objects
+        self.sel = sel
+        self.local_warm = local_warm
+        self.local_rf = local_rf
+        self.n_segs = n_segs
+
+
+class _NodeBank:
+    """Per-node drivers + warm-up corrections for a subset of nodes.
+
+    This is the single implementation of the feeding pass: the
+    sequential executor holds one bank over all nodes in-process, each
+    :class:`ClusterExecutor` worker holds one over its node subset.
+    Identical code on identical per-node feed sequences is what makes
+    the two executors bit-identical by construction."""
+
+    def __init__(self, plan: _FeedPlan, my_nodes: Sequence[int]):
+        self.plan = plan
+        self.my_nodes = [int(m) for m in my_nodes]
+        self.drivers: Dict[int, object] = {}
+        self.corr: Dict[int, dict] = {}
+        self.engine_name = "?"
+        self.vlen_scale = 1
+        self.n_injected = 0
+        # cumulative warm-adjusted list hits after each segment; the
+        # parent sums banks and diffs to recover per-segment hits
+        self.adj = np.zeros(plan.n_segs, dtype=np.int64)
+
+    def _driver(self, m: int):
+        drv = self.drivers.get(m)
+        if drv is None:
+            drv, self.engine_name, self.vlen_scale = make_chunk_driver(
+                self.plan.params,
+                self.plan.n_objects,
+                self.plan.lengths,
+                self.plan.local_warm[m],
+                self.plan.local_rf[m],
+                engine=self.plan.engine,
+            )
+            self.drivers[m] = drv
+        return drv
+
+    def resident(self, m: int, keys: np.ndarray) -> np.ndarray:
+        """Which ``keys`` are resident on node ``m`` (False if the node
+        never received traffic — no driver, nothing cached)."""
+        drv = self.drivers.get(m)
+        if drv is None:
+            return np.zeros(len(keys), dtype=bool)
+        return np.asarray(drv.length)[keys] > 0
+
+    def warm(self, m: int, warm_proxies: np.ndarray, warm_keys: np.ndarray) -> None:
+        drv = self._driver(m)
+        before = drv.counters()
+        _feed_array(drv, warm_proxies, warm_keys, self.plan.chunk_size)
+        delta = _counter_delta(drv.counters(), before)
+        acc = self.corr.setdefault(m, {k: 0 * v for k, v in delta.items()})
+        for k in delta:
+            acc[k] = acc[k] + delta[k]
+        self.n_injected += int(len(warm_keys))
+
+    def feed_segment(self, si: int, a: int, b: int) -> None:
+        plan = self.plan
+        for m in self.my_nodes:
+            sm = plan.sel[m]
+            lo, hi = np.searchsorted(sm, (a, b))
+            if lo == hi:
+                continue
+            idxs = sm[lo:hi]
+            _feed_array(
+                self._driver(m), plan.proxies[idxs], plan.objects[idxs],
+                plan.chunk_size,
+            )
+        total = sum(int(d.counters()["n_hit_list"]) for d in self.drivers.values())
+        total -= sum(int(c["n_hit_list"]) for c in self.corr.values())
+        self.adj[si] = total
+
+    def collect(self) -> tuple:
+        outs = {m: drv.finish(int(drv.idx)) for m, drv in self.drivers.items()}
+        elapsed = {m: float(drv.elapsed) for m, drv in self.drivers.items()}
+        return (
+            outs, self.corr, elapsed, self.adj, self.n_injected,
+            self.engine_name, self.vlen_scale,
+        )
+
+
+class _SequentialExecutor:
+    """The reference executor: every node in one in-process bank."""
+
+    def __init__(self, plan: _FeedPlan, nodes: Sequence[int]):
+        self._bank = _NodeBank(plan, nodes)
+
+    def resident(self, m, keys):
+        return self._bank.resident(m, keys)
+
+    def warm(self, m, warm_proxies, warm_keys):
+        self._bank.warm(m, warm_proxies, warm_keys)
+
+    def feed_segment(self, si, a, b):
+        self._bank.feed_segment(si, a, b)
+
+    def collect(self):
+        return self._bank.collect()
+
+    def close(self):
+        pass
+
+
+def _worker_main(plan: _FeedPlan, my_nodes: List[int], conn) -> None:
+    """Worker process loop: apply the parent's feed schedule to one
+    node-subset bank. Commands arrive in the exact order the sequential
+    path would execute them (pipes are FIFO), replies are only sent for
+    the synchronous ops (``resident`` queries and the final collect)."""
+    bank = _NodeBank(plan, my_nodes)
+    try:
+        while True:
+            msg = conn.recv()
+            op = msg[0]
+            if op == "seg":
+                bank.feed_segment(msg[1], msg[2], msg[3])
+            elif op == "warm":
+                bank.warm(msg[1], msg[2], msg[3])
+            elif op == "resident":
+                conn.send(bank.resident(msg[1], msg[2]))
+            elif op == "finish":
+                conn.send(bank.collect())
+                return
+            else:  # pragma: no cover - protocol bug guard
+                raise RuntimeError(f"unknown cluster worker op {op!r}")
+    except EOFError:  # parent died / closed early: nothing to report to
+        return
+    except Exception:
+        try:
+            conn.send(("error", traceback.format_exc()))
+        except Exception:  # pragma: no cover - parent already gone
+            pass
+    finally:
+        conn.close()
+
+
+class ClusterExecutor:
+    """Process-pool executor for the per-node feeding pass
+    (``System(executor="parallel")``).
+
+    ``workers=N`` worker processes (default: ``os.cpu_count()``, capped
+    at the number of nodes that ever receive traffic) each own a fixed
+    round-robin subset of nodes. The parent streams the same segment
+    schedule the sequential executor runs — asynchronous ``seg`` /
+    ``warm`` commands, synchronous ghost-residency queries at remap
+    boundaries — and merges per-worker counter snapshots by node id, so
+    worker count and scheduling never reach the results: the output is
+    bit-identical to the sequential reference for every (K, faults,
+    chunk_size, backend) combination.
+
+    Prefers the ``fork`` start method so the trace arrays and route
+    tables in the :class:`_FeedPlan` are shared copy-on-write; falls
+    back to ``spawn`` (plan pickled per worker) where fork is
+    unavailable. JAX warns about fork-after-import because its
+    threadpools hold locks a forked child could inherit mid-acquire —
+    safe here because workers only ever execute numpy and the
+    fastsim C/flat drivers, never JAX, so no inherited JAX lock is
+    ever taken."""
+
+    def __init__(
+        self,
+        plan: _FeedPlan,
+        nodes: Sequence[int],
+        workers: Optional[int] = None,
+    ):
+        methods = multiprocessing.get_all_start_methods()
+        ctx = multiprocessing.get_context(
+            "fork" if "fork" in methods else "spawn"
+        )
+        node_list = sorted(int(m) for m in nodes)
+        W = int(workers) if workers is not None else (os.cpu_count() or 1)
+        W = max(1, min(W, max(len(node_list), 1)))
+        self.workers = W
+        self._owner = {m: i % W for i, m in enumerate(node_list)}
+        groups: List[List[int]] = [[] for _ in range(W)]
+        for m in node_list:
+            groups[self._owner[m]].append(m)
+        self._conns = []
+        self._procs = []
+        for g in groups:
+            parent_conn, child_conn = ctx.Pipe()
+            p = ctx.Process(
+                target=_worker_main, args=(plan, g, child_conn), daemon=True
+            )
+            p.start()
+            child_conn.close()
+            self._conns.append(parent_conn)
+            self._procs.append(p)
+
+    def _send(self, w: int, msg: tuple) -> None:
+        try:
+            self._conns[w].send(msg)
+        except (BrokenPipeError, OSError) as e:
+            raise RuntimeError(
+                f"cluster worker {w} died (pid {self._procs[w].pid}): {e}"
+            ) from e
+
+    def _recv(self, w: int):
+        try:
+            obj = self._conns[w].recv()
+        except EOFError as e:
+            raise RuntimeError(
+                f"cluster worker {w} exited without replying "
+                f"(exitcode {self._procs[w].exitcode})"
+            ) from e
+        if isinstance(obj, tuple) and obj and obj[0] == "error":
+            raise RuntimeError(f"cluster worker {w} failed:\n{obj[1]}")
+        return obj
+
+    def resident(self, m, keys):
+        w = self._owner[m]
+        self._send(w, ("resident", m, keys))
+        return self._recv(w)
+
+    def warm(self, m, warm_proxies, warm_keys):
+        self._send(self._owner[m], ("warm", m, warm_proxies, warm_keys))
+
+    def feed_segment(self, si, a, b):
+        for w in range(self.workers):
+            self._send(w, ("seg", si, a, b))
+
+    def collect(self):
+        for w in range(self.workers):
+            self._send(w, ("finish",))
+        outs: Dict[int, dict] = {}
+        corr: Dict[int, dict] = {}
+        elapsed: Dict[int, float] = {}
+        adj = None
+        n_injected = 0
+        engine_name = "?"
+        vlen_scale = 1
+        # merge in worker-index order: node sets are disjoint and the
+        # segment totals are sums of ints, so arrival order cannot
+        # reach the merged result — this order is for readability
+        for w in range(self.workers):
+            o, c, e, a, inj, en, vs = self._recv(w)
+            outs.update(o)
+            corr.update(c)
+            elapsed.update(e)
+            adj = a if adj is None else adj + a
+            n_injected += int(inj)
+            if engine_name == "?" and en != "?":
+                engine_name, vlen_scale = en, vs
+        return outs, corr, elapsed, adj, n_injected, engine_name, vlen_scale
+
+    def close(self):
+        for conn in self._conns:
+            try:
+                conn.close()
+            except OSError:  # pragma: no cover
+                pass
+        for p in self._procs:
+            p.join(timeout=5.0)
+            if p.is_alive():  # pragma: no cover - hung worker guard
+                p.terminate()
+                p.join(timeout=5.0)
+
+
 def simulate_cluster(
     params: SimParams,
     trace: IRMTrace,
@@ -400,6 +715,9 @@ def simulate_cluster(
     engine: str = "auto",
     sparse: bool = False,
     fault_seed: int = 0,
+    executor: str = "sequential",
+    workers: Optional[int] = None,
+    chunk_size: Optional[int] = None,
 ) -> Tuple[SimResult, dict]:
     """Drive one trace through a K-node MCD-OS cluster with faults.
 
@@ -410,9 +728,17 @@ def simulate_cluster(
     down primaries. Returns ``(aggregate SimResult, cluster stats)``:
     the SimResult matches the single-node contract (with ``nodes=1``
     and an empty spec it is bit-identical to ``simulate_trace``), the
-    stats dict is the JSON payload for ``Report.extras["cluster"]``.
-    Degraded requests (retry budget exhausted) are folded into
-    ``reqs_by_proxy`` so realized hit rates charge them as misses.
+    stats dict is the JSON payload for ``Report.extras["cluster"]``
+    (:meth:`ClusterStats.to_dict`). Degraded requests (retry budget
+    exhausted) are folded into ``reqs_by_proxy`` so realized hit rates
+    charge them as misses.
+
+    ``executor="parallel"`` runs the per-node feeding pass on a
+    :class:`ClusterExecutor` process pool with ``workers`` processes
+    (default ``os.cpu_count()``); results and telemetry are
+    bit-identical to the sequential reference. ``chunk_size`` bounds
+    the length of any single feed call (memory, not semantics: the
+    drivers are incremental, so results are identical for every split).
     """
     if params.variant != "lru":
         raise ValueError(
@@ -424,6 +750,14 @@ def simulate_cluster(
             "cluster simulation needs a chunk-fed counter backend: "
             f"engine must be 'auto', 'c' or 'flat' (got {engine!r})"
         )
+    if executor not in EXECUTORS:
+        raise ValueError(
+            f"unknown cluster executor {executor!r}; options: {EXECUTORS}"
+        )
+    if workers is not None and int(workers) < 1:
+        raise ValueError("workers must be >= 1")
+    if chunk_size is not None and int(chunk_size) < 1:
+        raise ValueError("chunk_size must be >= 1")
     K = int(nodes)
     if K < 1:
         raise ValueError("cluster needs at least one node")
@@ -540,73 +874,62 @@ def simulate_cluster(
     segs = list(zip(bounds[:-1], bounds[1:]))
 
     ever_nodes = sorted(set(np.unique(target[~degraded]).tolist()) | set(downtime))
-    sel = {m: np.flatnonzero(target == m) for m in ever_nodes}
+    # one stable argsort instead of K linear scans: within each node the
+    # stable order preserves ascending request index, so sel[m] is
+    # exactly np.flatnonzero(target == m)
+    route_order = np.argsort(target, kind="stable")
+    route_sorted = target[route_order]
+    sel = {}
+    for m in ever_nodes:
+        lo, hi = np.searchsorted(route_sorted, (m, m + 1))
+        sel[m] = np.ascontiguousarray(route_order[lo:hi])
     local_warm = {m: int(np.searchsorted(sel[m], warmup)) for m in ever_nodes}
     local_rf = {m: int(np.searchsorted(sel[m], ripple_from)) for m in ever_nodes}
 
-    drivers: Dict[int, object] = {}
-    corr: Dict[int, dict] = {}
-    engine_name = "?"
-    vlen_scale = 1
+    plan = _FeedPlan(
+        params, N, lengths, engine, chunk_size,
+        proxies, objects, sel, local_warm, local_rf, len(segs),
+    )
+    ex = (
+        ClusterExecutor(plan, ever_nodes, workers=workers)
+        if executor == "parallel"
+        else _SequentialExecutor(plan, ever_nodes)
+    )
     last_proxy = np.zeros(N, dtype=np.int64)
-    n_injected = 0
-
-    def _driver(m: int):
-        nonlocal engine_name, vlen_scale
-        drv = drivers.get(m)
-        if drv is None:
-            drv, engine_name, vlen_scale = make_chunk_driver(
-                params, N, lengths, local_warm[m], local_rf[m], engine=engine
-            )
-            drivers[m] = drv
-        return drv
-
-    seg_hits = np.zeros(len(segs), dtype=np.int64)
-    prev_total = 0
-    for si, (a, b) in enumerate(segs):
-        if spec.warm_remapped and a in remap_by_idx:
-            for moved, old_own, new_own in remap_by_idx[a]:
-                for m in np.unique(new_own).tolist():
-                    if m not in sel:  # new owner never sees real traffic
-                        continue
-                    keys_m = moved[new_own == m]
-                    olds = old_own[new_own == m]
-                    resident = np.zeros(keys_m.size, dtype=bool)
-                    for o in np.unique(olds).tolist():
-                        drv_o = drivers.get(o)
-                        if drv_o is None:
+    try:
+        for si, (a, b) in enumerate(segs):
+            if spec.warm_remapped and a in remap_by_idx:
+                for moved, old_own, new_own in remap_by_idx[a]:
+                    for m in np.unique(new_own).tolist():
+                        if m not in sel:  # new owner never sees real traffic
                             continue
-                        osel = olds == o
-                        olen = np.asarray(drv_o.length)
-                        resident[osel] = olen[keys_m[osel]] > 0
-                    warm_keys = keys_m[resident]
-                    if not warm_keys.size:
-                        continue
-                    drv = _driver(m)
-                    before = drv.counters()
-                    drv.feed(last_proxy[warm_keys], warm_keys)
-                    delta = _counter_delta(drv.counters(), before)
-                    acc = corr.setdefault(m, {k: 0 * v for k, v in delta.items()})
-                    for k in delta:
-                        acc[k] = acc[k] + delta[k]
-                    n_injected += int(warm_keys.size)
-        for m in ever_nodes:
-            sm = sel[m]
-            lo, hi = np.searchsorted(sm, (a, b))
-            if lo == hi:
-                continue
-            idxs = sm[lo:hi]
-            _driver(m).feed(proxies[idxs], objects[idxs])
-        total = sum(int(d.counters()["n_hit_list"]) for d in drivers.values())
-        total -= sum(int(c["n_hit_list"]) for c in corr.values())
-        seg_hits[si] = total - prev_total
-        prev_total = total
-        last_proxy[objects[a:b]] = proxies[a:b]
+                        keys_m = moved[new_own == m]
+                        olds = old_own[new_own == m]
+                        resident = np.zeros(keys_m.size, dtype=bool)
+                        for o in np.unique(olds).tolist():
+                            osel = olds == o
+                            resident[osel] = ex.resident(o, keys_m[osel])
+                        warm_keys = keys_m[resident]
+                        if not warm_keys.size:
+                            continue
+                        ex.warm(m, last_proxy[warm_keys], warm_keys)
+            ex.feed_segment(si, a, b)
+            last_proxy[objects[a:b]] = proxies[a:b]
+        (
+            outs, corr, elapsed_by_node, seg_totals,
+            n_injected, engine_name, vlen_scale,
+        ) = ex.collect()
+    finally:
+        ex.close()
+    seg_hits = np.diff(seg_totals, prepend=np.int64(0))
+    # canonical node order: the executors hand nodes back in driver- or
+    # worker-creation order, and the float aggregations below (vlen and
+    # occupancy sums) round differently under reordering — sorting here
+    # makes every aggregate a pure function of the per-node results
+    outs = {m: outs[m] for m in sorted(outs)}
 
-    # -- per-node finish + aggregation ------------------------------------
-    outs: Dict[int, dict] = {}
-    for m, drv in drivers.items():
-        out = drv.finish(int(drv.idx))
+    # -- per-node correction + aggregation --------------------------------
+    for m, out in outs.items():
         c = corr.get(m)
         if c is not None:
             for k in (
@@ -617,11 +940,10 @@ def simulate_cluster(
             out["hits_p"] = np.asarray(out["hits_p"]) - c["hits_by_proxy"]
             out["reqs_p"] = np.asarray(out["reqs_p"]) - c["reqs_by_proxy"]
             out["hist"] = np.asarray(out["hist"]) - c["hist"]
-        outs[m] = out
 
     results = {
         m: _assemble(
-            out, drivers[m].elapsed, len(sel[m]), local_warm[m], J, N,
+            out, elapsed_by_node[m], len(sel[m]), local_warm[m], J, N,
             vlen_scale, engine_name, sparse=True,
         )
         for m, out in outs.items()
@@ -702,7 +1024,7 @@ def simulate_cluster(
         remap_log, retries_total, n_degraded, n_injected, downtime,
         results, sel, engine_name,
     )
-    return agg, stats
+    return agg, stats.to_dict()
 
 
 def _phase_stats(
@@ -728,11 +1050,57 @@ def _phase_stats(
     }
 
 
+@dataclass
+class ClusterStats:
+    """The ``Report.extras["cluster"]`` telemetry payload.
+
+    A declared schema rather than an ad-hoc dict so the
+    ``tools.analyze`` schema rule audits it: a field added here without
+    touching :meth:`to_dict` / :meth:`from_dict` fails the
+    static-analysis CI job, which is what keeps new telemetry from
+    shipping un-round-tripped. Every value is JSON-safe (ints, floats,
+    strings, ``None`` — never NaN: zero-request phases, windows and
+    nodes report ``None`` rates)."""
+
+    nodes: int
+    vnodes: int
+    engine: str
+    retry_budget: int
+    events: List[dict] = field(default_factory=list)
+    phases: Dict[str, Optional[dict]] = field(default_factory=dict)
+    windows: dict = field(default_factory=dict)
+    remap: List[dict] = field(default_factory=list)
+    retries: dict = field(default_factory=dict)
+    recovery: dict = field(default_factory=dict)
+    warm_remapped: dict = field(default_factory=dict)
+    per_node: List[dict] = field(default_factory=list)
+
+    def to_dict(self) -> dict:
+        return {
+            "nodes": int(self.nodes),
+            "vnodes": int(self.vnodes),
+            "engine": self.engine,
+            "retry_budget": int(self.retry_budget),
+            "events": self.events,
+            "phases": self.phases,
+            "windows": self.windows,
+            "remap": self.remap,
+            "retries": self.retries,
+            "recovery": self.recovery,
+            "warm_remapped": self.warm_remapped,
+            "per_node": self.per_node,
+        }
+
+    @staticmethod
+    def from_dict(d: dict) -> "ClusterStats":
+        return ClusterStats(**d)
+
+
 def _cluster_stats(
     spec, K, events, segs, seg_hits, warmup, n, w, window_starts,
     remap_log, retries_total, n_degraded, n_injected, downtime,
     results, sel, engine_name,
-) -> dict:
+) -> ClusterStats:
     windows = []
     for ws in window_starts:
         we = min(ws + w, n)
@@ -783,37 +1151,42 @@ def _cluster_stats(
     per_node = []
     for m in sorted(sel):
         r = results.get(m)
+        hits = int(r.hits_by_proxy.sum()) if r else 0
+        reqs = int(r.reqs_by_proxy.sum()) if r else 0
         per_node.append(
             {
                 "node": int(m),
                 "requests": int(len(sel[m])),
-                "post_warmup_hits": int(r.hits_by_proxy.sum()) if r else 0,
-                "post_warmup_requests": int(r.reqs_by_proxy.sum()) if r else 0,
+                "post_warmup_hits": hits,
+                "post_warmup_requests": reqs,
+                # None, not NaN, on zero-request nodes: the payload must
+                # stay valid JSON through a round trip
+                "hit_rate": (hits / reqs) if reqs else None,
                 "downtime_frac": downtime.get(m, 0) / max(n, 1),
             }
         )
 
-    return {
-        "nodes": int(K),
-        "vnodes": int(spec.vnodes),
-        "engine": engine_name,
-        "retry_budget": int(spec.retry_budget),
-        "events": [e.to_dict() for e in events],
-        "phases": phases,
-        "windows": {
+    return ClusterStats(
+        nodes=int(K),
+        vnodes=int(spec.vnodes),
+        engine=engine_name,
+        retry_budget=int(spec.retry_budget),
+        events=[e.to_dict() for e in events],
+        phases=phases,
+        windows={
             "size": int(w),
             "starts": [int(x["start"]) for x in windows],
             "hit_rate": [float(x["hit_rate"]) for x in windows],
         },
-        "remap": remap_log,
-        "retries": {
+        remap=remap_log,
+        retries={
             "total": int(retries_total),
             "degraded_requests": int(n_degraded),
         },
-        "recovery": recovery,
-        "warm_remapped": {
+        recovery=recovery,
+        warm_remapped={
             "enabled": bool(spec.warm_remapped),
             "injected": int(n_injected),
         },
-        "per_node": per_node,
-    }
+        per_node=per_node,
+    )

@@ -366,7 +366,10 @@ def _run_cluster(sc: Scenario) -> Report:
     and an empty :class:`~repro.core.cluster.FaultSpec` the estimates
     are bit-identical to the single-node path. The cluster telemetry
     (phases, windows, remaps, retries, recovery) lands in
-    ``Report.extras["cluster"]``.
+    ``Report.extras["cluster"]``. ``System(executor="parallel",
+    workers=W)`` fans the per-node feeding pass out over a
+    :class:`~repro.core.cluster.ClusterExecutor` process pool with
+    bit-identical results and telemetry.
     """
     system, est = sc.system, sc.estimator
     if est.kind != "monte_carlo":
@@ -403,6 +406,11 @@ def _run_cluster(sc: Scenario) -> Report:
         engine=system.backend,
         sparse=streaming,
         fault_seed=cluster_fault_seed(sc.seed),
+        executor=system.executor,
+        workers=system.workers,
+        # streamed runs bound per-feed temporaries exactly like the
+        # single-node chunked path; results are split-invariant
+        chunk_size=est.chunk_size if streaming else None,
     )
     lam = _rates_for(sc)
     per_proxy, overall = _hit_rates(res.occupancy, lam)

@@ -18,7 +18,7 @@ from typing import Optional, Tuple
 
 import numpy as np
 
-from repro.core.cluster import FaultSpec
+from repro.core.cluster import EXECUTORS, FaultSpec
 from repro.core.fastsim import SimParams
 from repro.core.workingset import ATTRIBUTIONS
 
@@ -163,6 +163,17 @@ class System:
         windows). Setting it — even empty — routes the run through the
         cluster simulator; per-phase hit rates, remap fractions and
         recovery time land in ``Report.extras["cluster"]``.
+    executor:
+        How the cluster's per-node feeding pass runs: ``sequential``
+        (default — the reference path) or ``parallel`` (a
+        :class:`~repro.core.cluster.ClusterExecutor` process pool;
+        bit-identical results, one worker process per node subset).
+        Setting ``parallel`` routes the run through the cluster
+        simulator even at ``nodes=1``.
+    workers:
+        Process count for ``executor="parallel"`` (default:
+        ``os.cpu_count()``, capped at the node count). Never affects
+        results — only wall-clock time.
     """
 
     variant: str = "lru"
@@ -178,6 +189,8 @@ class System:
     admission: Optional[AdmissionSpec] = None
     nodes: int = 1
     faults: Optional[FaultSpec] = None
+    executor: str = "sequential"
+    workers: Optional[int] = None
 
     def __post_init__(self) -> None:
         if self.variant not in VARIANTS:
@@ -206,6 +219,17 @@ class System:
                 )
         if self.nodes < 1:
             raise ValueError("nodes must be >= 1")
+        if self.executor not in EXECUTORS:
+            raise ValueError(
+                f"unknown executor {self.executor!r}; options: {EXECUTORS}"
+            )
+        if self.workers is not None:
+            if self.executor != "parallel":
+                raise ValueError(
+                    "workers applies to executor='parallel' only"
+                )
+            if self.workers < 1:
+                raise ValueError("workers must be >= 1")
         if self.is_cluster:
             if self.variant != "lru":
                 raise ValueError(
@@ -226,7 +250,11 @@ class System:
     @property
     def is_cluster(self) -> bool:
         """Whether this system runs through the cluster simulator."""
-        return self.nodes > 1 or self.faults is not None
+        return (
+            self.nodes > 1
+            or self.faults is not None
+            or self.executor != "sequential"
+        )
 
     @property
     def n_proxies(self) -> int:

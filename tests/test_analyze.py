@@ -53,12 +53,15 @@ def test_determinism_trips_on_each_violation(tmp_path):
                 "import random\n"
                 "import time\n"
                 "import numpy as np\n"
-                "def f():\n"
+                "from concurrent.futures import as_completed\n"
+                "def f(pool, futs):\n"
                 "    random.random()\n"
                 "    time.time()\n"
                 "    np.random.rand(3)\n"
                 "    np.random.default_rng()\n"
                 "    np.random.RandomState(0)\n"
+                "    list(pool.imap_unordered(abs, [1]))\n"
+                "    list(as_completed(futs))\n"
                 "    return np.array({1, 2, 3})\n"
             ),
         },
@@ -71,6 +74,7 @@ def test_determinism_trips_on_each_violation(tmp_path):
         "unseeded-default-rng",
         "np-random-state",
         "set-order-array",
+        "unordered-completion",
     }
 
 
@@ -98,6 +102,11 @@ def test_determinism_clean_snippets(tmp_path):
             "src/repro/core/shadow.py": (
                 "def h(random, time):\n"
                 "    return random.random() + time.time()\n"
+            ),
+            # ordered pool iteration preserves submission order
+            "src/repro/core/pooluse.py": (
+                "def k(pool, xs):\n"
+                "    return list(pool.imap(abs, xs))\n"
             ),
         },
     )

@@ -19,6 +19,7 @@ import pytest
 
 from repro.core import consistent_route
 from repro.core.cluster import (
+    ClusterStats,
     FaultSpec,
     HashRing,
     default_ring,
@@ -296,6 +297,66 @@ def test_cluster_remove_reshards_and_reports_remap():
     assert remap["action"] == "remove"
     assert remap["node"] == 2
     assert 0.05 < remap["fraction"] < 0.75  # ~1/3 of keys at K=3
+
+
+# ---------------------------------------------------------------------------
+# ClusterStats telemetry schema
+# ---------------------------------------------------------------------------
+def _no_nan(obj) -> bool:
+    """True when no float NaN/inf hides anywhere in a JSON-ish tree."""
+    if isinstance(obj, float):
+        return np.isfinite(obj)
+    if isinstance(obj, dict):
+        return all(_no_nan(v) for v in obj.values())
+    if isinstance(obj, (list, tuple)):
+        return all(_no_nan(v) for v in obj)
+    return True
+
+
+def test_cluster_stats_round_trips_every_field():
+    """extras['cluster'] is a declared schema (ClusterStats): the full
+    churn payload — events, phases, windows, remap, retries, recovery,
+    warm-up telemetry, per-node rows — survives JSON bit for bit, and
+    the dict key set is exactly the dataclass field set (a field added
+    to one side without the other fails here and in tools.analyze)."""
+    spec = FaultSpec(
+        events=((0.3, "fail", 1), (0.5, "recover", 1), (0.7, "remove", 2)),
+        random_failures=1,
+        retry_budget=2,
+        warm_remapped=True,
+    )
+    sc = _cluster_scenario(faults=spec)
+    stats = sc.run().extras["cluster"]
+    wire = json.loads(json.dumps(stats))
+    assert wire == stats
+    back = ClusterStats.from_dict(wire)
+    assert back.to_dict() == stats
+    assert set(stats) == {
+        f.name for f in dataclasses.fields(ClusterStats)
+    }
+    # churn-rich run populated every section
+    assert stats["events"] and stats["remap"] and stats["per_node"]
+    assert stats["windows"]["starts"]
+    assert stats["warm_remapped"]["enabled"]
+    assert _no_nan(stats)
+
+
+def test_cluster_zero_request_node_reports_none_not_nan():
+    """A node that serves no post-warmup requests (failed at warmup
+    end, never recovered) must report hit_rate None — valid JSON —
+    rather than a 0/0 NaN."""
+    lam = rate_matrix(300, (0.8, 1.0))
+    trace = sample_trace(lam, 30_000, seed=3)
+    params = SimParams(allocations=(16, 16), physical_capacity=300)
+    spec = FaultSpec(events=((0.1, "fail", 1),), retry_budget=2)
+    _, stats = simulate_cluster(
+        params, trace, 300, nodes=2, faults=spec, warmup=3_000
+    )
+    starved = [p for p in stats["per_node"] if p["node"] == 1][0]
+    assert starved["post_warmup_requests"] == 0
+    assert starved["hit_rate"] is None
+    assert json.loads(json.dumps(stats)) == stats
+    assert _no_nan(stats)
 
 
 def test_cluster_warm_remapped_reduces_cold_misses():

@@ -1,0 +1,338 @@
+"""Differential tests: parallel cluster executor vs the sequential
+reference.
+
+``simulate_cluster(..., executor="parallel")`` fans the per-node
+chunk-fed feeding pass out over a process pool. Its contract is
+*bit-identity* with the sequential executor — same aggregate SimResult,
+same ``Report.extras["cluster"]`` telemetry — for every combination of
+node count, worker count, chunk size, fault schedule and backend.
+These tests mirror the ``tests/test_streaming.py`` pattern: one
+reference run, then the same inputs through every parallel
+configuration, compared field by field.
+
+Also covers the fault-ordering satellite: ``FaultSpec`` materializes
+its seeded-random events in the parent *before* any worker runs, so
+pool execution order cannot reorder fault application — pinned here by
+an exact expected event sequence and by telemetry equality across
+executors.
+"""
+
+import dataclasses
+import json
+import multiprocessing
+
+import numpy as np
+import pytest
+
+from repro.core import SparseOccupancy
+from repro.core import fastsim_c
+from repro.core.cluster import FaultSpec, simulate_cluster
+from repro.core.fastsim import SimParams
+from repro.core.irm import rate_matrix, sample_trace
+from repro.scenario import Estimator, Scenario, System, Workload
+
+N_OBJ = 400
+N_REQ = 40_000
+WARMUP = 4_000
+# Prime and far below the inter-event spacing: chunk boundaries land
+# mid-segment, and no fault event index is a multiple of it.
+CHUNK = 997
+
+fork_available = "fork" in multiprocessing.get_all_start_methods()
+
+
+@pytest.fixture(scope="module")
+def trace():
+    lam = rate_matrix(N_OBJ, (0.7, 0.9, 1.1))
+    return sample_trace(lam, N_REQ, seed=17)
+
+
+def _params(**kw):
+    base = dict(allocations=(20, 20, 20), physical_capacity=N_OBJ)
+    base.update(kw)
+    return SimParams(**base)
+
+
+def _faults_for(nodes: int) -> FaultSpec:
+    """A churn schedule that exercises fail/recover/remove/add plus
+    ghost warming; K=1 cannot lose nodes, so it gets an empty spec."""
+    if nodes == 1:
+        return FaultSpec()
+    return FaultSpec(
+        events=(
+            (0.35, "fail", 1),
+            (0.55, "recover", 1),
+            (0.7, "remove", 0),
+            (0.85, "add", nodes),
+        ),
+        retry_budget=1,
+        warm_remapped=True,
+    )
+
+
+def _dense(occ):
+    return occ.densify() if isinstance(occ, SparseOccupancy) else occ
+
+
+def _assert_identical(par, seq):
+    """(SimResult, stats) pairs must agree bit for bit."""
+    a, b = par[0], seq[0]
+    assert np.array_equal(_dense(a.occupancy), _dense(b.occupancy))
+    assert np.array_equal(a.evictions_per_set, b.evictions_per_set)
+    assert np.array_equal(a.hits_by_proxy, b.hits_by_proxy)
+    assert np.array_equal(a.reqs_by_proxy, b.reqs_by_proxy)
+    assert np.array_equal(a.final_vlen, b.final_vlen)
+    assert a.n_hit_list == b.n_hit_list
+    assert a.n_hit_cache == b.n_hit_cache
+    assert a.n_miss == b.n_miss
+    assert a.n_ripple == b.n_ripple
+    assert a.n_primary == b.n_primary
+    assert a.n_batch_evictions == b.n_batch_evictions
+    assert a.n_sets_recorded == b.n_sets_recorded
+    assert a.engine == b.engine
+    # telemetry: every phase/window/remap/recovery/per-node field
+    assert par[1] == seq[1]
+
+
+def _run(trace, nodes, **kw):
+    return simulate_cluster(
+        _params(),
+        trace,
+        N_OBJ,
+        nodes=nodes,
+        faults=_faults_for(nodes),
+        warmup=WARMUP,
+        **kw,
+    )
+
+
+@pytest.mark.skipif(not fork_available, reason="needs fork start method")
+@pytest.mark.parametrize("nodes", [1, 4, 16])
+def test_parallel_bitidentical_across_workers(trace, nodes):
+    """K in {1, 4, 16} x several worker counts, including workers > K
+    (clamped) and workers that do not divide K (uneven node pinning)."""
+    seq = _run(trace, nodes, executor="sequential")
+    for workers in (1, 2, 3):
+        par = _run(trace, nodes, executor="parallel", workers=workers)
+        _assert_identical(par, seq)
+
+
+@pytest.mark.skipif(not fork_available, reason="needs fork start method")
+def test_parallel_bitidentical_across_chunk_sizes(trace):
+    """Chunk splitting is memory-bounding only: every split of the feed
+    arrays gives the same result, sequential or parallel."""
+    seq = _run(trace, 4, executor="sequential")
+    for chunk in (CHUNK, 17_000):
+        # split-invariance holds for the sequential reference itself...
+        _assert_identical(_run(trace, 4, chunk_size=chunk), seq)
+        # ...and for the pool with the same chunking
+        par = _run(
+            trace, 4, executor="parallel", workers=2, chunk_size=chunk
+        )
+        _assert_identical(par, seq)
+
+
+@pytest.mark.skipif(not fork_available, reason="needs fork start method")
+def test_parallel_faults_land_mid_chunk(trace):
+    """Fault events whose indices fall inside feed chunks: the segment
+    boundaries cut the chunks, not the other way round."""
+    spec = _faults_for(4)
+    idxs = [e.idx for e in spec.materialize(N_REQ, 4, seed=0)]
+    assert all(i % CHUNK for i in idxs), idxs  # genuinely mid-chunk
+    seq = _run(trace, 4, chunk_size=CHUNK)
+    par = _run(trace, 4, executor="parallel", workers=3, chunk_size=CHUNK)
+    _assert_identical(par, seq)
+
+
+@pytest.mark.skipif(not fork_available, reason="needs fork start method")
+@pytest.mark.skipif(not fastsim_c.available(), reason="no C compiler")
+def test_parallel_forced_slot_growth(trace, monkeypatch):
+    """Tiny initial touched-set capacity forces the C driver's
+    mid-chunk grow-and-resume path in every worker (forked children
+    inherit the patched module global)."""
+    monkeypatch.setattr(fastsim_c, "INITIAL_SLOT_CAP", 8)
+    seq = _run(trace, 4, engine="c", chunk_size=CHUNK)
+    par = _run(
+        trace,
+        4,
+        engine="c",
+        executor="parallel",
+        workers=2,
+        chunk_size=CHUNK,
+    )
+    _assert_identical(par, seq)
+
+
+@pytest.mark.skipif(not fork_available, reason="needs fork start method")
+def test_parallel_flat_backend_bitidentical(trace):
+    """The pure-python engine takes the same orchestration path."""
+    seq = _run(trace, 4, engine="flat")
+    par = _run(trace, 4, engine="flat", executor="parallel", workers=2)
+    _assert_identical(par, seq)
+
+
+def test_cluster_executor_validation(trace):
+    with pytest.raises(ValueError, match="executor"):
+        _run(trace, 2, executor="threads")
+    with pytest.raises(ValueError, match="workers"):
+        _run(trace, 2, executor="parallel", workers=0)
+    with pytest.raises(ValueError, match="chunk_size"):
+        _run(trace, 2, chunk_size=0)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: fault application order is executor-independent
+# ---------------------------------------------------------------------------
+def test_fault_events_materialize_in_parent_pinned_sequence():
+    """Seeded-random fault events are materialized once, in the parent,
+    sorted by index — worker scheduling never touches them. The exact
+    sequence for this (n, K, seed) is pinned; a change here means the
+    fault stream moved and every archived cluster artifact is stale."""
+    spec = FaultSpec(random_failures=2, mttr_frac=0.1)
+    got = [
+        (e.idx, e.action, e.node)
+        for e in spec.materialize(50_000, 4, seed=21)
+    ]
+    assert got == [
+        (7872, "fail", 1),
+        (12872, "recover", 1),
+        (30527, "fail", 2),
+        (35527, "recover", 2),
+    ]
+    assert got == sorted(got)  # applied in index order
+
+
+@pytest.mark.skipif(not fork_available, reason="needs fork start method")
+def test_fault_event_stream_identical_across_executors(trace):
+    """The telemetry event log — the applied fault sequence — is byte
+    for byte the same whether zero, one or three workers ran the
+    feeding pass."""
+    spec = FaultSpec(random_failures=2, retry_budget=1)
+    runs = []
+    for kw in (
+        dict(executor="sequential"),
+        dict(executor="parallel", workers=1),
+        dict(executor="parallel", workers=3),
+    ):
+        _, stats = simulate_cluster(
+            _params(),
+            trace,
+            N_OBJ,
+            nodes=4,
+            faults=spec,
+            warmup=WARMUP,
+            fault_seed=21,
+            **kw,
+        )
+        runs.append(stats)
+    assert runs[0]["events"] == runs[1]["events"] == runs[2]["events"]
+    assert runs[0] == runs[1] == runs[2]
+
+
+# ---------------------------------------------------------------------------
+# Scenario layer: System(executor=..., workers=...)
+# ---------------------------------------------------------------------------
+def _scenario(**kw) -> Scenario:
+    base = dict(
+        name="cluster_par",
+        workload=Workload(n_objects=500, alphas=(0.7, 0.9, 1.1)),
+        system=System(
+            allocations=(24, 24, 24),
+            physical_capacity=500,
+            nodes=4,
+            faults=FaultSpec(events=((0.4, "fail", 1), (0.6, "recover", 1))),
+        ),
+        estimator=Estimator("monte_carlo"),
+        n_requests=80_000,
+        warmup=8_000,
+        seed=13,
+    )
+    base.update(kw)
+    return Scenario(**base)
+
+
+@pytest.mark.skipif(not fork_available, reason="needs fork start method")
+def test_scenario_parallel_matches_sequential():
+    sc = _scenario()
+    seq = sc.run()
+    par = dataclasses.replace(
+        sc,
+        system=dataclasses.replace(
+            sc.system, executor="parallel", workers=2
+        ),
+    ).run()
+    assert par.same_estimates(seq)
+    assert par.extras["cluster"] == seq.extras["cluster"]
+
+
+def test_system_executor_validation_and_round_trip():
+    with pytest.raises(ValueError):
+        System(allocations=(8,), nodes=2, executor="threads")
+    with pytest.raises(ValueError):
+        System(allocations=(8,), nodes=2, workers=2)  # needs parallel
+    with pytest.raises(ValueError):
+        System(allocations=(8,), nodes=2, executor="parallel", workers=0)
+    sc = _scenario(
+        system=System(
+            allocations=(24, 24, 24),
+            physical_capacity=500,
+            nodes=4,
+            executor="parallel",
+            workers=3,
+        )
+    )
+    back = Scenario.from_json(sc.to_json())
+    assert back == sc
+    assert back.system.executor == "parallel"
+    assert back.system.workers == 3
+
+
+@pytest.mark.skipif(not fork_available, reason="needs fork start method")
+def test_single_node_parallel_is_cluster_path():
+    """nodes=1 + executor='parallel' still routes through the cluster
+    simulator (is_cluster) and matches the plain single-node report."""
+    assert System(allocations=(8,), executor="parallel").is_cluster
+    sc = _scenario(
+        system=System(
+            allocations=(24, 24, 24), physical_capacity=500, nodes=1
+        ),
+        n_requests=40_000,
+        warmup=4_000,
+    )
+    plain = sc.run()
+    par = dataclasses.replace(
+        sc,
+        system=dataclasses.replace(
+            sc.system, executor="parallel", workers=2
+        ),
+    ).run()
+    assert "cluster" not in plain.extras
+    assert "cluster" in par.extras
+    assert par.same_estimates(plain)
+
+
+@pytest.mark.skipif(not fork_available, reason="needs fork start method")
+def test_parallel_telemetry_json_round_trips():
+    """extras['cluster'] from a parallel run survives JSON exactly."""
+    sc = _scenario(
+        system=System(
+            allocations=(24, 24, 24),
+            physical_capacity=500,
+            nodes=4,
+            faults=FaultSpec(events=((0.5, "remove", 2),), warm_remapped=True),
+            executor="parallel",
+            workers=2,
+        )
+    )
+    rep = sc.run()
+    cl = rep.extras["cluster"]
+    assert json.loads(json.dumps(cl)) == cl
+
+
+def test_cluster_executor_clamps_workers(trace):
+    """Worker count is clamped to [1, K]; oversubscription is safe."""
+    if not fork_available:
+        pytest.skip("needs fork start method")
+    seq = _run(trace, 2, executor="sequential")
+    par = _run(trace, 2, executor="parallel", workers=8)
+    _assert_identical(par, seq)

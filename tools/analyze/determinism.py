@@ -36,6 +36,13 @@ Codes
     engine paths, where element order lands in simulation state. Set
     iteration order depends on insertion history and (for str keys) on
     per-process hash randomization.
+``unordered-completion``
+    ``Pool.imap_unordered`` / ``concurrent.futures.as_completed`` /
+    ``futures.wait`` in ``src/repro``: results arrive in OS-scheduling
+    order, which is exactly the nondeterminism the parallel cluster
+    executor's bit-identity contract forbids. Worker replies must be
+    merged in a fixed order (worker index, node id), the way
+    ``repro.core.cluster.ClusterExecutor.collect`` does.
 """
 
 from __future__ import annotations
@@ -78,6 +85,10 @@ WALL_CLOCK = {
     "datetime.datetime.today",
     "datetime.date.today",
 }
+
+# Completion-order APIs: the call name alone is damning enough to flag
+# wherever it appears in scope (any receiver object).
+UNORDERED_COMPLETION = {"imap_unordered", "as_completed"}
 
 ARRAY_BUILDERS = {
     "array",
@@ -219,6 +230,14 @@ class _Checker(ast.NodeVisitor):
                 "stdlib-random",
                 f"stdlib {resolved}() has global hidden state — use a "
                 "SeedSequence-derived numpy Generator",
+            )
+        elif resolved.rsplit(".", 1)[-1] in UNORDERED_COMPLETION:
+            self._add(
+                node,
+                "unordered-completion",
+                f"{resolved}() yields results in completion order — "
+                "OS scheduling reaches the result stream; collect "
+                "worker replies in a fixed (worker, node) order instead",
             )
         elif known and resolved in WALL_CLOCK:
             self._add(
