@@ -16,9 +16,11 @@ catalogue at full scale, J=9 heterogeneous proxies):
 3. **K=100 reshard-churn sweep** — a remove wave then an add wave
    across a 100-node ring, with ghost warm-up of remapped keys on and
    off: per-event remap fractions, the windowed hit-rate curve through
-   the churn, and the time back to baseline. Membership churn only
-   (no fail events): the failover-table construction is quadratic in
-   ring positions and a 100-node ring never needs it here.
+   the churn, and the time back to baseline. A third leg layers a
+   *fail wave* (three staggered fail/recover pairs) on the same
+   100-node ring — feasible since the failover-table construction
+   became an O(M) segment walk over the ring (it was quadratic in
+   ring positions, which made K=100 fail events impractical).
 4. **Parallel executor speedup** — the same K=16 run through
    ``executor="sequential"`` and ``executor="parallel"`` (8 workers,
    C backend): asserts bit-identity of estimates and telemetry, then
@@ -56,6 +58,19 @@ CHURN_EVENTS = (
     (0.60, "add", 101),
     (0.65, "add", 102),
     (0.70, "add", 103),
+)
+
+# Fail wave on the same 100-node ring: three staggered outages, each
+# recovered before the next leg of the churn comparison window ends.
+# Exercises the O(M) failover-table path at K=100 (the old quadratic
+# construction made fail events at this scale impractical).
+FAIL_WAVE_EVENTS = (
+    (0.30, "fail", 7),
+    (0.38, "fail", 23),
+    (0.46, "fail", 58),
+    (0.58, "recover", 7),
+    (0.64, "recover", 23),
+    (0.70, "recover", 58),
 )
 
 SPEEDUP_K = 16
@@ -105,6 +120,34 @@ def _churn_run(base, warm: bool) -> dict:
         "windows": cl["windows"],
         "recovery": cl["recovery"],
         "ghosts_injected": cl["warm_remapped"]["injected"],
+        "requests": rep.n_requests,
+    }
+
+
+def _fail_wave_run(base) -> dict:
+    """Three fail/recover pairs on the K=100 ring (failover tables at
+    scale). Times the run so the O(M) table construction shows up as
+    ordinary throughput rather than a K^2 cliff."""
+    spec = FaultSpec(events=FAIL_WAVE_EVENTS)
+    sc = _with_cluster(base, nodes=CHURN_K, faults=spec)
+    sc = dataclasses.replace(sc, name=f"cluster_K{CHURN_K}_failwave")
+    t0 = time.perf_counter()
+    rep = sc.run()
+    seconds = time.perf_counter() - t0
+    cl = rep.extras["cluster"]
+    return {
+        "K": CHURN_K,
+        "events": [list(e) for e in FAIL_WAVE_EVENTS],
+        "overall_hit_rate": float(rep.overall_hit_rate),
+        "degraded_requests": cl["retries"]["degraded_requests"],
+        "retries": cl["retries"]["total"],
+        "mean_downtime_frac": (
+            sum(p["downtime_frac"] for p in cl["per_node"])
+            / max(len(cl["per_node"]), 1)
+        ),
+        "recovery": cl["recovery"],
+        "seconds": round(seconds, 4),
+        "requests_per_sec": float(rep.throughput_rps),
         "requests": rep.n_requests,
     }
 
@@ -206,6 +249,10 @@ def main() -> dict:
         }
         total_requests += sum(r["requests"] for r in churn["runs"])
 
+        # K=100 fail wave (failover tables at scale, now O(M))
+        churn["fail_wave"] = _fail_wave_run(base)
+        total_requests += churn["fail_wave"]["requests"]
+
         # sequential vs parallel executor on the identical K=16 run
         speedup = _speedup_run(base)
         total_requests += speedup["requests"]
@@ -245,6 +292,14 @@ def main() -> dict:
             f"ghosts={r['ghosts_injected']} "
             f"recovered={r['recovery']['recovered']}"
         )
+    fw = churn["fail_wave"]
+    print(
+        f"# K={CHURN_K} fail wave ({len(FAIL_WAVE_EVENTS)} events): "
+        f"hit={fw['overall_hit_rate']:.4f} "
+        f"degraded={fw['degraded_requests']} retries={fw['retries']} "
+        f"recovered={fw['recovery']['recovered']} "
+        f"({fw['seconds']}s, {fw['requests_per_sec']:.0f} req/s)"
+    )
     print(
         f"# parallel executor: K={speedup['K']} "
         f"workers={speedup['workers']} cores={speedup['cpu_count']} "

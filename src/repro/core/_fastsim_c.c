@@ -48,6 +48,27 @@ enum {
     SC_COUNT
 };
 
+/* Data contracts the `cbounds` analyzer rule (tools/analyze/cbounds.py)
+ * uses to prove every array subscript in this file in bounds. Each line
+ * is an invariant of the binding layer (fastsim_c.py) or of the list
+ * structures themselves; the prover treats them as axioms and checks
+ * everything else. Keep them true.
+ */
+/* cbounds: P[] < J  -- binding layer validates proxy ids before the call */
+/* cbounds: O[] < N  -- binding layer validates object ids before the call */
+/* cbounds: slot[] < slot_cap  -- id->slot map only ever holds allocated
+ *            slots (or -1); a slot is assigned only under the
+ *            n_slots == slot_cap capacity guard below */
+/* cbounds: head[] < N  -- list heads hold object ids or NIL */
+/* cbounds: tail[] < N  -- list tails hold object ids or NIL */
+/* cbounds: nxt[] < N   -- intrusive links hold object ids or NIL */
+/* cbounds: prv[] < N   -- intrusive links hold object ids or NIL */
+/* cbounds: gnxt[] < N  -- ghost links hold object ids or NIL */
+/* cbounds: gprv[] < N  -- ghost links hold object ids or NIL */
+/* cbounds: __builtin_ctzll() < J  -- holder masks only set bits < J */
+/* cbounds: __builtin_popcountll() <= J  -- holder masks have at most J
+ *            set bits */
+
 /* One full trim loop: repeatedly evict the lowest-rank object of the
  * list with the largest overflow until none remains (the paper's
  * operator loop). The limit of list j is b_scaled[j] when j == trig,
@@ -57,17 +78,24 @@ enum {
  * sites, so the compiler inlines it back into the drive loop. */
 static int64_t trim_loop(
     int64_t J, int64_t trig,
-    const int64_t *b_scaled, const int64_t *lim_other,
-    const int64_t *share, int64_t ghost_retention,
+    const int64_t *b_scaled, const int64_t *lim_other,  /* (J)   */
+    const int64_t *share,                 /* (J+2) */
+    int64_t ghost_retention,
     int64_t now, int64_t t_start,
-    const int64_t *slot,
-    int64_t *nxt, int64_t *prv, int64_t *head, int64_t *tail,
-    uint64_t *hmask, int64_t *length, int64_t *vlen,
-    int64_t *gnxt, int64_t *gprv, uint8_t *isghost,
-    int64_t *res_since, int64_t *tot_time,
+    const int64_t *slot,                  /* (N)   */
+    int64_t *nxt, int64_t *prv,           /* (slot_cap*J) */
+    int64_t *head, int64_t *tail,         /* (J)   */
+    uint64_t *hmask,                      /* (N)   */
+    int64_t *length,                      /* (N)   */
+    int64_t *vlen,                        /* (J)   */
+    int64_t *gnxt, int64_t *gprv,         /* (N)   */
+    uint8_t *isghost,                     /* (N)   */
+    int64_t *res_since, int64_t *tot_time,/* (slot_cap*J) */
     int64_t *phys, int64_t *ghead, int64_t *gtail, int64_t *n_ghosts,
     int64_t *n_rip_out)
 {
+    /* cbounds: *gtail < N  -- the ghost tail holds an object id whenever
+     *            it is dereferenced as an index (NIL-guarded) */
     int64_t n_ev = 0, n_rp = 0;
     for (;;) {
         int64_t worst = -1, worst_over = 0;
@@ -145,8 +173,10 @@ int64_t drive_chunk(
     /* outputs: */
     int64_t *sc,                          /* (SC_COUNT) scalars, in/out */
     int64_t *hits_p, int64_t *reqs_p,     /* (J) post-warmup counters   */
-    int64_t *hist, int64_t hist_len)      /* evictions-per-set histogram */
+    int64_t *hist, int64_t hist_len)      /* (hist_len) evictions-per-set */
 {
+    /* cbounds: ghead < N  -- the ghost head holds an object id whenever
+     *            it is read as an index (NIL-guarded) */
     int64_t phys = sc[SC_PHYS], ghead = sc[SC_GHEAD], gtail = sc[SC_GTAIL];
     int64_t n_ghosts = sc[SC_NGHOSTS], t_start = sc[SC_TSTART];
     int64_t n_hit_list = sc[SC_NHITLIST], n_hit_cache = sc[SC_NHITCACHE];
@@ -298,15 +328,16 @@ int64_t drive_chunk(
 int64_t noshare_chunk(
     int64_t idx0, int64_t n_chunk,
     int64_t J, int64_t N,
-    const int32_t *P, const int64_t *O,
-    const int64_t *lengths, const int64_t *b,
+    const int32_t *P, const int64_t *O,   /* (n_chunk) request chunk */
+    const int64_t *lengths,               /* (N)   */
+    const int64_t *b,                     /* (J)   */
     int64_t warmup,
     int64_t *nxt, int64_t *prv,           /* (J*N) */
     int64_t *head, int64_t *tail,         /* (J)   */
     uint8_t *inlist,                      /* (J*N) */
     int64_t *used,                        /* (J)   */
     int64_t *res_since, int64_t *tot_time,/* (J*N) */
-    int64_t *sc,                          /* [t_start, n_hit, n_miss] in/out */
+    int64_t *sc,                          /* (3) [t_start, n_hit, n_miss] */
     int64_t *hits_p, int64_t *reqs_p)     /* (J) */
 {
     int64_t t_start = sc[0], n_hit = sc[1], n_miss = sc[2];

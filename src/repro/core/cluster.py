@@ -202,16 +202,19 @@ def default_ring(n_nodes: int, vnodes: int = DEFAULT_VNODES) -> HashRing:
     return HashRing(range(int(n_nodes)), vnodes)
 
 
-def _failover_tables(
+def _failover_tables_walk(
     ring: HashRing, down: frozenset, retry_budget: int
 ) -> Tuple[np.ndarray, np.ndarray]:
-    """Per-ring-slot failover routing under a set of down nodes.
+    """Reference O(M^2) failover walk — the executable specification.
 
     For each vnode slot, walk the ring visiting *distinct* nodes in
     order: the first one is the key's primary owner, each down node
     contacted costs one retry, and the client gives up (degraded mode,
     target ``-1``) after the primary plus ``retry_budget`` distinct
     nodes all failed. Returns ``(target, retries)`` per slot.
+
+    Kept as the oracle for :func:`_failover_tables`; the fast path is
+    tested element-for-element against this walk.
     """
     owners = ring.owners
     M = len(owners)
@@ -237,6 +240,53 @@ def _failover_tables(
         target[s] = tgt
         # retries = failed contacts beyond none: every down node tried
         retries[s] = len(tried)
+    return target, retries
+
+
+def _failover_tables(
+    ring: HashRing, down: frozenset, retry_budget: int
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-ring-slot failover routing under a set of down nodes.
+
+    Semantics are exactly :func:`_failover_tables_walk` (see its
+    docstring for the client-walk model), but computed in O(M): every
+    down slot's forward walk stops at the first *live* slot after it,
+    so each maximal run of down slots shares one live right endpoint.
+    Walking each run once, backward from that endpoint, accumulates
+    the distinct down owners a client starting at each slot would try
+    — each ring slot is visited exactly once overall.
+    """
+    owners = ring.owners
+    M = len(owners)
+    target = np.empty(M, dtype=np.int64)
+    retries = np.zeros(M, dtype=np.int64)
+    if not down:
+        target[:] = owners
+        return target, retries
+    max_attempts = 1 + int(retry_budget)
+    is_down = np.isin(owners, np.fromiter(down, dtype=np.int64))
+    live_slots = np.flatnonzero(~is_down)
+    if live_slots.size == 0:
+        # Every owner is down: each walk tries all distinct owners (or
+        # gives up at the attempt cap) and degrades to target -1.
+        target[:] = -1
+        retries[:] = min(len({int(o) for o in owners}), max_attempts)
+        return target, retries
+    target[live_slots] = owners[live_slots]
+    for k in range(live_slots.size):
+        end = int(live_slots[k])
+        start = int(live_slots[k - 1])  # k=0 wraps to the last live slot
+        seen: set = set()
+        s = (end - 1) % M
+        while s != start:
+            seen.add(int(owners[s]))
+            if len(seen) < max_attempts:
+                target[s] = owners[end]
+                retries[s] = len(seen)
+            else:
+                target[s] = -1
+                retries[s] = max_attempts
+            s = (s - 1) % M
     return target, retries
 
 
@@ -424,7 +474,11 @@ class _FeedPlan:
     start method the trace arrays and route tables are inherited
     copy-on-write (never copied, never re-pickled); under ``spawn`` the
     plan is pickled once per worker. Nothing in it is mutated after
-    construction."""
+    construction.
+
+    fork-shared: read-only — the ``forksafety`` analyzer rule keys on
+    this marker and statically rejects any worker-side write through a
+    value reachable from an instance of this class."""
 
     __slots__ = (
         "params", "n_objects", "lengths", "engine", "chunk_size",

@@ -19,6 +19,16 @@ chunk by chunk without ever materializing the full trace (the Section
 VI-C streaming path). The flat runner's per-(proxy, object) state is a
 sparse touched-set — objects get accumulator slots on first entry into
 any list, and the slot arrays grow geometrically on demand.
+
+This binding layer is the trust boundary for the C code's index
+arithmetic: every ``feed`` validates its inputs before crossing into
+C, so proxy ids in ``P`` are always ``< J`` and object ids in ``O``
+are always ``< N`` by the time the chunk drivers see them. The
+``cbounds`` analyzer rule takes exactly those two facts as axioms
+(the ``cbounds: P[] < J`` / ``O[] < N`` contract comments at the top
+of ``_fastsim_c.c``) and proves every other array subscript in the C
+file from capacity annotations alone — keep the validation here in
+sync with those contract comments.
 """
 
 from __future__ import annotations
@@ -256,6 +266,23 @@ def _ptr(a: np.ndarray, ctype):
     return a.ctypes.data_as(ctype)
 
 
+def _check_ids(P: np.ndarray, O: np.ndarray, J: int, N: int) -> None:
+    """Enforce the C contract at the binding boundary: proxy ids in
+    ``[0, J)`` and object ids in ``[0, N)``. These are the two axioms
+    (``cbounds: P[] < J`` / ``O[] < N``) every other bound proof in
+    ``_fastsim_c.c`` rests on — the C side never re-checks them."""
+    if len(P) and (int(P.min()) < 0 or int(P.max()) >= J):
+        raise ValueError(
+            f"proxy ids must lie in [0, {J}); got "
+            f"[{int(P.min())}, {int(P.max())}]"
+        )
+    if len(O) and (int(O.min()) < 0 or int(O.max()) >= N):
+        raise ValueError(
+            f"object ids must lie in [0, {N}); got "
+            f"[{int(O.min())}, {int(O.max())}]"
+        )
+
+
 class FlatChunkRunner:
     """Incremental native driver for the flat shared-LRU variant.
 
@@ -349,6 +376,7 @@ class FlatChunkRunner:
     def feed(self, proxies: np.ndarray, objects: np.ndarray) -> None:
         P = np.ascontiguousarray(proxies, dtype=np.int32)
         O = np.ascontiguousarray(objects, dtype=np.int64)
+        _check_ids(P, O, self.J, self.N)
         n = len(P)
         off = 0
         while off < n:
@@ -460,6 +488,7 @@ class NoshareChunkRunner:
     def feed(self, proxies: np.ndarray, objects: np.ndarray) -> None:
         P = np.ascontiguousarray(proxies, dtype=np.int32)
         O = np.ascontiguousarray(objects, dtype=np.int64)
+        _check_ids(P, O, self.J, self.N)
         n = len(P)
         t0 = time.perf_counter()
         rc = self.lib.noshare_chunk(

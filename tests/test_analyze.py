@@ -24,7 +24,14 @@ from tools.analyze import (  # noqa: E402
     load_waivers,
     run_rules,
 )
-from tools.analyze import determinism, jaxpurity, parity, schema  # noqa: E402
+from tools.analyze import (  # noqa: E402
+    cbounds,
+    determinism,
+    forksafety,
+    jaxpurity,
+    parity,
+    schema,
+)
 from tools.analyze.findings import Finding, Waiver, _parse_waiver_toml  # noqa: E402
 
 CORE = "src/repro/core"
@@ -358,7 +365,20 @@ def test_waiver_requires_reason(tmp_path):
 # driver / shipped tree
 # ---------------------------------------------------------------------------
 def test_rule_registry_complete():
-    assert set(RULES) == {"determinism", "parity", "schema", "jaxpurity", "docs"}
+    assert set(RULES) == {
+        "determinism", "parity", "schema", "jaxpurity", "docs",
+        "forksafety", "cbounds",
+    }
+
+
+def test_every_rule_declares_codes():
+    for name, mod in RULES.items():
+        codes = getattr(mod, "CODES", None)
+        assert isinstance(codes, dict) and codes, name
+        assert all(
+            isinstance(c, str) and isinstance(d, str)
+            for c, d in codes.items()
+        ), name
 
 
 def test_unknown_rule_rejected():
@@ -453,3 +473,503 @@ def test_sanitizer_cflags_and_name():
         fastsim_c._so_name("abc", ("address", "undefined"))
         == "fastsim_abc_address_undefined.so"
     )
+
+
+# ---------------------------------------------------------------------------
+# ir: shared flow-analysis infrastructure
+# ---------------------------------------------------------------------------
+IR_MODULE = '''
+import multiprocessing as mp
+import numpy as np
+from numpy.random import default_rng as rng_ctor
+
+
+class Bank:
+    def __init__(self, plan):
+        self.plan = plan
+
+    def feed(self):
+        helper(self.plan)
+
+
+def helper(p):
+    return p
+
+
+def _worker_main(plan):
+    bank = Bank(plan)
+    bank.feed()
+
+
+def launch(plan):
+    return mp.Process(target=_worker_main, args=(plan,))
+
+
+def standalone():
+    return 3
+'''
+
+
+def _ir():
+    import ast
+
+    from tools.analyze.ir import ModuleIR
+
+    return ModuleIR(ast.parse(IR_MODULE))
+
+
+def test_ir_alias_resolution():
+    from tools.analyze.ir import resolve
+
+    ir = _ir()
+    import ast
+
+    np_call = ast.parse("np.random.rand()").body[0].value
+    assert resolve(ir.aliases.map, np_call.func) == ("numpy.random.rand", True)
+    from_call = ast.parse("rng_ctor()").body[0].value
+    assert resolve(ir.aliases.map, from_call.func) == (
+        "numpy.random.default_rng",
+        True,
+    )
+    local = ast.parse("time.time()").body[0].value
+    # `time` was never imported here: not known
+    assert resolve(ir.aliases.map, local.func) == ("time.time", False)
+
+
+def test_ir_call_graph_and_reachability():
+    ir = _ir()
+    assert ir.process_targets() == {"_worker_main"}
+    cone = ir.reachable(["_worker_main"])
+    # the worker cone crosses the constructor-typed local: bank.feed()
+    assert cone == {"_worker_main", "Bank.__init__", "Bank.feed", "helper"}
+    assert "standalone" not in cone
+    assert "launch" not in cone
+
+
+def test_ir_taint_propagation():
+    import ast
+
+    from tools.analyze.ir import TaintWalker
+
+    src = (
+        "def f(plan):\n"
+        "    a = plan.sel\n"          # attr read: tainted
+        "    b = a[3]\n"              # subscript view: tainted
+        "    c = b + 1\n"             # arithmetic: tainted
+        "    d = transform(c)\n"      # call launders
+        "    e = {m: a[m] for m in sorted(a)}\n"  # sorted rebuild: clean
+        "    g = [x for x in a]\n"    # unsorted comprehension: tainted
+        "    a = 0\n"                 # rebind kills taint
+        "    h = a\n"
+    )
+    fn = ast.parse(src).body[0]
+    w = TaintWalker({"plan"})
+    for stmt in fn.body:
+        w.visit(stmt)
+    assert {"b", "c", "g"} <= w.tainted
+    assert "d" not in w.tainted
+    assert "e" not in w.tainted
+    assert "a" not in w.tainted
+    assert "h" not in w.tainted
+
+
+# ---------------------------------------------------------------------------
+# forksafety
+# ---------------------------------------------------------------------------
+FORK_BAD = '''
+import multiprocessing as mp
+import threading
+
+
+class _Plan:
+    """Inputs shipped to workers.
+
+    fork-shared: read-only — workers must never write through this.
+    """
+
+    def __init__(self, sel, lengths):
+        self.sel = sel
+        self.lengths = lengths
+
+
+def _worker_main(conn, plan: _Plan):
+    for m in plan.sel:
+        idxs = plan.sel[m]
+        idxs += 1
+        plan.sel[m] = idxs
+    plan.lengths.sort()
+    conn.send(None)
+
+
+def launch(sel, lengths):
+    fh = open("trace.bin", "rb")
+    plan = _Plan(sel, fh)
+    p = mp.Process(
+        target=_worker_main, args=(None, plan, threading.Lock())
+    )
+    return p, lengths
+
+
+def merge(conns):
+    outs = {}
+    for c in conns:
+        r = c.recv()
+        for m in r:
+            outs[m] = r[m]
+    return outs
+'''
+
+FORK_GOOD = '''
+import multiprocessing as mp
+
+
+class _Plan:
+    """Inputs shipped to workers.
+
+    fork-shared: read-only — workers must never write through this.
+    """
+
+    def __init__(self, sel, lengths):
+        self.sel = sel
+        self.lengths = lengths
+
+
+def _worker_main(conn, plan: _Plan):
+    total = 0
+    for m in sorted(plan.sel):
+        local = plan.sel[m].copy()
+        local += 1
+        total += int(local.sum())
+    conn.send(total)
+
+
+def launch(plan: _Plan):
+    return mp.Process(target=_worker_main, args=(None, plan))
+
+
+def merge(conns):
+    outs = {}
+    for c in conns:
+        r = c.recv()
+        for m in sorted(r):
+            outs[m] = r[m]
+    canon = {m: outs[m] for m in sorted(outs)}
+    return canon
+'''
+
+CLUSTER_REL = "src/repro/core/cluster.py"
+
+
+def test_forksafety_trips_on_each_code(tmp_path):
+    root = _tree(tmp_path, {CLUSTER_REL: FORK_BAD})
+    findings = forksafety.run(root)
+    assert _codes(findings) == {
+        "worker-plan-mutation",
+        "worker-inplace-numpy",
+        "unordered-merge",
+        "fork-hostile-capture",
+    }
+    # both the Plan(...) ctor and the Process(...) capture are caught
+    hostile = [f for f in findings if f.code == "fork-hostile-capture"]
+    assert len(hostile) == 2
+    # += on the view and .sort() on the shared array are separate hits
+    inplace = [f for f in findings if f.code == "worker-inplace-numpy"]
+    assert len(inplace) == 2
+
+
+def test_forksafety_clean_on_readonly_worker(tmp_path):
+    root = _tree(tmp_path, {CLUSTER_REL: FORK_GOOD})
+    assert forksafety.run(root) == []
+
+
+def test_forksafety_reports_syntax_error(tmp_path):
+    root = _tree(tmp_path, {CLUSTER_REL: "def broken(:\n"})
+    assert _codes(forksafety.run(root)) == {"syntax-error"}
+
+
+def test_forksafety_clean_on_shipped_tree():
+    assert forksafety.run(REPO) == []
+
+
+def test_forksafety_mutation_worker_plan_write(tmp_path):
+    """ISSUE mutation: insert a worker-side ``plan`` mutation into a
+    fixture copy of the real cluster.py — exactly one finding."""
+    src = (REPO / CLUSTER_REL).read_text()
+    anchor = "            idxs = sm[lo:hi]"
+    assert anchor in src
+    mutated = src.replace(
+        anchor, anchor + "\n            plan.sel[m] = idxs"
+    )
+    root = _tree(tmp_path, {CLUSTER_REL: mutated})
+    findings = forksafety.run(root)
+    assert [f.code for f in findings] == ["worker-plan-mutation"]
+    want = mutated.splitlines().index(
+        "            plan.sel[m] = idxs") + 1
+    assert findings[0].line == want
+
+
+def test_forksafety_mutation_unordered_merge(tmp_path):
+    """ISSUE mutation: drop the ``sorted(...)`` canonicalization from
+    the real simulate_cluster merge — the rule must flag the merge line
+    (taint then floods downstream aggregation; every hit is the same
+    code)."""
+    src = (REPO / CLUSTER_REL).read_text()
+    canonical = "outs = {m: outs[m] for m in sorted(outs)}"
+    assert canonical in src
+    mutated = src.replace(canonical, "outs = {m: outs[m] for m in outs}")
+    root = _tree(tmp_path, {CLUSTER_REL: mutated})
+    findings = forksafety.run(root)
+    assert findings and _codes(findings) == {"unordered-merge"}
+    merge_line = next(
+        i for i, ln in enumerate(mutated.splitlines(), start=1)
+        if "for m in outs}" in ln
+    )
+    assert min(f.line for f in findings) == merge_line
+
+
+# ---------------------------------------------------------------------------
+# cbounds
+# ---------------------------------------------------------------------------
+C_REL = "src/repro/core/_fastsim_c.c"
+
+C_BAD = '''
+#include <stdint.h>
+#include <stdlib.h>
+#include <string.h>
+
+int64_t bad(const int32_t *P, /* (n) request ids */
+            int64_t *acc,
+            int64_t *out, /* (n) per-request sums */
+            int64_t n, int64_t J) {
+    int64_t s = 0;
+    for (int64_t i = 0; i < n; i++) {
+        s += P[i];
+        s += acc[i];
+    }
+    s += out[J];
+    int64_t *buf = (int64_t *)malloc((size_t)n * sizeof(int64_t));
+    buf[0] = s;
+    memset(out, 0, (size_t)J * sizeof(int64_t));
+    return s;
+}
+'''
+
+C_GOOD = '''
+#include <stdint.h>
+#include <stdlib.h>
+#include <string.h>
+
+/* cbounds: O[] < N  -- caller validates object ids */
+/* cbounds: slot[] < cap  -- map only holds allocated slots */
+
+int64_t good(const int32_t *O, /* (n) object ids */
+             int64_t *slot, /* (N) id->slot map */
+             int64_t *acc, /* (cap*J) slot-major accumulators */
+             int64_t *hist, /* (hist_len) eviction histogram */
+             int64_t n, int64_t N, int64_t cap, int64_t J,
+             int64_t hist_len, int64_t n_used) {
+    if (n_used >= cap) {
+        return -1;
+    }
+    int64_t s = 0;
+    for (int64_t i = 0; i < n; i++) {
+        int64_t o = O[i];
+        int64_t k = slot[o];
+        for (int64_t j = 0; j < J; j++) {
+            s += acc[k * J + j];
+        }
+        hist[s < hist_len ? s : hist_len - 1]++;
+    }
+    acc[n_used * J] = s;
+    int64_t *buf = (int64_t *)malloc((size_t)cap * sizeof(int64_t));
+    if (buf == NULL) {
+        return -1;
+    }
+    memset(acc, 0, (size_t)cap * J * sizeof(int64_t));
+    free(buf);
+    return s;
+}
+'''
+
+
+def test_cbounds_trips_on_each_code(tmp_path):
+    root = _tree(tmp_path, {C_REL: C_BAD})
+    findings = cbounds.run(root)
+    assert [f.code for f in findings] == [
+        "missing-capacity",      # acc subscripted, no (cap) comment
+        "unproved-subscript",    # out[J]: J not tied to n
+        "malloc-unchecked",      # buf used before null-check
+        "memlen-untied",         # memset length J on an (n)-capacity dest
+    ]
+
+
+def test_cbounds_clean_on_proof_vocabulary(tmp_path):
+    """Every evidence form at once: loop bound, guard return, contract
+    annotations (value-range), (cap*J) affine compose ``k*J + j``,
+    ternary clamp, null-checked malloc, capacity-tied memset."""
+    root = _tree(tmp_path, {C_REL: C_GOOD})
+    assert cbounds.run(root) == []
+
+
+def test_cbounds_clean_on_shipped_tree():
+    assert cbounds.run(REPO) == []
+
+
+def test_cbounds_mutation_deleted_guard(tmp_path):
+    """ISSUE mutation: disable the slot-growth guard in the real C file
+    — the grow-path subscripts and the memset length lose their proof."""
+    src = (REPO / C_REL).read_text()
+    guard = "if (n_slots == slot_cap) {"
+    assert guard in src
+    root = _tree(tmp_path, {C_REL: src.replace(guard, "if (0) {")})
+    findings = cbounds.run(root)
+    assert _codes(findings) == {"memlen-untied", "unproved-subscript"}
+
+
+def test_cbounds_mutation_deleted_clamp(tmp_path):
+    """ISSUE mutation: strip the histogram ternary clamp — the raw
+    ``n_ev`` index is unprovable against (hist_len)."""
+    src = (REPO / C_REL).read_text()
+    clamp = "hist[n_ev < hist_len ? n_ev : hist_len - 1]++;"
+    assert clamp in src
+    root = _tree(tmp_path, {C_REL: src.replace(clamp, "hist[n_ev]++;")})
+    findings = cbounds.run(root)
+    assert [f.code for f in findings] == ["unproved-subscript"]
+
+
+def test_cbounds_mutation_dropped_axiom(tmp_path):
+    """Deleting the O[]<N contract annotation must cascade: every
+    subscript fed by an object id loses its proof."""
+    src = (REPO / C_REL).read_text()
+    axiom_line = next(
+        ln for ln in src.splitlines()
+        if ln.strip().startswith("/* cbounds: O[] < N")
+    )
+    root = _tree(tmp_path, {C_REL: src.replace(axiom_line, "")})
+    findings = cbounds.run(root)
+    assert findings
+    assert _codes(findings) == {"unproved-subscript"}
+
+
+# ---------------------------------------------------------------------------
+# SARIF emitter
+# ---------------------------------------------------------------------------
+def test_sarif_structure_and_descriptors():
+    from tools.analyze.sarif import SARIF_VERSION, to_sarif
+
+    waivers = load_waivers(WAIVERS_PATH)
+    findings = run_rules(REPO, None, waivers)
+    doc = to_sarif(findings, RULES)
+
+    assert doc["version"] == SARIF_VERSION == "2.1.0"
+    assert doc["$schema"].endswith("sarif-schema-2.1.0.json")
+    (run,) = doc["runs"]
+    driver = run["tool"]["driver"]
+    assert driver["name"] == "repro-analyze"
+
+    # one descriptor per (rule, code), ids stable and sorted
+    ids = [r["id"] for r in driver["rules"]]
+    want = sorted(
+        f"{name}/{code}"
+        for name, mod in RULES.items()
+        for code in mod.CODES
+    )
+    assert ids == want
+    assert all(
+        set(r) >= {"id", "name", "shortDescription", "defaultConfiguration"}
+        for r in driver["rules"]
+    )
+
+    # every result points at a declared rule and a real location
+    by_id = set(ids)
+    for res in run["results"]:
+        assert res["ruleId"] in by_id
+        (loc,) = res["locations"]
+        phys = loc["physicalLocation"]
+        assert phys["artifactLocation"]["uriBaseId"] == "SRCROOT"
+        assert phys["region"]["startLine"] >= 1
+        if res["level"] == "note":
+            (sup,) = res["suppressions"]
+            assert sup["kind"] == "external"
+            assert sup["justification"]
+        else:
+            assert res["level"] == "error"
+            assert "suppressions" not in res
+
+    # the shipped tree: every finding is waived, so no error results
+    assert all(r["level"] == "note" for r in run["results"])
+
+
+def test_sarif_unwaived_finding_is_error():
+    from tools.analyze.findings import Finding
+    from tools.analyze.sarif import to_sarif
+
+    f = Finding("determinism", "wall-clock", "src/x.py", 3, "time.time()")
+    doc = to_sarif([f], RULES)
+    (res,) = doc["runs"][0]["results"]
+    assert res["level"] == "error"
+    assert res["ruleId"] == "determinism/wall-clock"
+
+
+def test_cli_sarif_output(tmp_path):
+    import json as _json
+
+    out = tmp_path / "out.sarif"
+    run = subprocess.run(
+        [
+            sys.executable, "-m", "tools.analyze",
+            "--rule", "parity", "--sarif", str(out),
+        ],
+        cwd=str(REPO),
+        capture_output=True,
+        text=True,
+    )
+    assert run.returncode == 0, run.stdout + run.stderr
+    doc = _json.loads(out.read_text())
+    assert doc["version"] == "2.1.0"
+    assert doc["runs"][0]["tool"]["driver"]["rules"]
+
+
+# ---------------------------------------------------------------------------
+# strict waivers
+# ---------------------------------------------------------------------------
+def test_cli_strict_waivers_flags_stale(tmp_path):
+    stale = tmp_path / "waivers.toml"
+    stale.write_text(
+        "[[waiver]]\n"
+        'rule = "parity"\n'
+        'path = "src/repro/core/nonexistent.py"\n'
+        'reason = "stale on purpose"\n'
+    )
+    base = [
+        sys.executable, "-m", "tools.analyze",
+        "--rule", "parity", "--waivers", str(stale),
+    ]
+    warn = subprocess.run(
+        base, cwd=str(REPO), capture_output=True, text=True
+    )
+    assert warn.returncode == 0
+    assert "unused waiver" in warn.stderr
+    strict = subprocess.run(
+        base + ["--strict-waivers"],
+        cwd=str(REPO),
+        capture_output=True,
+        text=True,
+    )
+    assert strict.returncode == 1
+    assert "unused waiver" in strict.stderr
+
+
+def test_cli_strict_waivers_ignores_other_rules_waivers(tmp_path):
+    """A waiver for a rule that did NOT run is not stale — running
+    ``--rule parity`` must not flag the schema/determinism waivers."""
+    run = subprocess.run(
+        [
+            sys.executable, "-m", "tools.analyze",
+            "--rule", "parity", "--strict-waivers",
+        ],
+        cwd=str(REPO),
+        capture_output=True,
+        text=True,
+    )
+    assert run.returncode == 0, run.stdout + run.stderr

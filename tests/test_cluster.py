@@ -22,6 +22,8 @@ from repro.core.cluster import (
     ClusterStats,
     FaultSpec,
     HashRing,
+    _failover_tables,
+    _failover_tables_walk,
     default_ring,
     key_position,
     key_positions,
@@ -117,6 +119,61 @@ def test_consistent_route_balance_and_minimal_disruption():
     counts = np.bincount([before[k] for k in keys], minlength=8)
     assert counts.max() / counts.mean() < 1.8       # balanced
     assert counts.min() > 0
+
+
+# ---------------------------------------------------------------------------
+# Failover tables: fast segment walk vs the O(M^2) reference
+# ---------------------------------------------------------------------------
+def _assert_tables_equal(ring, down, budget):
+    t_ref, r_ref = _failover_tables_walk(ring, down, budget)
+    t_new, r_new = _failover_tables(ring, down, budget)
+    np.testing.assert_array_equal(t_new, t_ref)
+    np.testing.assert_array_equal(r_new, r_ref)
+
+
+def test_failover_tables_match_reference_randomized():
+    """The O(M) segment walk is element-for-element identical to the
+    reference per-slot walk across random rings, down sets, budgets."""
+    rng = np.random.default_rng(20260808)
+    for _ in range(40):
+        n = int(rng.integers(1, 10))
+        vnodes = int(rng.choice([1, 3, 16]))
+        ring = HashRing(range(n), vnodes)
+        k = int(rng.integers(0, n + 1))
+        down = frozenset(int(x) for x in rng.choice(n, size=k, replace=False))
+        for budget in (0, 1, 2, 3):
+            _assert_tables_equal(ring, down, budget)
+
+
+def test_failover_tables_match_reference_edges():
+    """None-down, all-down, and single-survivor cases, every budget."""
+    ring = default_ring(5)
+    nodes = frozenset(range(5))
+    for down in (frozenset(), nodes, nodes - {3}, frozenset({0})):
+        for budget in (0, 1, 2, 4, 7):
+            _assert_tables_equal(ring, down, budget)
+    # single-node ring: the one owner up, then down
+    one = HashRing([0], 4)
+    for down in (frozenset(), frozenset({0})):
+        for budget in (0, 2):
+            _assert_tables_equal(one, down, budget)
+
+
+def test_failover_tables_degrade_and_retry_invariants():
+    """Sanity on the semantics themselves (not just impl equality):
+    live slots keep their owner at zero retries; a degraded slot has
+    spent its full attempt budget; targets are never down nodes."""
+    ring = default_ring(6)
+    down = frozenset({1, 4})
+    target, retries = _failover_tables(ring, down, 1)
+    owners = ring.owners
+    live = ~np.isin(owners, list(down))
+    assert np.array_equal(target[live], owners[live])
+    assert not retries[live].any()
+    degraded = target == -1
+    assert np.array_equal(retries[degraded],
+                          np.full(degraded.sum(), 2, dtype=np.int64))
+    assert not np.isin(target[~degraded], list(down)).any()
 
 
 # ---------------------------------------------------------------------------

@@ -1,10 +1,14 @@
 """repro-analyze: repo-specific static analysis for the caching repro.
 
-Five rules, one driver (``python -m tools.analyze``), one waiver file
+Seven rules, one driver (``python -m tools.analyze``), one waiver file
 (``tools/analyze/waivers.toml``). Each rule module exposes ``NAME``,
-``DESCRIPTION``, and ``run(root: Path) -> List[Finding]``; the driver
-applies waivers and fails on any unwaived finding. See
-``docs/analysis.md`` for the invariants behind each rule.
+``DESCRIPTION``, ``CODES`` (stable finding-code registry), and
+``run(root: Path) -> List[Finding]``; the driver applies waivers and
+fails on any unwaived finding. ``--sarif`` emits the run as SARIF
+2.1.0 for CI inline annotations. The flow-aware rules (``forksafety``,
+``cbounds``) build on the shared call-graph/taint infrastructure in
+``tools/analyze/ir.py``. See ``docs/analysis.md`` for the invariants
+behind each rule.
 """
 
 from __future__ import annotations
@@ -12,12 +16,24 @@ from __future__ import annotations
 from pathlib import Path
 from typing import Dict, List, Optional, Sequence
 
-from . import determinism, docsrule, jaxpurity, parity, schema
+from . import (
+    cbounds,
+    determinism,
+    docsrule,
+    forksafety,
+    jaxpurity,
+    parity,
+    schema,
+)
 from .findings import Finding, Waiver, apply_waivers, load_waivers
+from .sarif import dump_sarif, to_sarif
 
 RULES = {
     mod.NAME: mod
-    for mod in (determinism, parity, schema, jaxpurity, docsrule)
+    for mod in (
+        determinism, parity, schema, jaxpurity, docsrule,
+        forksafety, cbounds,
+    )
 }
 
 WAIVERS_PATH = Path(__file__).resolve().parent / "waivers.toml"
@@ -53,6 +69,8 @@ __all__ = [
     "Finding",
     "Waiver",
     "apply_waivers",
+    "dump_sarif",
     "load_waivers",
     "run_rules",
+    "to_sarif",
 ]

@@ -1,9 +1,11 @@
 """CLI driver: ``python -m tools.analyze [--rule NAME]... [--json]``.
 
 Exit status is 0 when every finding is waived (or there are none), 1
-when any unwaived finding remains, 2 on usage/config errors. The CI
-``static-analysis`` job runs all rules; the ``docs`` job runs
-``--rule docs`` (the old ``tools/check_docs.py`` behavior).
+when any unwaived finding remains (or, under ``--strict-waivers``,
+when a stale waiver matches nothing), 2 on usage/config errors. The CI
+``static-analysis`` job runs all rules with ``--strict-waivers`` and
+uploads ``--sarif`` output for inline annotations; the ``docs`` job
+runs ``--rule docs`` (the old ``tools/check_docs.py`` behavior).
 """
 
 from __future__ import annotations
@@ -13,7 +15,7 @@ import json
 import sys
 from pathlib import Path
 
-from . import RULES, WAIVERS_PATH, load_waivers, run_rules
+from . import RULES, WAIVERS_PATH, dump_sarif, load_waivers, run_rules
 
 
 def main(argv=None) -> int:
@@ -44,6 +46,26 @@ def main(argv=None) -> int:
         help="ignore waivers.toml (show the raw findings)",
     )
     parser.add_argument(
+        "--waivers",
+        type=Path,
+        default=None,
+        metavar="PATH",
+        help="waiver file to apply (default: tools/analyze/waivers.toml)",
+    )
+    parser.add_argument(
+        "--strict-waivers",
+        action="store_true",
+        help="fail (exit 1) when a waiver matches no finding of a rule "
+        "that ran — stale waivers hide future regressions",
+    )
+    parser.add_argument(
+        "--sarif",
+        type=Path,
+        default=None,
+        metavar="PATH",
+        help="also write the findings as SARIF 2.1.0 to PATH",
+    )
+    parser.add_argument(
         "--list",
         action="store_true",
         help="list available rules and exit",
@@ -55,8 +77,9 @@ def main(argv=None) -> int:
             print(f"{name:14s} {RULES[name].DESCRIPTION}")
         return 0
 
+    waivers_path = args.waivers if args.waivers is not None else WAIVERS_PATH
     try:
-        waivers = [] if args.no_waivers else load_waivers(WAIVERS_PATH)
+        waivers = [] if args.no_waivers else load_waivers(waivers_path)
     except ValueError as e:
         print(f"ERROR: bad waivers.toml: {e}", file=sys.stderr)
         return 2
@@ -68,26 +91,41 @@ def main(argv=None) -> int:
 
     findings.sort(key=lambda f: (f.path, f.line, f.rule, f.code))
     unwaived = [f for f in findings if not f.waived]
+    ran = args.rule or sorted(RULES)
+    stale = [w for w in waivers if w.used == 0 and w.rule in ran]
+
+    if args.sarif is not None:
+        args.sarif.write_text(dump_sarif(findings, RULES))
 
     if args.json:
         print(json.dumps([f.to_dict() for f in findings], indent=2))
     else:
         for f in findings:
             print(f.render())
-        ran = args.rule or sorted(RULES)
         waived = len(findings) - len(unwaived)
         print(
             f"tools.analyze: {len(findings)} finding(s) "
             f"({waived} waived) across rule(s) {', '.join(ran)}"
         )
-        stale = [w for w in waivers if w.used == 0 and w.rule in ran]
         for w in stale:
+            level = "ERROR" if args.strict_waivers else "warning"
             print(
-                f"warning: unused waiver (rule={w.rule}, path={w.path}): "
+                f"{level}: unused waiver (rule={w.rule}, path={w.path}): "
                 f"{w.reason}",
                 file=sys.stderr,
             )
-    return 1 if unwaived else 0
+    if unwaived:
+        return 1
+    if args.strict_waivers and stale:
+        if args.json:  # stale detail was swallowed by --json output
+            for w in stale:
+                print(
+                    f"ERROR: unused waiver (rule={w.rule}, "
+                    f"path={w.path}): {w.reason}",
+                    file=sys.stderr,
+                )
+        return 1
+    return 0
 
 
 if __name__ == "__main__":

@@ -1,0 +1,1229 @@
+"""Token-level bounds prover for ``src/repro/core/_fastsim_c.c``.
+
+The C hot loop is the one part of the engine the Python-level tests
+can only exercise, not inspect: an out-of-bounds subscript corrupts
+neighbouring state and shows up (if at all) as a wrong hit-rate three
+layers up. The sanitizer CI job catches the subset the test traces
+happen to reach; this rule proves the whole file, every run.
+
+It is a *prover*, not a linter: every array subscript must be
+dominated by evidence that the index is in range, or the rule fails
+CI. Evidence comes from four places:
+
+* **Capacity comments** on pointer parameters — ``int64_t *vlen, /* (J) */``
+  declares that ``vlen`` has ``J`` elements. Subscripted pointer
+  parameters without one are themselves findings.
+* **Loop bounds** — ``for (...; off < n_chunk; ...)`` proves
+  ``off < n_chunk`` (function-wide, lint-grade).
+* **Guard returns** — ``if (n_slots == slot_cap) { ... return ...; }``
+  proves ``n_slots < slot_cap`` for the rest of the function; ternary
+  clamps ``x < L ? x : L - 1`` prove ``< L`` inline.
+* **Contract annotations** — ``/* cbounds: O[] < N -- reason */``
+  axioms for invariants that live outside this file (the binding layer
+  validates object ids; list links only ever hold object ids or NIL).
+  Forms: ``name`` (variable), ``*name`` (deref), ``name[]`` (element
+  value range), ``name()`` (call result); ``<`` or ``<=``. Annotations
+  above every function are global, ones inside a body are local.
+
+Bounds compose: assignment propagates them, ``± const`` shifts them,
+and ``q * X + r`` with ``q < Q`` and ``r < X`` proves ``< Q*X`` (the
+slot-major ``slot[k] * J + i`` indexing pattern).
+
+Codes
+-----
+``unproved-subscript``
+    An array subscript whose index has no derivable bound matching the
+    array's declared capacity.
+``missing-capacity``
+    A pointer parameter is subscripted but carries no ``(cap)``
+    capacity comment (reported once per parameter per function).
+``malloc-unchecked``
+    A ``malloc``/``calloc``/``realloc`` result used before any
+    null-check.
+``memlen-untied``
+    A ``memset``/``memcpy``/``memmove`` length not provably tied to
+    the destination's declared capacity (factor by factor, with the
+    ``sizeof`` element type matching the destination's).
+
+Only upper bounds are proved; lower bounds (the ``NIL``/``-1``
+sentinel discipline) are the annotations' stated responsibility.
+"""
+
+from __future__ import annotations
+
+import re
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from .findings import Finding
+
+NAME = "cbounds"
+DESCRIPTION = (
+    "proves every array subscript, alloc check, and mem* length in "
+    "_fastsim_c.c against declared capacities and contract annotations"
+)
+
+CODES = {
+    "unproved-subscript": "array index has no derivable in-range bound",
+    "missing-capacity": "subscripted pointer parameter lacks a (cap) comment",
+    "malloc-unchecked": "allocation result used before a null-check",
+    "memlen-untied": "mem* length not tied to destination capacity",
+}
+
+C_FILE = "src/repro/core/_fastsim_c.c"
+
+TYPE_WORDS = {
+    "void", "char", "short", "int", "long", "float", "double",
+    "signed", "unsigned", "const", "static", "volatile", "register",
+    "int8_t", "int16_t", "int32_t", "int64_t",
+    "uint8_t", "uint16_t", "uint32_t", "uint64_t",
+    "size_t", "ssize_t", "intptr_t", "uintptr_t",
+}
+QUALIFIERS = {"const", "static", "volatile", "register", "signed", "unsigned"}
+MEM_FNS = {"memset", "memcpy", "memmove"}
+ALLOC_FNS = {"malloc", "calloc", "realloc"}
+KEYWORDS = {"if", "while", "for", "switch", "return", "sizeof", "do", "else"}
+
+ID_RE = re.compile(r"[A-Za-z_]\w*$")
+TOKEN_RE = re.compile(
+    r'"(?:[^"\\]|\\.)*"'
+    r"|'(?:[^'\\]|\\.)*'"
+    r"|[A-Za-z_]\w*"
+    r"|0[xX][0-9a-fA-F]+[uUlL]*|\d+[uUlL]*"
+    r"|<<=|>>=|->|\+\+|--|<<|>>|<=|>=|==|!=|&&|\|\|"
+    r"|[+\-*/%&|^!~<>=?:;,.(){}\[\]#\\]"
+)
+ASSIGN_OPS = {"=", "+=", "-=", "*=", "/=", "%=", "&=", "|=", "^=", "<<=", ">>="}
+
+# Bound representations (all exclusive upper bounds):
+#   ("num", n)        value < n
+#   ("sym", S, off)   value < S + off
+#   ("aff", Q, X)     value < Q * X
+
+
+def _int_of(tok: str) -> Optional[int]:
+    t = tok.rstrip("uUlL")
+    try:
+        return int(t, 16) if t[:2].lower() == "0x" else int(t)
+    except (ValueError, IndexError):
+        return None
+
+
+# ---------------------------------------------------------------------------
+# lexing / preprocessing
+# ---------------------------------------------------------------------------
+def _strip_comments(src: str) -> Tuple[str, List[Tuple[int, str]]]:
+    """Comment-free source (newlines preserved) + [(start line, text)]."""
+    comments: List[Tuple[int, str]] = []
+    out: List[str] = []
+    i, n, line = 0, len(src), 1
+    while i < n:
+        c = src[i]
+        nxt = src[i + 1] if i + 1 < n else ""
+        if c == "/" and nxt == "*":
+            j = src.find("*/", i + 2)
+            j = n if j < 0 else j + 2
+            comments.append((line, src[i + 2 : max(i + 2, j - 2)]))
+            seg = src[i:j]
+            out.append("".join(ch if ch == "\n" else " " for ch in seg))
+            line += seg.count("\n")
+            i = j
+        elif c == "/" and nxt == "/":
+            j = src.find("\n", i)
+            j = n if j < 0 else j
+            comments.append((line, src[i + 2 : j]))
+            out.append(" " * (j - i))
+            i = j
+        elif c in "\"'":
+            j = i + 1
+            while j < n and src[j] != c:
+                j += 2 if src[j] == "\\" else 1
+            j = min(j + 1, n)
+            out.append(src[i:j])
+            line += src.count("\n", i, j)
+            i = j
+        else:
+            out.append(c)
+            if c == "\n":
+                line += 1
+            i += 1
+    return "".join(out), comments
+
+
+def _preprocess(text: str, consts: Dict[str, int]) -> str:
+    """Blank out directives; record object-like integer ``#define``s;
+    keep function-like macro bodies in place (they get checked)."""
+    lines = text.split("\n")
+    i = 0
+    while i < len(lines):
+        stripped = lines[i].lstrip()
+        if not stripped.startswith("#"):
+            i += 1
+            continue
+        last = i
+        while lines[last].rstrip().endswith("\\"):
+            last += 1
+        m = re.match(r"\s*#\s*define\s+(\w+)(\()?", lines[i])
+        if m and m.group(2):
+            # function-like macro: blank the directive prefix up to the
+            # closing paren of the parameter list, keep the body tokens
+            depth, j = 0, m.end() - 1
+            while j < len(lines[i]):
+                if lines[i][j] == "(":
+                    depth += 1
+                elif lines[i][j] == ")":
+                    depth -= 1
+                    if depth == 0:
+                        break
+                j += 1
+            lines[i] = " " * (j + 1) + lines[i][j + 1 :]
+            for k in range(i, last + 1):
+                lines[k] = lines[k].rstrip("\\").ljust(len(lines[k]))
+        else:
+            if m:
+                val = lines[i][m.end() :]
+                for k in range(i + 1, last + 1):
+                    val += " " + lines[k]
+                vm = re.match(r"\s*\(?\s*(-?\d+)\s*\)?\s*$", val.rstrip("\\"))
+                if vm:
+                    consts[m.group(1)] = int(vm.group(1))
+            for k in range(i, last + 1):
+                lines[k] = " " * len(lines[k])
+        i = last + 1
+    return "\n".join(lines)
+
+
+def _tokenize(text: str) -> List[Tuple[str, int]]:
+    import bisect
+
+    starts = [0] + [m.end() for m in re.finditer("\n", text)]
+    return [
+        (m.group(0), bisect.bisect_right(starts, m.start()))
+        for m in TOKEN_RE.finditer(text)
+    ]
+
+
+def _parse_enums(toks: Sequence[Tuple[str, int]], consts: Dict[str, int]) -> None:
+    i = 0
+    while i < len(toks):
+        if toks[i][0] != "enum":
+            i += 1
+            continue
+        j = i + 1
+        if j < len(toks) and toks[j][0] != "{":
+            j += 1  # tagged enum
+        if j >= len(toks) or toks[j][0] != "{":
+            i += 1
+            continue
+        val, j = 0, j + 1
+        while j < len(toks) and toks[j][0] != "}":
+            name = toks[j][0]
+            j += 1
+            if j < len(toks) and toks[j][0] == "=":
+                j += 1
+                neg = toks[j][0] == "-"
+                if neg:
+                    j += 1
+                v = _int_of(toks[j][0])
+                if v is not None:
+                    val = -v if neg else v
+                j += 1
+            if ID_RE.match(name):
+                consts[name] = val
+                val += 1
+            if j < len(toks) and toks[j][0] == ",":
+                j += 1
+        i = j + 1
+
+
+def _match_paren(toks: Sequence[Tuple[str, int]], i: int) -> int:
+    """Index of the ``)`` matching ``toks[i] == "("``."""
+    depth = 0
+    for j in range(i, len(toks)):
+        if toks[j][0] == "(":
+            depth += 1
+        elif toks[j][0] == ")":
+            depth -= 1
+            if depth == 0:
+                return j
+    return len(toks) - 1
+
+
+# ---------------------------------------------------------------------------
+# capacities / annotations
+# ---------------------------------------------------------------------------
+def _parse_cap(cap: str, consts: Dict[str, int]):
+    """('num', n) | ('sym', S, off) | ('prod', A, B) | None."""
+    ts = [t for t, _ in _tokenize(cap)]
+    if len(ts) == 1:
+        v = _int_of(ts[0])
+        if v is not None:
+            return ("num", v)
+        if ts[0] in consts:
+            return ("num", consts[ts[0]])
+        return ("sym", ts[0], 0)
+    if len(ts) == 3 and ts[1] in "+-" and ID_RE.match(ts[0]):
+        v = _int_of(ts[2])
+        if v is not None:
+            return ("sym", ts[0], v if ts[1] == "+" else -v)
+    if len(ts) == 3 and ts[1] == "*" and ID_RE.match(ts[0]) and ID_RE.match(ts[2]):
+        return ("prod", ts[0], ts[2])
+    return None
+
+
+def _bound_from_cap(op: str, capb) -> Optional[tuple]:
+    if capb is None:
+        return None
+    bump = 1 if op == "<=" else 0
+    if capb[0] == "num":
+        return ("num", capb[1] + bump)
+    if capb[0] == "sym":
+        return ("sym", capb[1], capb[2] + bump)
+    if capb[0] == "prod" and op == "<":
+        return ("aff", capb[1], capb[2])
+    return None
+
+
+class _Annotations:
+    """Parsed ``/* cbounds: ... */`` contract comments."""
+
+    def __init__(self) -> None:
+        self.exprs: Dict[str, tuple] = {}       # normalized expr -> bound
+        self.value_ranges: Dict[str, tuple] = {}  # arr -> element bound
+        self.calls: Dict[str, tuple] = {}         # fn -> result bound
+
+    def merge(self, other: "_Annotations") -> "_Annotations":
+        out = _Annotations()
+        for a in (self, other):
+            out.exprs.update(a.exprs)
+            out.value_ranges.update(a.value_ranges)
+            out.calls.update(a.calls)
+        return out
+
+
+def _parse_annotations(
+    comments: List[Tuple[int, str]], consts: Dict[str, int]
+) -> List[Tuple[int, str, tuple]]:
+    """[(line, kind:key, bound)] — kind 'e'(expr)/'v'(value)/'c'(call)."""
+    out = []
+    for line, text in comments:
+        if "cbounds:" not in text:
+            continue
+        spec = text.split("cbounds:", 1)[1].split("--", 1)[0].strip()
+        m = re.match(r"^(.*?)\s*(<=|<)\s*(.+?)\s*$", spec)
+        if not m:
+            continue
+        lhs, op, cap = m.groups()
+        bound = _bound_from_cap(op, _parse_cap(cap, consts))
+        if bound is None:
+            continue
+        ts = [t for t, _ in _tokenize(lhs)]
+        if not ts:
+            continue
+        if len(ts) >= 3 and ts[-2:] == ["[", "]"]:
+            out.append((line, "v:" + ts[0], bound))
+        elif len(ts) >= 3 and ts[-2:] == ["(", ")"]:
+            out.append((line, "c:" + ts[0], bound))
+        else:
+            out.append((line, "e:" + " ".join(ts), bound))
+    return out
+
+
+class _Param:
+    __slots__ = ("name", "is_ptr", "elem", "cap")
+
+    def __init__(self, name, is_ptr, elem, cap):
+        self.name, self.is_ptr, self.elem, self.cap = name, is_ptr, elem, cap
+
+
+def _cap_comments(comments: List[Tuple[int, str]]) -> Dict[int, str]:
+    """line -> capacity string, for comments whose text starts with (...)."""
+    out: Dict[int, str] = {}
+    for line, text in comments:
+        s = text.strip()
+        if not s.startswith("("):
+            continue
+        depth = 0
+        for idx, ch in enumerate(s):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    out[line] = s[1:idx].replace(" ", "")
+                    break
+    return out
+
+
+def _parse_params(
+    param_toks: Sequence[Tuple[str, int]], caps_by_line: Dict[int, str]
+) -> Dict[str, _Param]:
+    groups: List[List[Tuple[str, int]]] = [[]]
+    depth = 0
+    for t, ln in param_toks:
+        if t == "(":
+            depth += 1
+        elif t == ")":
+            depth -= 1
+        if t == "," and depth == 0:
+            groups.append([])
+        else:
+            groups[-1].append((t, ln))
+    params: Dict[str, _Param] = {}
+    for g in groups:
+        texts = [t for t, _ in g]
+        ids = [t for t in texts if ID_RE.match(t) and t not in TYPE_WORDS]
+        if not ids:
+            continue
+        name = ids[-1]
+        elem = None
+        for t in texts:
+            if t in TYPE_WORDS and t not in QUALIFIERS:
+                elem = t
+        params[name] = _Param(
+            name, "*" in texts, elem, caps_by_line.get(g[-1][1])
+        )
+    return params
+
+
+# ---------------------------------------------------------------------------
+# per-function context + expression evaluator
+# ---------------------------------------------------------------------------
+def _join2(a: tuple, b: tuple) -> Optional[tuple]:
+    if a[0] == b[0] == "num":
+        return ("num", max(a[1], b[1]))
+    if a[0] == b[0] == "sym" and a[1] == b[1]:
+        return ("sym", a[1], max(a[2], b[2]))
+    if a[0] == b[0] == "aff" and a[1:] == b[1:]:
+        return a
+    return None
+
+
+class _FnCtx:
+    def __init__(
+        self,
+        fname: str,
+        rel: str,
+        params: Dict[str, _Param],
+        consts: Dict[str, int],
+        ann: _Annotations,
+        findings: List[Finding],
+    ) -> None:
+        self.fname = fname
+        self.rel = rel
+        self.params = params
+        self.consts = consts
+        self.ann = ann
+        self.findings = findings
+        self.env: Dict[str, List[tuple]] = {}
+        self.invariant: Dict[str, List[tuple]] = {}
+        self.local_caps: Dict[str, str] = {}
+        self._missing: Set[str] = set()
+        self.stmts: List[Tuple[str, Optional[str], List[str], int]] = []
+
+    # -- findings ------------------------------------------------------------
+    def flag(self, code: str, line: int, msg: str) -> None:
+        f = Finding(NAME, code, self.rel, line, msg)
+        if not any(
+            g.code == code and g.line == line and g.message == msg
+            for g in self.findings
+        ):
+            self.findings.append(f)
+
+    # -- variable lookup -------------------------------------------------------
+    def var_candidates(self, name: str) -> List[tuple]:
+        out = list(self.env.get(name, ()))
+        out += self.invariant.get(name, ())
+        a = self.ann.exprs.get(name)
+        if a:
+            out.append(a)
+        out.append(("sym", name, 1))  # x < x + 1, always
+        return out
+
+    # -- subscript proof -------------------------------------------------------
+    def check_subscript(
+        self,
+        arr: Optional[str],
+        bounds: List[tuple],
+        const: Optional[int],
+        idx_str: str,
+        line: int,
+    ) -> List[tuple]:
+        value_bounds: List[tuple] = []
+        if arr is None:
+            return value_bounds
+        vr = self.ann.value_ranges.get(arr)
+        if vr:
+            value_bounds.append(vr)
+        p = self.params.get(arr)
+        cap = self.local_caps.get(arr) or (p.cap if p else None)
+        if cap is None:
+            if p is not None and p.is_ptr and arr not in self._missing:
+                self._missing.add(arr)
+                self.flag(
+                    "missing-capacity",
+                    line,
+                    f"{self.fname}(): pointer parameter {arr!r} is "
+                    "subscripted but declares no (cap) capacity comment "
+                    "— nothing to prove indexes against",
+                )
+            return value_bounds
+        cands = list(bounds)
+        if const is not None and const >= 0:
+            cands.append(("num", const + 1))
+        a = self.ann.exprs.get(idx_str)
+        if a:
+            cands.append(a)
+        if not self._prove(cands, cap):
+            self.flag(
+                "unproved-subscript",
+                line,
+                f"{self.fname}(): cannot prove {arr}[{idx_str}] < {cap} — "
+                "add a dominating guard/clamp or a cbounds annotation "
+                "with the reason it is safe",
+            )
+        return value_bounds
+
+    def _prove(self, cands: List[tuple], cap: str) -> bool:
+        capb = _parse_cap(cap, self.consts)
+        if capb is None:
+            return False
+        for b in cands:
+            if capb[0] == "num" and b[0] == "num" and b[1] <= capb[1]:
+                return True
+            if (
+                capb[0] == "sym"
+                and b[0] == "sym"
+                and b[1] == capb[1]
+                and b[2] <= capb[2]
+            ):
+                return True
+            if (
+                capb[0] == "prod"
+                and b[0] == "aff"
+                and (b[1], b[2]) in ((capb[1], capb[2]), (capb[2], capb[1]))
+            ):
+                return True
+        return False
+
+    # -- mem* length tying -------------------------------------------------------
+    def check_memlen(
+        self, dest: List[str], length: List[str], line: int
+    ) -> None:
+        name = next(
+            (t for t in dest if ID_RE.match(t) and t not in TYPE_WORDS), None
+        )
+        if name is None:
+            return
+        p = self.params.get(name)
+        cap = self.local_caps.get(name) or (p.cap if p else None)
+        if cap is None:
+            self.flag(
+                "memlen-untied",
+                line,
+                f"{self.fname}(): mem* destination {name!r} has no "
+                "declared capacity to tie the length to",
+            )
+            return
+        factors = _factor_flatten(length)
+        rest: List[List[str]] = []
+        for f in factors:
+            if f and f[0] == "sizeof":
+                tys = [t for t in f if t in TYPE_WORDS and t not in QUALIFIERS]
+                if p and p.elem and tys and tys[0] != p.elem:
+                    self.flag(
+                        "memlen-untied",
+                        line,
+                        f"{self.fname}(): length scales by "
+                        f"sizeof({tys[0]}) but {name!r} points at "
+                        f"{p.elem} elements",
+                    )
+                    return
+            else:
+                rest.append(f)
+        cap_factors = cap.split("*")
+        for f in rest:
+            s = "".join(f)
+            matched = None
+            if s in cap_factors:
+                matched = s
+            elif len(f) == 1 and ID_RE.match(f[0]):
+                for cf in cap_factors:
+                    if any(
+                        b[0] == "sym" and b[1] == cf and b[2] <= 1
+                        for b in self.var_candidates(f[0])
+                    ):
+                        matched = cf
+                        break
+            if matched is None:
+                self.flag(
+                    "memlen-untied",
+                    line,
+                    f"{self.fname}(): length factor {s!r} is not tied to "
+                    f"the capacity ({cap}) of {name!r}",
+                )
+                return
+            cap_factors.remove(matched)
+        if cap_factors:
+            self.flag(
+                "memlen-untied",
+                line,
+                f"{self.fname}(): length covers only part of the "
+                f"capacity ({cap}) of {name!r} — missing factor(s) "
+                f"{cap_factors} (fine if intentional, then annotate)",
+            )
+
+
+def _factor_flatten(toks: List[str]) -> List[List[str]]:
+    def strip_casts(ts: List[str]) -> List[str]:
+        while len(ts) >= 3 and ts[0] == "(" and ts[1] in TYPE_WORDS:
+            depth = 0
+            for k, t in enumerate(ts):
+                if t == "(":
+                    depth += 1
+                elif t == ")":
+                    depth -= 1
+                    if depth == 0:
+                        ts = ts[k + 1 :]
+                        break
+            else:
+                break
+        return ts
+
+    ts = strip_casts(list(toks))
+    parts: List[List[str]] = [[]]
+    depth = 0
+    for t in ts:
+        if t in "([":
+            depth += 1
+        elif t in ")]":
+            depth -= 1
+        if t == "*" and depth == 0:
+            parts.append([])
+        else:
+            parts[-1].append(t)
+    out: List[List[str]] = []
+    for part in parts:
+        part = strip_casts(part)
+        if len(part) >= 2 and part[0] == "(" and part[-1] == ")":
+            inner, depth, balanced = part[1:-1], 0, True
+            for t in inner:
+                if t == "(":
+                    depth += 1
+                elif t == ")":
+                    depth -= 1
+                    if depth < 0:
+                        balanced = False
+            if balanced and depth == 0:
+                out.extend(_factor_flatten(inner))
+                continue
+        if part:
+            out.append(part)
+    return out
+
+
+class _Eval:
+    """Recursive-descent evaluator over a token slice. Returns
+    (bounds list, const value or None); subscript checks fire as a side
+    effect. Never raises on parse confusion — it skips and moves on."""
+
+    def __init__(self, ctx: _FnCtx, toks: Sequence[Tuple[str, int]]):
+        self.ctx = ctx
+        self.t = [x[0] for x in toks]
+        self.lines = [x[1] for x in toks]
+        self.i = 0
+
+    def cur(self) -> Optional[str]:
+        return self.t[self.i] if self.i < len(self.t) else None
+
+    def eat(self) -> str:
+        t = self.t[self.i]
+        self.i += 1
+        return t
+
+    def parse_all(self) -> Tuple[List[tuple], Optional[int]]:
+        res: Tuple[List[tuple], Optional[int]] = ([], None)
+        while self.i < len(self.t):
+            before = self.i
+            res = self.parse_ternary()
+            if self.cur() == ",":
+                self.eat()
+            if self.i == before:
+                self.i += 1  # stray token; don't loop forever
+        return res
+
+    # -- precedence levels -----------------------------------------------------
+    def parse_ternary(self) -> Tuple[List[tuple], Optional[int]]:
+        start = self.i
+        res = self.parse_binary()
+        if self.cur() != "?":
+            return res
+        cond = self.t[start : self.i]
+        self.eat()
+        # matching ':' at depth 0
+        depth = q = 0
+        j = self.i
+        while j < len(self.t):
+            tt = self.t[j]
+            if tt in "([{":
+                depth += 1
+            elif tt in ")]}":
+                depth -= 1
+            elif tt == "?" and depth == 0:
+                q += 1
+            elif tt == ":" and depth == 0:
+                if q == 0:
+                    break
+                q -= 1
+            j += 1
+        sub = _Eval(self.ctx, list(zip(self.t[self.i : j], self.lines[self.i : j])))
+        tb, tc = sub.parse_all()
+        then_texts = self.t[self.i : j]
+        self.i = min(j + 1, len(self.t))
+        eb, ec = self.parse_ternary()
+        # clamp pattern: (X < L ? X : ...) bounds the then-branch by L
+        depth = 0
+        cmp_pos = [
+            k
+            for k, t in enumerate(cond)
+            if (depth := depth + (t in "([") - (t in ")]")) >= 0
+            and t in ("<", "<=")
+            and depth == 0
+        ]
+        if len(cmp_pos) == 1:
+            p = cmp_pos[0]
+            lhs, op, rhs = cond[:p], cond[p], cond[p + 1 :]
+            if then_texts == lhs and len(rhs) == 1:
+                b = _bound_from_cap(op, _parse_cap(rhs[0], self.ctx.consts))
+                if b:
+                    tb = tb + [b]
+        joined = [j2 for a in tb for b in eb if (j2 := _join2(a, b))]
+        return (joined, tc if tc is not None and tc == ec else None)
+
+    def parse_binary(self) -> Tuple[List[tuple], Optional[int]]:
+        res = self.parse_additive()
+        while self.cur() in (
+            "==", "!=", "<", "<=", ">", ">=", "&&", "||",
+            "&", "|", "^", "<<", ">>",
+        ):
+            self.eat()
+            self.parse_additive()
+            res = ([], None)
+        return res
+
+    def parse_additive(self) -> Tuple[List[tuple], Optional[int]]:
+        b, c = self.parse_term()
+        while self.cur() in ("+", "-"):
+            op = self.eat()
+            b2, c2 = self.parse_term()
+            nc = None
+            if c is not None and c2 is not None:
+                nc = c + c2 if op == "+" else c - c2
+            nb: List[tuple] = []
+            if c2 is not None:  # bound ± const
+                d = c2 if op == "+" else -c2
+                for x in b:
+                    if x[0] == "num":
+                        nb.append(("num", x[1] + d))
+                    elif x[0] == "sym":
+                        nb.append(("sym", x[1], x[2] + d))
+                    elif x[0] == "aff" and d <= 0:
+                        nb.append(x)
+            elif op == "+":
+                for x in b:
+                    if x[0] != "aff":
+                        continue
+                    for y in b2:
+                        if y[0] == "sym" and y[1] == x[2] and y[2] <= 0:
+                            nb.append(x)
+                for y in b2:
+                    if y[0] != "aff":
+                        continue
+                    for x in b:
+                        if x[0] == "sym" and x[1] == y[2] and x[2] <= 0:
+                            nb.append(y)
+            b, c = nb, nc
+        return b, c
+
+    def parse_term(self) -> Tuple[List[tuple], Optional[int]]:
+        b, c = self.parse_unary()
+        while self.cur() in ("*", "/", "%"):
+            op = self.eat()
+            rstart = self.i
+            b2, c2 = self.parse_unary()
+            right = self.t[rstart : self.i]
+            if op == "*":
+                nb: List[tuple] = []
+                nc = c * c2 if c is not None and c2 is not None else None
+                if nc is not None and nc >= 0:
+                    nb.append(("num", nc + 1))
+                if (
+                    len(right) == 1
+                    and ID_RE.match(right[0])
+                    and right[0] not in self.ctx.consts
+                ):
+                    for x in b:
+                        if x[0] == "sym" and x[2] <= 0:
+                            nb.append(("aff", x[1], right[0]))
+                b, c = nb, nc
+            elif op == "%":
+                nb = []
+                if len(right) == 1 and ID_RE.match(right[0]):
+                    nb.append(("sym", right[0], 0))
+                b, c = nb, None
+            else:  # '/' keeps the dividend's bounds (non-negative ints)
+                c = c // c2 if c is not None and c2 not in (None, 0) else None
+        return b, c
+
+    def parse_unary(self) -> Tuple[List[tuple], Optional[int]]:
+        t = self.cur()
+        if t is None:
+            return ([], None)
+        if t in ("+", "-", "~", "!"):
+            self.eat()
+            b, c = self.parse_unary()
+            if t == "+":
+                return (b, c)
+            if t == "-":
+                return ([], -c if c is not None else None)
+            return ([], None)
+        if t == "&":
+            self.eat()
+            self.parse_unary()
+            return ([], None)
+        if t == "*":
+            self.eat()
+            start = self.i
+            self.parse_unary()
+            key = "* " + " ".join(self.t[start : self.i])
+            a = self.ctx.ann.exprs.get(key)
+            return ([a] if a else [], None)
+        if t in ("++", "--"):
+            self.eat()
+            return self.parse_unary()
+        if t == "sizeof":
+            self.eat()
+            if self.cur() == "(":
+                j = _match_paren(list(zip(self.t, self.lines)), self.i)
+                self.i = j + 1
+            else:
+                self.parse_unary()
+            return ([], None)
+        if t == "(":
+            j = self.i + 1
+            if j < len(self.t) and self.t[j] in TYPE_WORDS:
+                # cast: skip "(type ...)" then apply to the operand
+                k = _match_paren(list(zip(self.t, self.lines)), self.i)
+                self.i = k + 1
+                return self.parse_unary()
+            self.eat()
+            res = self.parse_ternary()
+            if self.cur() == ")":
+                self.eat()
+            return self.parse_postfix(res, None)
+        v = _int_of(t)
+        if v is not None:
+            self.eat()
+            return ([("num", v + 1)] if v >= 0 else [], v)
+        if ID_RE.match(t):
+            name = self.eat()
+            if self.cur() == "(":
+                return self.parse_call(name)
+            if name in self.ctx.consts:
+                cv = self.ctx.consts[name]
+                res = ([("num", cv + 1)] if cv >= 0 else [], cv)
+                return self.parse_postfix(res, None)
+            res = (self.ctx.var_candidates(name), None)
+            return self.parse_postfix(res, name)
+        self.eat()  # operator we don't model; skip
+        return ([], None)
+
+    def parse_postfix(
+        self, res: Tuple[List[tuple], Optional[int]], name: Optional[str]
+    ) -> Tuple[List[tuple], Optional[int]]:
+        while True:
+            t = self.cur()
+            if t == "[":
+                line = self.lines[self.i]
+                self.eat()
+                jstart = self.i
+                ib, ic = self.parse_ternary()
+                idx_str = " ".join(self.t[jstart : self.i])
+                if self.cur() == "]":
+                    self.eat()
+                vb = self.ctx.check_subscript(name, ib, ic, idx_str, line)
+                res, name = (vb, None), None
+            elif t in ("++", "--"):
+                self.eat()  # post-inc reads the pre-value: keep bounds
+            else:
+                return res
+
+    def parse_call(self, name: str) -> Tuple[List[tuple], Optional[int]]:
+        line = self.lines[self.i] if self.i < len(self.t) else 0
+        self.eat()  # '('
+        args: List[Tuple[int, int]] = []
+        if self.cur() == ")":
+            self.eat()
+        else:
+            while self.i < len(self.t):
+                start = self.i
+                self.parse_ternary()
+                if self.i == start:
+                    self.i += 1
+                args.append((start, self.i))
+                if self.cur() == ",":
+                    self.eat()
+                    continue
+                if self.cur() == ")":
+                    self.eat()
+                break
+        if name in MEM_FNS and len(args) == 3:
+            dest = self.t[args[0][0] : args[0][1]]
+            length = self.t[args[2][0] : args[2][1]]
+            self.ctx.check_memlen(dest, length, line)
+        a = self.ctx.ann.calls.get(name)
+        return ([a] if a else [], None)
+
+
+# ---------------------------------------------------------------------------
+# statement machine
+# ---------------------------------------------------------------------------
+def _guard_bounds(
+    body: Sequence[Tuple[str, int]], consts: Dict[str, int]
+) -> Dict[str, List[tuple]]:
+    out: Dict[str, List[tuple]] = {}
+
+    def add(var: str, bound: Optional[tuple]) -> None:
+        if bound:
+            out.setdefault(var, []).append(bound)
+
+    for i, (t, _ln) in enumerate(body):
+        if t == "for" and i + 1 < len(body) and body[i + 1][0] == "(":
+            j = _match_paren(body, i + 1)
+            inner = [x[0] for x in body[i + 2 : j]]
+            segs: List[List[str]] = [[]]
+            depth = 0
+            for tok in inner:
+                if tok in "([":
+                    depth += 1
+                elif tok in ")]":
+                    depth -= 1
+                if tok == ";" and depth == 0:
+                    segs.append([])
+                else:
+                    segs[-1].append(tok)
+            if len(segs) == 3:
+                cond = segs[1]
+                if (
+                    len(cond) == 3
+                    and ID_RE.match(cond[0])
+                    and cond[1] in ("<", "<=")
+                ):
+                    add(
+                        cond[0],
+                        _bound_from_cap(
+                            cond[1], _parse_cap(cond[2], consts)
+                        ),
+                    )
+        elif t == "if" and i + 1 < len(body) and body[i + 1][0] == "(":
+            j = _match_paren(body, i + 1)
+            cond = [x[0] for x in body[i + 2 : j]]
+            if not (
+                len(cond) == 3
+                and ID_RE.match(cond[0])
+                and cond[1] in ("==", ">=", ">")
+            ):
+                continue
+            # does the guarded region return?
+            k, has_ret = j + 1, False
+            if k < len(body) and body[k][0] == "{":
+                depth, k = 1, k + 1
+                while k < len(body) and depth:
+                    if body[k][0] == "{":
+                        depth += 1
+                    elif body[k][0] == "}":
+                        depth -= 1
+                    elif body[k][0] == "return":
+                        has_ret = True
+                    k += 1
+            else:
+                while k < len(body) and body[k][0] != ";":
+                    if body[k][0] == "return":
+                        has_ret = True
+                    k += 1
+            if has_ret:
+                op = "<" if cond[1] in ("==", ">=") else "<="
+                add(
+                    cond[0],
+                    _bound_from_cap(op, _parse_cap(cond[2], consts)),
+                )
+    return out
+
+
+def _split_statement(
+    toks: Sequence[Tuple[str, int]], i: int
+) -> Tuple[int, List[Tuple[str, int]]]:
+    depth = 0
+    j = i
+    while j < len(toks):
+        t = toks[j][0]
+        if t in "([":
+            depth += 1
+        elif t in ")]":
+            depth -= 1
+        elif t == ";" and depth <= 0:
+            return j + 1, list(toks[i:j])
+        elif t in "{}" and depth <= 0:
+            return j, list(toks[i:j])
+        j += 1
+    return j, list(toks[i:j])
+
+
+def _walk_function(ctx: _FnCtx, body: Sequence[Tuple[str, int]]) -> None:
+    ctx.invariant = _guard_bounds(body, ctx.consts)
+    i = 0
+    while i < len(body):
+        t, line = body[i]
+        if t in ("{", "}", ";", "do", "else", "break", "continue"):
+            i += 1
+        elif t in ("if", "while", "switch") and i + 1 < len(body) and body[
+            i + 1
+        ][0] == "(":
+            j = _match_paren(body, i + 1)
+            cond = list(body[i + 2 : j])
+            _Eval(ctx, cond).parse_all()
+            ctx.stmts.append(("cond", None, [x[0] for x in cond], line))
+            i = j + 1
+        elif t == "for" and i + 1 < len(body) and body[i + 1][0] == "(":
+            j = _match_paren(body, i + 1)
+            inner = list(body[i + 2 : j])
+            segs: List[List[Tuple[str, int]]] = [[]]
+            depth = 0
+            for x in inner:
+                if x[0] in "([":
+                    depth += 1
+                elif x[0] in ")]":
+                    depth -= 1
+                if x[0] == ";" and depth == 0:
+                    segs.append([])
+                else:
+                    segs[-1].append(x)
+            if segs and segs[0]:
+                _process_statement(ctx, segs[0], line)
+            for seg in segs[1:]:
+                if seg:
+                    _Eval(ctx, seg).parse_all()
+            i = j + 1
+        elif t == "return":
+            j, stmt = _split_statement(body, i + 1)
+            if stmt:
+                _Eval(ctx, stmt).parse_all()
+            i = j
+        else:
+            j, stmt = _split_statement(body, i)
+            if stmt:
+                _process_statement(ctx, stmt, stmt[0][1])
+            i = max(j, i + 1)
+    _malloc_pass(ctx)
+
+
+def _process_statement(
+    ctx: _FnCtx, stmt: List[Tuple[str, int]], line: int
+) -> None:
+    texts = [x[0] for x in stmt]
+    if texts[0] in TYPE_WORDS:
+        rest = list(stmt)
+        while rest and (rest[0][0] in TYPE_WORDS or rest[0][0] == "*"):
+            rest.pop(0)
+        groups: List[List[Tuple[str, int]]] = [[]]
+        depth = 0
+        for x in rest:
+            if x[0] in "([":
+                depth += 1
+            elif x[0] in ")]":
+                depth -= 1
+            if x[0] == "," and depth == 0:
+                groups.append([])
+            else:
+                groups[-1].append(x)
+        for g in groups:
+            while g and g[0][0] == "*":
+                g.pop(0)
+            if not g:
+                continue
+            name = g[0][0]
+            if not ID_RE.match(name):
+                continue
+            if len(g) >= 3 and g[1][0] == "[":
+                if _int_of(g[2][0]) is not None or ID_RE.match(g[2][0]):
+                    ctx.local_caps[name] = g[2][0]
+                ctx.env[name] = []
+            elif len(g) >= 2 and g[1][0] == "=":
+                b, c = _Eval(ctx, g[2:]).parse_all()
+                if c is not None and c >= 0:
+                    b = b + [("num", c + 1)]
+                ctx.env[name] = b
+                ctx.stmts.append(
+                    ("assign", name, [x[0] for x in g], g[0][1])
+                )
+            else:
+                ctx.env[name] = []
+        return
+    # expression statement: split on a top-level assignment operator
+    depth = 0
+    for k, x in enumerate(stmt):
+        t = x[0]
+        if t in "([":
+            depth += 1
+        elif t in ")]":
+            depth -= 1
+        elif t in ASSIGN_OPS and depth == 0:
+            lhs, rhs = stmt[:k], stmt[k + 1 :]
+            b, c = _Eval(ctx, rhs).parse_all()
+            _Eval(ctx, lhs).parse_all()
+            lname = lhs[0][0] if len(lhs) == 1 and ID_RE.match(lhs[0][0]) else None
+            if t == "=" and lname:
+                if c is not None and c >= 0:
+                    b = b + [("num", c + 1)]
+                ctx.env[lname] = b
+            ctx.stmts.append(("assign", lname, texts, line))
+            return
+    _Eval(ctx, stmt).parse_all()
+    ctx.stmts.append(("plain", None, texts, line))
+
+
+def _malloc_pass(ctx: _FnCtx) -> None:
+    pending: List[Tuple[str, int]] = []
+    for kind, lname, texts, line in ctx.stmts:
+        for nm, ln in list(pending):
+            if nm not in texts:
+                continue
+            pending.remove((nm, ln))
+            checked = kind == "cond" and (
+                "!" in texts or "NULL" in texts or "==" in texts
+                or "!=" in texts
+            )
+            if not checked:
+                ctx.flag(
+                    "malloc-unchecked",
+                    ln,
+                    f"{ctx.fname}(): allocation result {nm!r} is used "
+                    "before any null-check",
+                )
+        if (
+            kind == "assign"
+            and lname
+            and any(a in texts for a in ALLOC_FNS)
+        ):
+            pending.append((lname, line))
+    for nm, ln in pending:
+        ctx.flag(
+            "malloc-unchecked",
+            ln,
+            f"{ctx.fname}(): allocation result {nm!r} is never "
+            "null-checked",
+        )
+
+
+# ---------------------------------------------------------------------------
+# the rule
+# ---------------------------------------------------------------------------
+class _Function:
+    __slots__ = ("name", "params", "body", "start", "end")
+
+    def __init__(self, name, params, body, start, end):
+        self.name, self.params, self.body = name, params, body
+        self.start, self.end = start, end
+
+
+def _find_functions(toks: Sequence[Tuple[str, int]]) -> List[_Function]:
+    fns: List[_Function] = []
+    depth = 0
+    i = 0
+    while i < len(toks):
+        t = toks[i][0]
+        if t == "{":
+            depth += 1
+        elif t == "}":
+            depth -= 1
+        elif (
+            depth == 0
+            and ID_RE.match(t)
+            and t not in KEYWORDS
+            and t not in TYPE_WORDS
+            and i + 1 < len(toks)
+            and toks[i + 1][0] == "("
+        ):
+            j = _match_paren(toks, i + 1)
+            if j + 1 < len(toks) and toks[j + 1][0] == "{":
+                k, d = j + 2, 1
+                while k < len(toks) and d:
+                    if toks[k][0] == "{":
+                        d += 1
+                    elif toks[k][0] == "}":
+                        d -= 1
+                    k += 1
+                fns.append(
+                    _Function(
+                        t,
+                        list(toks[i + 2 : j]),
+                        list(toks[j + 2 : k - 1]),
+                        toks[j + 1][1],
+                        toks[k - 1][1] if k - 1 < len(toks) else toks[-1][1],
+                    )
+                )
+                i = k
+                depth = 0
+                continue
+        i += 1
+    return fns
+
+
+def run(root: Path) -> List[Finding]:
+    path = root / C_FILE
+    if not path.is_file():
+        return []
+    rel = C_FILE
+    src = path.read_text()
+    stripped, comments = _strip_comments(src)
+    consts: Dict[str, int] = {}
+    text = _preprocess(stripped, consts)
+    toks = _tokenize(text)
+    _parse_enums(toks, consts)
+    fns = _find_functions(toks)
+    caps_by_line = _cap_comments(comments)
+    entries = _parse_annotations(comments, consts)
+
+    def ann_for(lines_pred) -> _Annotations:
+        a = _Annotations()
+        for line, key, bound in entries:
+            if not lines_pred(line):
+                continue
+            kind, name = key.split(":", 1)
+            if kind == "v":
+                a.value_ranges[name] = bound
+            elif kind == "c":
+                a.calls[name] = bound
+            else:
+                a.exprs[name] = bound
+        return a
+
+    spans = [(f.start, f.end) for f in fns]
+    global_ann = ann_for(
+        lambda ln: not any(s <= ln <= e for s, e in spans)
+    )
+
+    findings: List[Finding] = []
+    for fn in fns:
+        local = ann_for(lambda ln, f=fn: f.start <= ln <= f.end)
+        ctx = _FnCtx(
+            fn.name,
+            rel,
+            _parse_params(fn.params, caps_by_line),
+            consts,
+            global_ann.merge(local),
+            findings,
+        )
+        _walk_function(ctx, fn.body)
+    findings.sort(key=lambda f: (f.line, f.code))
+    return findings

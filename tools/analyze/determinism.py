@@ -25,7 +25,8 @@ Codes
     its Mersenne stream is not ``SeedSequence``-derivable).
 ``wall-clock``
     ``time.time`` / ``time.time_ns`` / ``datetime.now`` reaching code
-    under ``src/repro``. ``time.perf_counter`` (elapsed-time
+    under the scan roots (``src/repro``, ``benchmarks``, ``tools``
+    since PR 10). ``time.perf_counter`` (elapsed-time
     measurement) is always allowed — wall-clock *values* entering
     results are not. Intentional timestamps must be waived with a
     reason.
@@ -52,16 +53,35 @@ from pathlib import Path
 from typing import Dict, Iterable, List, Optional
 
 from .findings import Finding
+from .ir import Aliases as _Aliases
+from .ir import resolve as _resolve
 
 NAME = "determinism"
 DESCRIPTION = (
     "unseeded/global RNG, wall-clock reads, and set-order-dependent "
-    "array construction in src/repro"
+    "array construction in src/repro, benchmarks/ and tools/"
 )
 
-SCOPE = "src/repro"
-# Paths (relative to SCOPE) where set-order iteration feeding arrays is
-# treated as engine state. Everything else only gets the RNG/clock lint.
+CODES = {
+    "np-random-module": "module-level np.random.* uses the hidden global RandomState",
+    "np-random-state": "legacy np.random.RandomState construction",
+    "unseeded-default-rng": "np.random.default_rng() with no seed",
+    "stdlib-random": "stdlib random module use",
+    "wall-clock": "wall-clock read reaching scoped code",
+    "set-order-array": "numpy array built from unsorted set iteration",
+    "unordered-completion": "completion-order result collection API",
+    "syntax-error": "file failed to parse",
+}
+
+# Scan roots. benchmarks/ and tools/ joined in PR 10: a benchmark that
+# perturbs the RNG or stamps wall-clock values into artifacts breaks
+# reproduction just as surely as engine code (perf_counter timing stays
+# allowed everywhere).
+SCOPES = ("src/repro", "benchmarks", "tools")
+SCOPE = SCOPES[0]  # engine scope (back-compat for tests/docs)
+# Paths (relative to src/repro) where set-order iteration feeding arrays
+# is treated as engine state. Everything else only gets the RNG/clock
+# lint.
 ENGINE_PATHS = ("core", "serving", "scenario", "cacheblocks")
 
 # numpy.random names that are legitimate seeded-generator machinery.
@@ -99,57 +119,6 @@ ARRAY_BUILDERS = {
     "stack",
     "sort",
 }
-
-
-def _dotted(node: ast.AST) -> Optional[str]:
-    """``a.b.c`` attribute chain as a dotted string, else None."""
-    parts: List[str] = []
-    while isinstance(node, ast.Attribute):
-        parts.append(node.attr)
-        node = node.value
-    if isinstance(node, ast.Name):
-        parts.append(node.id)
-        return ".".join(reversed(parts))
-    return None
-
-
-class _Aliases(ast.NodeVisitor):
-    """First pass: module / name aliases so ``np.random.rand`` and
-    ``from numpy.random import rand`` resolve to the same canonical
-    dotted path."""
-
-    def __init__(self) -> None:
-        self.map: Dict[str, str] = {}
-
-    def visit_Import(self, node: ast.Import) -> None:
-        for a in node.names:
-            self.map[a.asname or a.name.split(".")[0]] = (
-                a.name if a.asname else a.name.split(".")[0]
-            )
-
-    def visit_ImportFrom(self, node: ast.ImportFrom) -> None:
-        if node.level or not node.module:
-            return  # relative imports stay repo-internal
-        for a in node.names:
-            if a.name == "*":
-                continue
-            self.map[a.asname or a.name] = f"{node.module}.{a.name}"
-
-
-def _resolve(aliases: Dict[str, str], node: ast.AST):
-    """(canonical dotted path, head-was-imported) for a call target.
-
-    The ``known`` flag guards stdlib matches: ``time.time()`` only
-    counts when ``time`` is actually an imported module in this file,
-    not a local variable that happens to share the name.
-    """
-    dotted = _dotted(node)
-    if dotted is None:
-        return None, False
-    head, _, rest = dotted.partition(".")
-    known = head in aliases
-    head = aliases.get(head, head)
-    return (f"{head}.{rest}" if rest else head), known
 
 
 def _contains_set_expr(node: ast.AST) -> Optional[ast.AST]:
@@ -261,15 +230,23 @@ class _Checker(ast.NodeVisitor):
 
 
 def _py_files(root: Path) -> Iterable[Path]:
-    scope = root / SCOPE
-    if not scope.is_dir():
-        return []
-    return sorted(scope.rglob("*.py"))
+    for scope in SCOPES:
+        base = root / scope
+        if base.is_dir():
+            yield from sorted(base.rglob("*.py"))
+
+
+def _is_engine_path(root: Path, path: Path) -> bool:
+    engine = root / SCOPE
+    try:
+        top = path.relative_to(engine).parts[0]
+    except ValueError:
+        return False  # benchmarks/ and tools/: RNG + clock lint only
+    return top in ENGINE_PATHS
 
 
 def run(root: Path) -> List[Finding]:
     findings: List[Finding] = []
-    scope = root / SCOPE
     for path in _py_files(root):
         rel = path.relative_to(root).as_posix()
         try:
@@ -281,8 +258,7 @@ def run(root: Path) -> List[Finding]:
             continue
         aliases = _Aliases()
         aliases.visit(tree)
-        top = path.relative_to(scope).parts[0]
-        checker = _Checker(rel, aliases.map, top in ENGINE_PATHS)
+        checker = _Checker(rel, aliases.map, _is_engine_path(root, path))
         checker.visit(tree)
         findings.extend(checker.findings)
     return findings

@@ -35,6 +35,11 @@ DESCRIPTION = (
     "benchmark artifacts"
 )
 
+CODES = {
+    "broken-link": "relative markdown link does not resolve",
+    "experiments-drift": "EXPERIMENTS.md out of sync with committed artifacts",
+}
+
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 EXTERNAL = ("http://", "https://", "mailto:")
 

@@ -1,0 +1,432 @@
+"""Fork-safety race detector for ``repro.core.cluster``.
+
+PR 9's parallel :class:`ClusterExecutor` is bit-identical to the
+sequential reference because of two *contracts* the runtime tests can
+only sample, never prove:
+
+1. The :class:`_FeedPlan` shipped across the fork boundary is
+   **read-only**. Workers inherit it copy-on-write; a worker-side
+   mutation silently diverges that worker's view from the sequential
+   reference (and from every other worker) — the estimates drift, no
+   exception is raised.
+2. The parent merges worker replies in a **canonical order** (fixed
+   worker index, then sorted node id) before any float aggregation —
+   otherwise worker count and scheduling reach the results through
+   float rounding.
+
+This rule proves both at the source level, flow-aware: it builds the
+module call graph (:class:`tools.analyze.ir.ModuleIR`), finds the
+worker entry points (functions passed as ``target=`` to a
+``Process(...)`` call), and taints everything reachable from the plan
+(parameters annotated with a plan class — a class whose docstring
+carries the ``fork-shared: read-only`` contract marker — plus
+``self.<attr>`` fields assigned from one, e.g. ``_NodeBank.plan``).
+Taint follows assignments, tuple unpacking, attribute reads, and
+subscripts/slices (numpy views), and crosses call boundaries into
+module-local callees' parameters.
+
+Codes
+-----
+``worker-plan-mutation``
+    Attribute/item assignment, ``del``, augmented assignment, or a
+    mutating container method (``update``/``append``/``pop``/...) on a
+    plan-tainted value inside a worker-reachable function.
+``worker-inplace-numpy``
+    In-place numpy mutation of a plan-tainted array: ``.sort()`` /
+    ``.fill()`` / ``.partition()`` / ``.put()`` / ``.resize()`` /
+    ``.itemset()``, any ``np.*(..., out=tainted)``, or ``+=``-style
+    augmented assignment on a tainted name (ndarray ``__iadd__`` is
+    in-place).
+``unordered-merge``
+    Parent-side iteration over worker replies (values flowing out of
+    ``recv()`` / ``_recv()`` / ``collect()``) whose order is not fixed:
+    a ``for`` loop or comprehension over a reply-tainted mapping that
+    is not wrapped in ``sorted(...)``. Rebuilding a dict with a
+    ``sorted(...)``-driven comprehension canonicalizes it (the
+    ``simulate_cluster`` idiom) and clears the taint.
+``fork-hostile-capture``
+    State shipped across the fork boundary (arguments of a plan-class
+    constructor or of ``Process(...)``) holding a fork-hostile value:
+    an open file object, a ``threading`` lock/condition/semaphore, or
+    a jax array (jax holds locks a forked child can inherit
+    mid-acquire; device buffers don't survive the fork).
+``syntax-error``
+    The module failed to parse.
+"""
+
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Dict, List, Optional, Set
+
+from .findings import Finding
+from .ir import ModuleIR, TaintWalker, dotted, resolve, taint_path
+
+NAME = "forksafety"
+DESCRIPTION = (
+    "worker-side _FeedPlan mutation, non-canonical reply merges, and "
+    "fork-hostile captures in repro.core.cluster"
+)
+
+CODES = {
+    "worker-plan-mutation": "fork-shared plan state mutated worker-side",
+    "worker-inplace-numpy": "in-place numpy mutation of fork-shared state",
+    "unordered-merge": "worker replies iterated in non-canonical order",
+    "fork-hostile-capture": "fork-hostile object shipped across the fork",
+    "syntax-error": "module failed to parse",
+}
+
+MODULE = "src/repro/core/cluster.py"
+
+# The docstring contract marker that makes a class a fork-shared plan.
+PLAN_MARKER = "fork-shared: read-only"
+
+# ndarray methods that mutate in place.
+INPLACE_NP = {"sort", "fill", "partition", "put", "resize", "itemset",
+              "setfield", "byteswap"}
+# container methods that mutate the receiver.
+MUTATORS = {"update", "setdefault", "pop", "popitem", "clear", "append",
+            "extend", "insert", "remove", "add", "discard", "reverse"}
+# calls whose return value is a worker reply (parent side).
+REPLY_SOURCES = {"recv", "_recv", "collect"}
+# constructors of fork-hostile objects (resolved dotted paths).
+HOSTILE_CALLS = {
+    "open",
+    "threading.Lock", "threading.RLock", "threading.Condition",
+    "threading.Semaphore", "threading.BoundedSemaphore",
+    "threading.Event", "threading.Barrier",
+}
+HOSTILE_PREFIXES = ("jax.", "jaxlib.")
+
+
+def _plan_classes(ir: ModuleIR) -> Set[str]:
+    out = set()
+    for name, node in ir.classes.items():
+        doc = ast.get_docstring(node) or ""
+        if PLAN_MARKER in doc:
+            out.add(name)
+    return out
+
+
+def _plan_attrs(ir: ModuleIR, plan_classes: Set[str]) -> Dict[str, Set[str]]:
+    """Per class: attribute names assigned from a plan-typed parameter
+    in any of its methods (``self.plan = plan`` in ``__init__``)."""
+    out: Dict[str, Set[str]] = {}
+    for info in ir.functions.values():
+        if info.cls is None:
+            continue
+        plan_params = {
+            a.arg
+            for a in info.params
+            if ir._annotation_class(a.annotation) in plan_classes
+        }
+        if not plan_params:
+            continue
+        for sub in ast.walk(info.node):
+            if not isinstance(sub, ast.Assign):
+                continue
+            if not (
+                isinstance(sub.value, ast.Name)
+                and sub.value.id in plan_params
+            ):
+                continue
+            for tgt in sub.targets:
+                if (
+                    isinstance(tgt, ast.Attribute)
+                    and isinstance(tgt.value, ast.Name)
+                    and tgt.value.id == "self"
+                ):
+                    out.setdefault(info.cls, set()).add(tgt.attr)
+    return out
+
+
+class _MutationWalker(TaintWalker):
+    """Worker-side pass: flags mutations of plan-tainted values."""
+
+    def __init__(self, rel: str, seeds: Set[str], findings: List[Finding]):
+        super().__init__(seeds)
+        self.rel = rel
+        self.findings = findings
+        self.call_arg_taint: List[tuple] = []  # (call node, [bool per arg])
+
+    def _flag(self, node: ast.AST, code: str, msg: str) -> None:
+        f = Finding(NAME, code, self.rel, getattr(node, "lineno", 0), msg)
+        if not any(
+            g.code == f.code and g.line == f.line for g in self.findings
+        ):
+            self.findings.append(f)
+
+    def on_store(self, target, value, aug: bool) -> None:
+        if isinstance(target, (ast.Attribute, ast.Subscript)):
+            if self.is_tainted(target.value):
+                kind = (
+                    "item" if isinstance(target, ast.Subscript) else
+                    "attribute"
+                )
+                self._flag(
+                    target,
+                    "worker-plan-mutation",
+                    f"{kind} store into fork-shared plan state "
+                    f"({ast.unparse(target)}) — the plan is read-only "
+                    "copy-on-write; workers must never write through it",
+                )
+        elif aug and isinstance(target, ast.Name):
+            if target.id in self.tainted:
+                self._flag(
+                    target,
+                    "worker-inplace-numpy",
+                    f"augmented assignment on plan-tainted {target.id!r} "
+                    "— ndarray += mutates the shared buffer in place",
+                )
+
+    def on_call(self, node: ast.Call) -> None:
+        fn = node.func
+        if isinstance(fn, ast.Attribute) and self.is_tainted(fn.value):
+            if fn.attr in INPLACE_NP:
+                self._flag(
+                    node,
+                    "worker-inplace-numpy",
+                    f".{fn.attr}() mutates plan-tainted "
+                    f"{ast.unparse(fn.value)} in place",
+                )
+            elif fn.attr in MUTATORS:
+                self._flag(
+                    node,
+                    "worker-plan-mutation",
+                    f".{fn.attr}() mutates plan-tainted "
+                    f"{ast.unparse(fn.value)}",
+                )
+        for kw in node.keywords:
+            if kw.arg == "out" and self.is_tainted(kw.value):
+                self._flag(
+                    node,
+                    "worker-inplace-numpy",
+                    "out= targets a plan-tainted array — writes through "
+                    "the fork-shared buffer",
+                )
+        self.call_arg_taint.append(
+            (node, [self.is_tainted(a) for a in node.args])
+        )
+
+
+class _MergeWalker(TaintWalker):
+    """Parent-side pass: worker replies must merge in canonical order."""
+
+    def __init__(self, rel: str, findings: List[Finding]):
+        super().__init__(set())
+        self.rel = rel
+        self.findings = findings
+
+    def call_taint(self, node: ast.Call) -> bool:
+        fn = node.func
+        tail = None
+        if isinstance(fn, ast.Attribute):
+            tail = fn.attr
+        elif isinstance(fn, ast.Name):
+            tail = fn.id
+        if tail in REPLY_SOURCES:
+            return True
+        # view/wrapper calls keep reply order observable
+        if isinstance(fn, ast.Attribute) and tail in (
+            "items", "values", "keys", "copy", "get",
+        ):
+            return self.is_tainted(fn.value)
+        if isinstance(fn, ast.Name) and tail in (
+            "list", "tuple", "iter", "dict", "enumerate", "reversed",
+        ):
+            return any(self.is_tainted(a) for a in node.args)
+        return False
+
+    def on_iterate(self, iter_node: ast.AST, ctx: ast.AST) -> None:
+        from .ir import _is_sorted_call
+
+        if _is_sorted_call(iter_node):
+            return
+        if self.is_tainted(iter_node):
+            self.findings.append(
+                Finding(
+                    NAME,
+                    "unordered-merge",
+                    self.rel,
+                    getattr(iter_node, "lineno", 0),
+                    "iteration over worker replies "
+                    f"({ast.unparse(iter_node)}) without sorted(...) — "
+                    "merge order must be a fixed function of worker "
+                    "index / node id, never arrival or insertion order",
+                )
+            )
+
+
+def _hostile_names(fn_node: ast.AST, aliases: Dict[str, str]) -> Set[str]:
+    """Names bound (directly or via ``with ... as``) to a fork-hostile
+    constructor call inside this function."""
+    out: Set[str] = set()
+
+    def hostile_call(call: ast.Call) -> bool:
+        resolved, known = resolve(aliases, call.func)
+        if resolved is None:
+            return False
+        if resolved in HOSTILE_CALLS:
+            return True
+        return any(resolved.startswith(p) for p in HOSTILE_PREFIXES)
+
+    for sub in ast.walk(fn_node):
+        if isinstance(sub, ast.Assign) and isinstance(sub.value, ast.Call):
+            if hostile_call(sub.value):
+                for tgt in sub.targets:
+                    if isinstance(tgt, ast.Name):
+                        out.add(tgt.id)
+        elif isinstance(sub, ast.withitem):
+            if (
+                isinstance(sub.context_expr, ast.Call)
+                and hostile_call(sub.context_expr)
+                and isinstance(sub.optional_vars, ast.Name)
+            ):
+                out.add(sub.optional_vars.id)
+    return out
+
+
+def _check_captures(
+    ir: ModuleIR, rel: str, plan_classes: Set[str], findings: List[Finding]
+) -> None:
+    aliases = ir.aliases.map
+    for info in ir.functions.values():
+        hostile = _hostile_names(info.node, aliases)
+
+        def is_hostile(expr: ast.AST) -> bool:
+            for sub in ast.walk(expr):
+                if isinstance(sub, ast.Name) and sub.id in hostile:
+                    return True
+                if isinstance(sub, ast.Call):
+                    resolved, _ = resolve(aliases, sub.func)
+                    if resolved and (
+                        resolved in HOSTILE_CALLS
+                        or any(
+                            resolved.startswith(p)
+                            for p in HOSTILE_PREFIXES
+                        )
+                    ):
+                        return True
+            return False
+
+        for sub in ast.walk(info.node):
+            if not isinstance(sub, ast.Call):
+                continue
+            d = dotted(sub.func)
+            tail = d.rsplit(".", 1)[-1] if d else ""
+            is_plan_ctor = (
+                isinstance(sub.func, ast.Name)
+                and sub.func.id in plan_classes
+            )
+            is_process = tail == "Process"
+            if not (is_plan_ctor or is_process):
+                continue
+            what = (
+                f"{sub.func.id}(...)" if is_plan_ctor else "Process(...)"
+            )
+            exprs = list(sub.args) + [
+                kw.value for kw in sub.keywords if kw.arg != "target"
+            ]
+            for e in exprs:
+                if is_hostile(e):
+                    findings.append(
+                        Finding(
+                            NAME,
+                            "fork-hostile-capture",
+                            rel,
+                            getattr(e, "lineno", 0),
+                            f"fork-hostile value ({ast.unparse(e)}) "
+                            f"shipped across the fork boundary in {what} "
+                            "— open files, locks and jax arrays do not "
+                            "survive fork()",
+                        )
+                    )
+
+
+def _worker_seeds(
+    ir: ModuleIR,
+    info,
+    plan_classes: Set[str],
+    plan_attrs: Dict[str, Set[str]],
+    extra_params: Set[str],
+) -> Set[str]:
+    seeds: Set[str] = set(extra_params)
+    for a in info.params:
+        if ir._annotation_class(a.annotation) in plan_classes:
+            seeds.add(a.arg)
+    if info.cls and info.cls in plan_attrs:
+        for attr in plan_attrs[info.cls]:
+            seeds.add(f"self.{attr}")
+    return seeds
+
+
+def run(root: Path) -> List[Finding]:
+    path = root / MODULE
+    if not path.is_file():
+        return []
+    rel = MODULE
+    try:
+        tree = ast.parse(path.read_text())
+    except SyntaxError as e:
+        return [Finding(NAME, "syntax-error", rel, e.lineno or 0, str(e))]
+    ir = ModuleIR(tree)
+    plan_classes = _plan_classes(ir)
+    findings: List[Finding] = []
+
+    # -- worker-side mutation pass ----------------------------------------
+    if plan_classes:
+        plan_attrs = _plan_attrs(ir, plan_classes)
+        roots = sorted(ir.process_targets())
+        cone = sorted(ir.reachable(roots))
+        # interprocedural seed propagation: tainted call arguments seed
+        # the callee's parameters; iterate to a (small) fixpoint
+        extra: Dict[str, Set[str]] = {q: set() for q in cone}
+        for _ in range(len(cone) + 1):
+            changed = False
+            for q in cone:
+                info = ir.functions[q]
+                seeds = _worker_seeds(
+                    ir, info, plan_classes, plan_attrs, extra[q]
+                )
+                w = _MutationWalker(rel, seeds, [])
+                for stmt in info.node.body:
+                    w.visit(stmt)
+                inst = ir.local_instance_types(info.node)
+                for call, arg_taint in w.call_arg_taint:
+                    callee = ir.resolve_call(call, info, inst)
+                    if callee is None or callee not in extra:
+                        continue
+                    params = ir.functions[callee].params
+                    offset = 1 if ir.functions[callee].cls else 0
+                    for i, t in enumerate(arg_taint):
+                        if not t:
+                            continue
+                        pi = i + offset
+                        if pi < len(params):
+                            name = params[pi].arg
+                            if name not in extra[callee]:
+                                extra[callee].add(name)
+                                changed = True
+            if not changed:
+                break
+        for q in cone:
+            info = ir.functions[q]
+            seeds = _worker_seeds(
+                ir, info, plan_classes, plan_attrs, extra[q]
+            )
+            w = _MutationWalker(rel, seeds, findings)
+            for stmt in info.node.body:
+                w.visit(stmt)
+
+    # -- parent-side merge-order pass --------------------------------------
+    for info in ir.functions.values():
+        w = _MergeWalker(rel, findings)
+        for stmt in info.node.body:
+            w.visit(stmt)
+
+    # -- fork-hostile capture pass ------------------------------------------
+    _check_captures(ir, rel, plan_classes, findings)
+
+    findings.sort(key=lambda f: (f.line, f.code))
+    return findings

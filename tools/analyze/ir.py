@@ -1,0 +1,499 @@
+"""Shared flow-analysis infrastructure for ``tools.analyze`` rules.
+
+PR 8's rules were single-file AST lints: each carried its own private
+import-alias resolution and pattern matching. This module factors that
+machinery out and adds the two pieces flow-aware rules need:
+
+``Aliases`` / ``resolve`` / ``dotted``
+    Import-alias tracking (previously private to ``determinism.py`` and
+    ``jaxpurity.py``): ``np.random.rand`` and
+    ``from numpy.random import rand`` resolve to the same canonical
+    dotted path, and the ``known`` flag distinguishes an imported
+    ``time`` module from a local variable of the same name.
+
+``ModuleIR``
+    A per-module function table (module functions and class methods,
+    qualified ``Class.method``) plus a call graph with enough resolution
+    for intra-module reachability: bare calls, ``self.m()`` /
+    ``cls.m()``, ``Class.m()``, constructor calls, and method calls on
+    locals whose constructor is visible in the same function
+    (``bank = _NodeBank(...)`` then ``bank.feed_segment(...)``).
+    ``reachable(roots)`` answers "everything transitively called from
+    these entry points" — the worker-side cone the ``forksafety`` rule
+    analyzes.
+
+``TaintWalker``
+    An intraprocedural forward def-use taint pass over one function
+    body. Taint lives on dotted *paths* (``plan``, ``self.plan``) and
+    propagates through assignment, tuple unpacking, subscripts/slices
+    (numpy views!), attribute reads, and arithmetic; plain calls launder
+    it (a call result is a fresh value) unless the subclass says
+    otherwise via :meth:`call_taint`. Subclasses observe stores and
+    loops via the ``on_*`` hooks to flag rule-specific violations.
+    Single forward pass, no fixpoint over loop bodies — lint-grade by
+    design (documented in docs/analysis.md).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+__all__ = [
+    "Aliases",
+    "ModuleIR",
+    "TaintWalker",
+    "dotted",
+    "resolve",
+]
+
+
+def dotted(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` attribute chain as a dotted string, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+class Aliases(ast.NodeVisitor):
+    """First pass: module / name aliases so ``np.random.rand`` and
+    ``from numpy.random import rand`` resolve to the same canonical
+    dotted path."""
+
+    def __init__(self) -> None:
+        self.map: Dict[str, str] = {}
+
+    def visit_Import(self, node: ast.Import) -> None:
+        for a in node.names:
+            self.map[a.asname or a.name.split(".")[0]] = (
+                a.name if a.asname else a.name.split(".")[0]
+            )
+
+    def visit_ImportFrom(self, node: ast.ImportFrom) -> None:
+        if node.level or not node.module:
+            return  # relative imports stay repo-internal
+        for a in node.names:
+            if a.name == "*":
+                continue
+            self.map[a.asname or a.name] = f"{node.module}.{a.name}"
+
+
+def resolve(aliases: Dict[str, str], node: ast.AST):
+    """(canonical dotted path, head-was-imported) for a call target.
+
+    The ``known`` flag guards stdlib matches: ``time.time()`` only
+    counts when ``time`` is actually an imported module in this file,
+    not a local variable that happens to share the name.
+    """
+    d = dotted(node)
+    if d is None:
+        return None, False
+    head, _, rest = d.partition(".")
+    known = head in aliases
+    head = aliases.get(head, head)
+    return (f"{head}.{rest}" if rest else head), known
+
+
+# ---------------------------------------------------------------------------
+# Module IR: function table + call graph
+# ---------------------------------------------------------------------------
+class FunctionInfo:
+    """One module function or class method."""
+
+    __slots__ = ("qualname", "node", "cls")
+
+    def __init__(
+        self, qualname: str, node: ast.AST, cls: Optional[str]
+    ) -> None:
+        self.qualname = qualname
+        self.node = node  # FunctionDef / AsyncFunctionDef
+        self.cls = cls    # owning class name, or None
+
+    @property
+    def params(self) -> List[ast.arg]:
+        a = self.node.args
+        return list(a.posonlyargs) + list(a.args)
+
+
+class ModuleIR:
+    """Call graph + function table for one parsed module.
+
+    Nested ``def``s are folded into their enclosing function: their
+    bodies count toward the parent's calls (conservative and correct
+    for reachability).
+    """
+
+    def __init__(self, tree: ast.Module) -> None:
+        self.tree = tree
+        self.aliases = Aliases()
+        self.aliases.visit(tree)
+        self.functions: Dict[str, FunctionInfo] = {}
+        self.classes: Dict[str, ast.ClassDef] = {}
+        self.edges: Dict[str, Set[str]] = {}
+        self._collect()
+        for info in self.functions.values():
+            self.edges[info.qualname] = self._calls_of(info)
+
+    # -- collection --------------------------------------------------------
+    def _collect(self) -> None:
+        for node in self.tree.body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self.functions[node.name] = FunctionInfo(
+                    node.name, node, None
+                )
+            elif isinstance(node, ast.ClassDef):
+                self.classes[node.name] = node
+                for sub in node.body:
+                    if isinstance(
+                        sub, (ast.FunctionDef, ast.AsyncFunctionDef)
+                    ):
+                        q = f"{node.name}.{sub.name}"
+                        self.functions[q] = FunctionInfo(q, sub, node.name)
+
+    def local_instance_types(self, fn: ast.AST) -> Dict[str, str]:
+        """Locals bound to a constructor call of a module class
+        (``bank = _NodeBank(...)`` -> ``{"bank": "_NodeBank"}``),
+        plus annotated parameters (``plan: _FeedPlan``)."""
+        out: Dict[str, str] = {}
+        args = getattr(fn, "args", None)
+        if args is not None:
+            for a in list(args.posonlyargs) + list(args.args) + list(
+                args.kwonlyargs
+            ):
+                cls = self._annotation_class(a.annotation)
+                if cls:
+                    out[a.arg] = cls
+        for sub in ast.walk(fn):
+            if not isinstance(sub, ast.Assign):
+                continue
+            if not (
+                isinstance(sub.value, ast.Call)
+                and isinstance(sub.value.func, ast.Name)
+                and sub.value.func.id in self.classes
+            ):
+                continue
+            for tgt in sub.targets:
+                if isinstance(tgt, ast.Name):
+                    out[tgt.id] = sub.value.func.id
+        return out
+
+    def _annotation_class(self, ann: Optional[ast.AST]) -> Optional[str]:
+        if ann is None:
+            return None
+        if isinstance(ann, ast.Name) and ann.id in self.classes:
+            return ann.id
+        if isinstance(ann, ast.Constant) and isinstance(ann.value, str):
+            name = ann.value.strip().rsplit(".", 1)[-1]
+            return name if name in self.classes else None
+        return None
+
+    def _calls_of(self, info: FunctionInfo) -> Set[str]:
+        out: Set[str] = set()
+        inst = self.local_instance_types(info.node)
+        for sub in ast.walk(info.node):
+            if not isinstance(sub, ast.Call):
+                continue
+            q = self.resolve_call(sub, info, inst)
+            if q is not None:
+                out.add(q)
+        return out
+
+    def resolve_call(
+        self,
+        call: ast.Call,
+        caller: FunctionInfo,
+        inst: Optional[Dict[str, str]] = None,
+    ) -> Optional[str]:
+        """Qualname of a call's intra-module target, or None."""
+        fn = call.func
+        if isinstance(fn, ast.Name):
+            if fn.id in self.classes:
+                ctor = f"{fn.id}.__init__"
+                return ctor if ctor in self.functions else None
+            if fn.id in self.functions:
+                return fn.id
+            return None
+        if isinstance(fn, ast.Attribute) and isinstance(fn.value, ast.Name):
+            base, meth = fn.value.id, fn.attr
+            if base in ("self", "cls") and caller.cls:
+                q = f"{caller.cls}.{meth}"
+                return q if q in self.functions else None
+            if base in self.classes:
+                q = f"{base}.{meth}"
+                return q if q in self.functions else None
+            if inst is None:
+                inst = self.local_instance_types(caller.node)
+            if base in inst:
+                q = f"{inst[base]}.{meth}"
+                return q if q in self.functions else None
+        return None
+
+    # -- queries -----------------------------------------------------------
+    def reachable(self, roots: Sequence[str]) -> Set[str]:
+        """Functions transitively callable from ``roots`` (inclusive)."""
+        seen: Set[str] = set()
+        stack = [r for r in roots if r in self.functions]
+        while stack:
+            q = stack.pop()
+            if q in seen:
+                continue
+            seen.add(q)
+            stack.extend(self.edges.get(q, ()) - seen)
+        return seen
+
+    def process_targets(self) -> Set[str]:
+        """Function names passed as ``target=`` to a ``*.Process(...)``
+        call anywhere in the module — the fork-boundary entry points."""
+        out: Set[str] = set()
+        for sub in ast.walk(self.tree):
+            if not isinstance(sub, ast.Call):
+                continue
+            d = dotted(sub.func)
+            if not d or d.rsplit(".", 1)[-1] != "Process":
+                continue
+            for kw in sub.keywords:
+                if kw.arg == "target" and isinstance(kw.value, ast.Name):
+                    out.add(kw.value.id)
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Intraprocedural taint walker
+# ---------------------------------------------------------------------------
+def taint_path(node: ast.AST) -> Optional[str]:
+    """Dotted path of a Name / attribute chain (``self.plan``), else
+    None — subscripts and calls break the chain."""
+    return dotted(node)
+
+
+class TaintWalker(ast.NodeVisitor):
+    """Forward def-use taint propagation over one function body.
+
+    ``seeds`` are dotted paths tainted on entry. Propagation rules:
+
+    * ``x = tainted`` taints ``x``; ``x = clean`` *un*taints it.
+    * Tuple/list unpacking spreads the RHS verdict to every target.
+    * Subscript / slice / attribute reads of a tainted value are
+      tainted (numpy slicing returns views into the same buffer).
+    * Arithmetic / boolean composition of a tainted operand is tainted.
+    * Calls launder by default (fresh return value); subclasses widen
+      that via :meth:`call_taint` (e.g. ``.items()`` on a tainted dict,
+      or ``conn.recv()`` as a fresh taint source).
+    * Comprehensions iterating ``sorted(...)`` produce *clean* values —
+      rebuilding a dict in sorted key order is exactly the canonical
+      merge idiom the cluster invariants require.
+
+    Subclasses hook :meth:`on_store` (attribute/subscript stores and
+    augmented assignment), :meth:`on_call` (every call, for in-place /
+    ``out=`` checks), and :meth:`on_iterate` (every ``for`` loop and
+    comprehension generator).
+    """
+
+    def __init__(self, seeds: Set[str]) -> None:
+        self.tainted: Set[str] = set(seeds)
+
+    # -- expression taint ----------------------------------------------------
+    def is_tainted(self, node: Optional[ast.AST]) -> bool:
+        if node is None:
+            return False
+        if isinstance(node, (ast.Name, ast.Attribute)):
+            p = taint_path(node)
+            if p is not None:
+                if p in self.tainted:
+                    return True
+                # a read of any attribute of a tainted object is tainted
+                head = p.split(".")[0]
+                prefix = head
+                for part in p.split(".")[1:]:
+                    if prefix in self.tainted:
+                        return True
+                    prefix = f"{prefix}.{part}"
+                return prefix in self.tainted
+            if isinstance(node, ast.Attribute):
+                return self.is_tainted(node.value)
+            return False
+        if isinstance(node, ast.Subscript):
+            return self.is_tainted(node.value)
+        if isinstance(node, ast.Call):
+            return self.call_taint(node)
+        if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+            return any(self.is_tainted(e) for e in node.elts)
+        if isinstance(node, ast.Dict):
+            return any(
+                self.is_tainted(v)
+                for v in list(node.keys) + list(node.values)
+                if v is not None
+            )
+        if isinstance(node, ast.BinOp):
+            return self.is_tainted(node.left) or self.is_tainted(node.right)
+        if isinstance(node, ast.UnaryOp):
+            return self.is_tainted(node.operand)
+        if isinstance(node, ast.BoolOp):
+            return any(self.is_tainted(v) for v in node.values)
+        if isinstance(node, ast.IfExp):
+            return self.is_tainted(node.body) or self.is_tainted(node.orelse)
+        if isinstance(node, ast.Compare):
+            return self.is_tainted(node.left) or any(
+                self.is_tainted(c) for c in node.comparators
+            )
+        if isinstance(node, ast.Starred):
+            return self.is_tainted(node.value)
+        if isinstance(
+            node, (ast.ListComp, ast.SetComp, ast.DictComp, ast.GeneratorExp)
+        ):
+            return self._comp_taint(node)
+        if isinstance(node, ast.NamedExpr):
+            return self.is_tainted(node.value)
+        return False
+
+    def _comp_taint(self, node: ast.AST) -> bool:
+        # sorted() iteration canonicalizes: the rebuilt container is
+        # clean even when element expressions read the tainted source
+        for gen in node.generators:
+            if _is_sorted_call(gen.iter):
+                return False
+        for gen in node.generators:
+            if self.is_tainted(gen.iter):
+                return True
+        return False
+
+    # -- overridable hooks ---------------------------------------------------
+    def call_taint(self, node: ast.Call) -> bool:
+        """Whether a call's return value is tainted. Default: calls
+        launder (fresh value)."""
+        return False
+
+    def on_store(
+        self, target: ast.AST, value: Optional[ast.AST], aug: bool
+    ) -> None:
+        """An attribute/subscript store, or any augmented assignment."""
+
+    def on_call(self, node: ast.Call) -> None:
+        """Every call expression, post-propagation."""
+
+    def on_iterate(self, iter_node: ast.AST, ctx: ast.AST) -> None:
+        """Every ``for`` loop / comprehension generator iterable."""
+
+    # -- binding -------------------------------------------------------------
+    def bind(self, target: ast.AST, tainted: bool) -> None:
+        if isinstance(target, ast.Name):
+            if tainted:
+                self.tainted.add(target.id)
+            else:
+                self.tainted.discard(target.id)
+                # rebinding a name kills taint on its attribute paths too
+                dead = {
+                    p for p in self.tainted
+                    if p.startswith(f"{target.id}.")
+                }
+                self.tainted -= dead
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for e in target.elts:
+                self.bind(e.value if isinstance(e, ast.Starred) else e,
+                          tainted)
+        elif isinstance(target, (ast.Attribute, ast.Subscript)):
+            self.on_store(target, None, aug=False)
+            p = taint_path(target)
+            if p is not None:
+                if tainted:
+                    self.tainted.add(p)
+                else:
+                    self.tainted.discard(p)
+
+    # -- statements ----------------------------------------------------------
+    def visit_Assign(self, node: ast.Assign) -> None:
+        self.generic_visit(node.value)
+        t = self.is_tainted(node.value)
+        for tgt in node.targets:
+            if isinstance(tgt, (ast.Attribute, ast.Subscript)):
+                self.on_store(tgt, node.value, aug=False)
+                self._visit_store_subexprs(tgt)
+                p = taint_path(tgt)
+                if p is not None:
+                    (self.tainted.add if t else self.tainted.discard)(p)
+            else:
+                self.bind(tgt, t)
+
+    def visit_AnnAssign(self, node: ast.AnnAssign) -> None:
+        if node.value is not None:
+            self.generic_visit(node.value)
+            t = self.is_tainted(node.value)
+            if isinstance(node.target, (ast.Attribute, ast.Subscript)):
+                self.on_store(node.target, node.value, aug=False)
+            else:
+                self.bind(node.target, t)
+
+    def visit_AugAssign(self, node: ast.AugAssign) -> None:
+        self.generic_visit(node.value)
+        self.on_store(node.target, node.value, aug=True)
+        self._visit_store_subexprs(node.target)
+
+    def visit_For(self, node: ast.For) -> None:
+        self.generic_visit(node.iter)
+        self.on_iterate(node.iter, node)
+        t = self.is_tainted(node.iter) and not _is_sorted_call(node.iter)
+        self.bind(node.target, t)
+        for stmt in node.body + node.orelse:
+            self.visit(stmt)
+
+    def visit_With(self, node: ast.With) -> None:
+        for item in node.items:
+            self.generic_visit(item.context_expr)
+            if item.optional_vars is not None:
+                self.bind(
+                    item.optional_vars, self.is_tainted(item.context_expr)
+                )
+        for stmt in node.body:
+            self.visit(stmt)
+
+    def visit_Call(self, node: ast.Call) -> None:
+        self.generic_visit(node)
+        self.on_call(node)
+
+    def visit_Delete(self, node: ast.Delete) -> None:
+        for tgt in node.targets:
+            if isinstance(tgt, (ast.Attribute, ast.Subscript)):
+                self.on_store(tgt, None, aug=False)
+
+    def visit_FunctionDef(self, node) -> None:  # nested defs: walk bodies
+        for stmt in node.body:
+            self.visit(stmt)
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def _visit_store_subexprs(self, target: ast.AST) -> None:
+        # subscript indices / attribute bases still contain loads
+        # (calls, comprehensions) the hooks should see
+        if isinstance(target, ast.Subscript):
+            self.generic_visit(target.slice)
+            self.generic_visit(target.value)
+        elif isinstance(target, ast.Attribute):
+            self.generic_visit(target.value)
+
+    def generic_visit(self, node: ast.AST) -> None:
+        # comprehension generators count as iteration sites
+        if isinstance(
+            node, (ast.ListComp, ast.SetComp, ast.DictComp, ast.GeneratorExp)
+        ):
+            for gen in node.generators:
+                self.on_iterate(gen.iter, node)
+        super().generic_visit(node)
+
+
+def _is_sorted_call(node: ast.AST) -> bool:
+    """``sorted(...)`` (optionally through ``enumerate``/``reversed``/
+    ``list``/``tuple`` wrappers) — iteration order is defined."""
+    if not (isinstance(node, ast.Call) and isinstance(node.func, ast.Name)):
+        return False
+    if node.func.id == "sorted":
+        return True
+    if node.func.id in ("enumerate", "reversed", "list", "tuple") and (
+        node.args and _is_sorted_call(node.args[0])
+    ):
+        return True
+    return node.func.id == "range"

@@ -47,12 +47,21 @@ from pathlib import Path
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 from .findings import Finding
+from .ir import dotted as _ir_dotted
 
 NAME = "jaxpurity"
 DESCRIPTION = (
     "tracer-leaking patterns (.item(), float()/int(), np.* on traced "
     "values, Python branches on tracers) in fastsim_jax.py and kernels/"
 )
+
+CODES = {
+    "item-call": ".item() on a traced value inside a traced scope",
+    "python-coercion": "float()/int()/bool()/complex() on a traced value",
+    "numpy-on-tracer": "np.* call consuming a traced value",
+    "tracer-branch": "Python control flow on a traced value",
+    "syntax-error": "file failed to parse",
+}
 
 SCOPE = (
     "src/repro/core/fastsim_jax.py",
@@ -67,14 +76,7 @@ LAX_CALLEE_TAILS = ("while_loop", "fori_loop", "scan", "cond", "switch")
 
 
 def _dotted(node: ast.AST) -> Optional[str]:
-    parts: List[str] = []
-    while isinstance(node, ast.Attribute):
-        parts.append(node.attr)
-        node = node.value
-    if isinstance(node, ast.Name):
-        parts.append(node.id)
-        return ".".join(reversed(parts))
-    return None
+    return _ir_dotted(node)  # shared with every rule via tools.analyze.ir
 
 
 def _call_tail(node: ast.Call) -> str:

@@ -54,6 +54,17 @@ DESCRIPTION = (
     "dtypes, counter names)"
 )
 
+CODES = {
+    "hist-buckets": "HIST_BUCKETS / HIST_LEN constant mismatch",
+    "nil-sentinel": "NIL sentinel mismatch between backends",
+    "sc-enum": "SC_* scalar-block enum mismatch",
+    "c-signature": "C entry-point signature vs ctypes argtypes mismatch",
+    "state-dtype": "numpy buffer dtype vs C pointer type mismatch",
+    "counter-surface": "finish()/counters() key surface mismatch",
+    "jax-state-keys": "XLA kernel touches a key missing from _init_state",
+    "missing-file": "backend source file not found",
+}
+
 CORE = "src/repro/core"
 PY_REF = f"{CORE}/fastsim.py"
 C_SRC = f"{CORE}/_fastsim_c.c"

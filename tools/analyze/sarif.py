@@ -1,0 +1,107 @@
+"""SARIF 2.1.0 emitter for the analyzer.
+
+One ``run`` with one ``tool.driver``; every (rule, code) pair from the
+rule modules' ``CODES`` registries becomes a ``reportingDescriptor``
+with the stable id ``"<rule>/<code>"``, so CI annotations keep their
+identity across runs even when line numbers move. Unwaived findings
+are ``level: error``; waived ones are emitted at ``level: note`` with
+an ``external`` suppression carrying the waiver reason — they stay
+visible in the SARIF view without failing the upload's gate.
+
+Emitted shape (the subset GitHub's ``upload-sarif`` consumes):
+
+    version, $schema
+    runs[0].tool.driver.{name, informationUri, rules[]}
+    runs[0].results[].{ruleId, level, message.text, locations[],
+                       suppressions[]?}
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Dict, List, Sequence
+
+from .findings import Finding
+
+SARIF_VERSION = "2.1.0"
+SARIF_SCHEMA = (
+    "https://raw.githubusercontent.com/oasis-tcs/sarif-spec/master/"
+    "Schemata/sarif-schema-2.1.0.json"
+)
+TOOL_NAME = "repro-analyze"
+TOOL_URI = "https://github.com/paper-repro/repro/blob/main/docs/analysis.md"
+
+
+def rule_descriptors(rules: Dict[str, object]) -> List[dict]:
+    """One reportingDescriptor per (rule, code), sorted for stability."""
+    out: List[dict] = []
+    for rule_name in sorted(rules):
+        mod = rules[rule_name]
+        codes = getattr(mod, "CODES", {})
+        desc = getattr(mod, "DESCRIPTION", "")
+        for code in sorted(codes):
+            out.append(
+                {
+                    "id": f"{rule_name}/{code}",
+                    "name": f"{rule_name}/{code}",
+                    "shortDescription": {"text": codes[code]},
+                    "fullDescription": {"text": desc},
+                    "defaultConfiguration": {"level": "error"},
+                }
+            )
+    return out
+
+
+def _result(finding: Finding) -> dict:
+    res = {
+        "ruleId": f"{finding.rule}/{finding.code}",
+        "level": "note" if finding.waived else "error",
+        "message": {"text": finding.message},
+        "locations": [
+            {
+                "physicalLocation": {
+                    "artifactLocation": {
+                        "uri": finding.path,
+                        "uriBaseId": "SRCROOT",
+                    },
+                    "region": {"startLine": max(finding.line, 1)},
+                }
+            }
+        ],
+    }
+    if finding.waived:
+        res["suppressions"] = [
+            {
+                "kind": "external",
+                "justification": finding.waiver_reason or "waived",
+            }
+        ]
+    return res
+
+
+def to_sarif(
+    findings: Sequence[Finding], rules: Dict[str, object]
+) -> dict:
+    return {
+        "version": SARIF_VERSION,
+        "$schema": SARIF_SCHEMA,
+        "runs": [
+            {
+                "tool": {
+                    "driver": {
+                        "name": TOOL_NAME,
+                        "informationUri": TOOL_URI,
+                        "rules": rule_descriptors(rules),
+                    }
+                },
+                "originalUriBaseIds": {"SRCROOT": {"uri": "file:///"}},
+                "results": [_result(f) for f in findings],
+            }
+        ],
+    }
+
+
+def dump_sarif(
+    findings: Sequence[Finding], rules: Dict[str, object]
+) -> str:
+    return json.dumps(to_sarif(findings, rules), indent=2) + "\n"

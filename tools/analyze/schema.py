@@ -48,6 +48,14 @@ DESCRIPTION = (
     "must round-trip through their to_dict/from_dict pair"
 )
 
+CODES = {
+    "missing-serializer": "dataclass has no to_dict/from_dict pair",
+    "missing-from": "dataclass has to_dict but no from_dict",
+    "field-not-serialized": "declared field absent from to_dict",
+    "field-not-deserialized": "declared field absent from from_dict",
+    "syntax-error": "file failed to parse",
+}
+
 SCOPE_GLOBS = (
     "src/repro/scenario/*.py",
     "src/repro/core/cluster.py",
